@@ -1,0 +1,69 @@
+"""Render the dry-run roofline table (markdown) from benchmarks/out/dryrun/.
+
+    PYTHONPATH=src:. python -m benchmarks.report [--mesh single|multi|both]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def rows_for(mesh_tag: str):
+    out = []
+    for f in sorted(glob.glob(os.path.join("benchmarks/out/dryrun", f"*.{mesh_tag}.json"))):
+        r = json.load(open(f))
+        if r["status"] == "SKIP":
+            out.append((r["arch"], r["shape"], "SKIP", r.get("reason", "")))
+            continue
+        if r["status"] != "OK":
+            out.append((r["arch"], r["shape"], "FAIL", r.get("error", "")[:60]))
+            continue
+        rl = r["roofline"]
+        frac = rl.get("floor_fraction", rl["roofline_fraction"])
+        out.append((
+            r["arch"], r["shape"], "OK",
+            dict(
+                t_c=rl["t_compute_s"], t_m=rl["t_memory_s"], t_x=rl["t_collective_s"],
+                bneck=rl["bottleneck"], frac=frac, useful=rl["useful_flops_ratio"],
+                compile_s=r["compile_s"],
+                temp_gb=r["memory"].get("temp_size_in_bytes", 0) / 1e9,
+                args_gb=r["memory"].get("argument_size_in_bytes", 0) / 1e9,
+            ),
+        ))
+    return out
+
+
+def render(mesh_tag: str) -> str:
+    lines = [
+        f"### Mesh: {'16x16 (256 chips)' if mesh_tag == 'single' else '2x16x16 (512 chips)'}",
+        "",
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | bottleneck |"
+        " roofline frac | useful FLOPs | HBM args+temp (GB/dev) | compile (s) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, status, d in rows_for(mesh_tag):
+        if status == "SKIP":
+            lines.append(f"| {arch} | {shape} | - | - | - | SKIP ({d}) | - | - | - | - |")
+        elif status == "FAIL":
+            lines.append(f"| {arch} | {shape} | - | - | - | FAIL: {d} | - | - | - | - |")
+        else:
+            lines.append(
+                f"| {arch} | {shape} | {d['t_c']:.3f} | {d['t_m']:.3f} | {d['t_x']:.3f} "
+                f"| {d['bneck']} | {d['frac']:.3f} | {d['useful']:.2f} "
+                f"| {d['args_gb']:.1f}+{d['temp_gb']:.1f} | {d['compile_s']:.0f} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    tags = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for t in tags:
+        print(render(t))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,339 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes detailed JSON under
+benchmarks/out/.  Datasets are the synthetic scientific fields from
+repro.data.scidata (SDRBench is offline-unavailable; DESIGN.md section 8.3).
+
+  table3_compression_ratio   -- Table III: min/overall/max CR per app x REL
+                                for szx / zfp-lite / sz-lite / zlib
+  table4_compression_speed   -- Table IV: compression MB/s per app
+  table5_decompression_speed -- Table V: decompression MB/s per app
+  fig2_block_range_cdf       -- Fig 2: CDF of block relative value range
+  fig6_shift_overhead        -- Fig 6: Solution-C byte-alignment overhead
+  fig8_block_size            -- Fig 8: CR + PSNR vs block size
+  fig10_quality              -- Fig 10: PSNR/SSIM at REL 1e-2..1e-4
+  fig13_dump_load            -- Fig 13: compress+write / read+decompress wall
+                                time vs raw I/O
+  beyond_planes_codec        -- szx-planes (in-graph) throughput + wire bytes
+                                for gradient/KV compression
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import baselines as B
+from repro.core import metrics, szx
+from repro.data import scidata
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+RELS = (1e-2, 1e-3, 1e-4)
+CODECS = {
+    "szx": (
+        lambda x, e: szx.compress(x, e, backend="numpy"),
+        lambda b: szx.decompress(b, backend="numpy"),
+    ),
+    "zfp-lite": (B.zfp_lite_compress, B.zfp_lite_decompress),
+    "sz-lite": (B.sz_lite_compress, B.sz_lite_decompress),
+}
+
+_rows: list[str] = []
+
+
+def _emit(name: str, us: float, derived: str):
+    row = f"{name},{us:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def _apps():
+    for app in scidata.APPLICATIONS:
+        yield app, list(scidata.fields(app))
+
+
+def table3_compression_ratio() -> dict:
+    out: dict = {}
+    for app, flds in _apps():
+        for rel in RELS:
+            for cname, (comp, _) in CODECS.items():
+                t0 = time.time()
+                crs = []
+                for _, x in flds:
+                    e = rel * float(x.max() - x.min())
+                    crs.append(x.nbytes / len(comp(x, e)))
+                hmean = len(crs) / sum(1.0 / c for c in crs)
+                out[f"{app}|{rel:g}|{cname}"] = dict(
+                    min=min(crs), overall=hmean, max=max(crs)
+                )
+                _emit(
+                    f"table3/{app}/{rel:g}/{cname}",
+                    (time.time() - t0) * 1e6,
+                    f"CR_min={min(crs):.2f};CR={hmean:.2f};CR_max={max(crs):.2f}",
+                )
+            # lossless reference once per app
+        crs = [x.nbytes / len(B.zlib_compress(x)) for _, x in flds]
+        out[f"{app}|zlib"] = dict(overall=len(crs) / sum(1 / c for c in crs))
+        _emit(f"table3/{app}/zlib", 0.0, f"CR={out[f'{app}|zlib']['overall']:.2f}")
+    return out
+
+
+def _throughput(direction: str) -> dict:
+    out: dict = {}
+    for app, flds in _apps():
+        data = [x for _, x in flds]
+        total_bytes = sum(x.nbytes for x in data)
+        for cname, (comp, dec) in CODECS.items():
+            rel = 1e-3
+            bufs = []
+            t0 = time.time()
+            for x in data:
+                e = rel * float(x.max() - x.min())
+                bufs.append(comp(x, e))
+            t_comp = time.time() - t0
+            t0 = time.time()
+            for b in bufs:
+                dec(b)
+            t_dec = time.time() - t0
+            t = t_comp if direction == "comp" else t_dec
+            mbs = total_bytes / 1e6 / max(t, 1e-9)
+            out[f"{app}|{cname}"] = mbs
+            _emit(f"table{'4' if direction=='comp' else '5'}/{app}/{cname}",
+                  t * 1e6, f"MB/s={mbs:.0f}")
+    return out
+
+
+def table4_compression_speed() -> dict:
+    return _throughput("comp")
+
+
+def table5_decompression_speed() -> dict:
+    return _throughput("dec")
+
+
+def fig2_block_range_cdf() -> dict:
+    out = {}
+    for app, flds in _apps():
+        cdf = np.mean([scidata.block_relative_range_cdf(x) for _, x in flds], axis=0)
+        # fraction of size-8 blocks with relative range <= 0.01 (paper quotes
+        # 80%+ for Miranda/QMCPack)
+        t = np.logspace(-6, 0, 25)
+        frac_001 = float(np.interp(0.01, t, cdf))
+        out[app] = dict(cdf=cdf.tolist(), frac_le_001=frac_001)
+        _emit(f"fig2/{app}", 0.0, f"frac_blocks_relrange<=0.01={frac_001:.2f}")
+    return out
+
+
+def fig6_shift_overhead() -> dict:
+    """Solution C (byte-aligned, shift s) vs Solution B (bit-granular)."""
+    from repro.kernels import ops
+
+    out = {}
+    for app in ("Miranda", "NYX"):
+        for rel in RELS:
+            tot_c = tot_b = comp_bytes = 0
+            for _, x in scidata.fields(app):
+                e = rel * float(x.max() - x.min())
+                xb, n = szx._to_blocks(x, 128)
+                mu, rad, const, reqlen, shift, nbytes = [
+                    np.asarray(a) for a in ops.block_stats(xb, e, backend="numpy")
+                ]
+                planes, L, mid = [
+                    np.asarray(a) for a in ops.pack(xb, mu, shift, nbytes, backend="numpy")
+                ]
+                nc = ~const
+                # Solution C: whole bytes, L' leading bytes elided
+                bits_c = int(mid[nc].sum()) * 8
+                # Solution B: reqlen bits minus leading bytes of the
+                # UNSHIFTED word (bit-granular storage, Formula 6)
+                _, L0, _ = [
+                    np.asarray(a)
+                    for a in ops.pack(xb, mu, np.zeros_like(shift), nbytes, backend="numpy")
+                ]
+                bits_b = int((reqlen[nc][:, None] - 8 * L0[nc]).clip(min=0).sum())
+                tot_c += bits_c
+                tot_b += bits_b
+                comp_bytes += len(szx.compress(x, e, backend="numpy"))
+            ovh = (tot_c - tot_b) / 8.0 / comp_bytes
+            out[f"{app}|{rel:g}"] = ovh
+            _emit(f"fig6/{app}/{rel:g}", 0.0, f"overhead={ovh*100:.2f}%")
+    return out
+
+
+def fig8_block_size() -> dict:
+    out = {}
+    flds = list(scidata.fields("Miranda"))
+    for rel in (1e-3, 1e-4):
+        for bs in (8, 16, 32, 64, 128, 256):
+            crs, psnrs = [], []
+            for _, x in flds:
+                e = rel * float(x.max() - x.min())
+                buf = szx.compress(x, e, block_size=bs, backend="numpy")
+                y = szx.decompress(buf, backend="numpy").reshape(-1)
+                crs.append(x.nbytes / len(buf))
+                psnrs.append(metrics.psnr(x, y))
+            hm = len(crs) / sum(1 / c for c in crs)
+            out[f"{rel:g}|{bs}"] = dict(cr=hm, psnr=float(np.mean(psnrs)))
+            _emit(f"fig8/bs={bs}/{rel:g}", 0.0,
+                  f"CR={hm:.2f};PSNR={np.mean(psnrs):.1f}")
+    return out
+
+
+def fig10_quality() -> dict:
+    out = {}
+    name, x = next(iter(scidata.fields("Hurricane")))
+    for rel in RELS:
+        e = rel * float(x.max() - x.min())
+        y = szx.decompress(szx.compress(x, e, backend="numpy")).reshape(x.shape)
+        out[f"{rel:g}"] = dict(
+            psnr=metrics.psnr(x, y), ssim=metrics.ssim(x, y),
+            maxerr_over_e=float(np.abs(x - y).max() / e),
+        )
+        _emit(f"fig10/{rel:g}", 0.0,
+              f"PSNR={out[f'{rel:g}']['psnr']:.1f};SSIM={out[f'{rel:g}']['ssim']:.4f}")
+    return out
+
+
+def fig13_dump_load(tmpdir: str = "/tmp/repro_io") -> dict:
+    os.makedirs(tmpdir, exist_ok=True)
+    data = [x for _, x in scidata.fields("NYX")]
+    total = sum(x.nbytes for x in data)
+    out = {}
+    for rel in (1e-2, 1e-3):
+        # dump: compress + write vs raw write
+        t0 = time.time()
+        paths = []
+        for i, x in enumerate(data):
+            e = rel * float(x.max() - x.min())
+            buf = szx.compress(x, e, backend="numpy")
+            p = os.path.join(tmpdir, f"c{i}.szx")
+            with open(p, "wb") as f:
+                f.write(buf)
+            paths.append(p)
+        os.sync()
+        t_comp_dump = time.time() - t0
+        t0 = time.time()
+        for i, x in enumerate(data):
+            with open(os.path.join(tmpdir, f"r{i}.raw"), "wb") as f:
+                f.write(x.tobytes())
+        os.sync()
+        t_raw_dump = time.time() - t0
+        # load: read + decompress vs raw read
+        t0 = time.time()
+        for p in paths:
+            with open(p, "rb") as f:
+                szx.decompress(f.read(), backend="numpy")
+        t_comp_load = time.time() - t0
+        t0 = time.time()
+        for i in range(len(data)):
+            with open(os.path.join(tmpdir, f"r{i}.raw"), "rb") as f:
+                np.frombuffer(f.read(), np.float32)
+        t_raw_load = time.time() - t0
+        comp_total = sum(os.path.getsize(p) for p in paths)
+        # Modeled contended-PFS regime (the paper's Fig 13 runs 64-1024 MPI
+        # ranks against one parallel FS; per-rank effective bandwidth is
+        # ~100-250 MB/s).  This container's tmpfs is faster than its single
+        # 20 MB/s core, inverting the paper's regime, so we report both the
+        # raw local measurement and the modeled-PFS speedup with measured
+        # compression times and ratios.
+        cr = total / comp_total
+        t_cpu_dump = t_comp_dump            # measured compress+write time
+        t_cpu_load = t_comp_load
+        modeled = {}
+        # 25 MB/s == 1024 ranks contending a ~25 GB/s PFS (paper Fig 13 scale)
+        for bw in (25e6, 100e6, 250e6):
+            dump = (total / bw) / (t_cpu_dump + comp_total / bw)
+            load = (total / bw) / (t_cpu_load + comp_total / bw)
+            modeled[f"{bw/1e6:.0f}MBps"] = dict(dump=dump, load=load)
+        out[f"{rel:g}"] = dict(
+            dump_speedup_local=t_raw_dump / t_comp_dump,
+            load_speedup_local=t_raw_load / t_comp_load,
+            cr=cr,
+            modeled=modeled,
+            mb=total / 1e6,
+        )
+        m250 = modeled["250MBps"]
+        _emit(f"fig13/{rel:g}", t_comp_dump * 1e6,
+              f"local_dump={t_raw_dump/t_comp_dump:.2f};"
+              f"pfs250_dump={m250['dump']:.2f};pfs250_load={m250['load']:.2f};CR={cr:.1f}")
+    return out
+
+
+def beyond_planes_codec() -> dict:
+    """szx-planes in-graph codec: throughput + wire bytes (grad/KV use)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import planes as cp
+
+    out = {}
+    x = np.cumsum(
+        np.random.default_rng(0).standard_normal(1 << 22), 0
+    ).astype(np.float32)
+    xj = jnp.asarray(x)
+    for p in (1, 2):
+        enc_fn = jax.jit(lambda v, p=p: cp.encode(v, num_planes=p))
+        # n/block_size are static fields; close over them so jit only traces
+        # the array leaves
+        dec_fn = jax.jit(
+            lambda mu, sexp, planes: cp.decode(
+                cp.PlanesEncoded(mu, sexp, planes, x.size, cp.DEFAULT_BLOCK_SIZE),
+                shape=x.shape,
+            )
+        )
+        dec_call = lambda e: dec_fn(e.mu, e.sexp, e.planes)  # noqa: E731
+        enc = enc_fn(xj)
+        jax.block_until_ready(enc.planes)
+        t0 = time.time()
+        for _ in range(5):
+            enc = enc_fn(xj)
+            jax.block_until_ready(enc.planes)
+        t_enc = (time.time() - t0) / 5
+        y = dec_call(enc)
+        jax.block_until_ready(y)
+        t0 = time.time()
+        for _ in range(5):
+            jax.block_until_ready(dec_call(enc))
+        t_dec = (time.time() - t0) / 5
+        wire = cp.wire_bytes(enc)
+        err = float(jnp.abs(xj - dec_call(enc)).max())
+        out[f"P{p}"] = dict(
+            enc_mbs=x.nbytes / 1e6 / t_enc,
+            dec_mbs=x.nbytes / 1e6 / t_dec,
+            wire_ratio=x.nbytes / wire,
+            max_err=err,
+        )
+        _emit(f"beyond/planes/P{p}", t_enc * 1e6,
+              f"enc_MB/s={x.nbytes/1e6/t_enc:.0f};dec_MB/s={x.nbytes/1e6/t_dec:.0f};"
+              f"wire_ratio={x.nbytes/wire:.2f}")
+    return out
+
+
+ALL = [
+    table3_compression_ratio,
+    table4_compression_speed,
+    table5_decompression_speed,
+    fig2_block_range_cdf,
+    fig6_shift_overhead,
+    fig8_block_size,
+    fig10_quality,
+    fig13_dump_load,
+    beyond_planes_codec,
+]
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    results = {}
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        results[fn.__name__] = fn()
+    with open(os.path.join(OUT, "benchmarks.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# wrote {os.path.join(OUT, 'benchmarks.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: SZx error-bounded compression of a scientific field.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import metrics, szx
+from repro.data import scidata
+
+
+def main():
+    name, x = next(iter(scidata.fields("Miranda")))
+    print(f"field {name}: shape={x.shape} ({x.nbytes/1e6:.1f} MB)")
+
+    for rel in (1e-2, 1e-3, 1e-4):
+        t0 = time.time()
+        buf, stats = szx.compress_with_stats(x, rel, mode="rel", backend="numpy")
+        t_c = time.time() - t0
+        t0 = time.time()
+        y = szx.decompress(buf, backend="numpy").reshape(x.shape)
+        t_d = time.time() - t0
+        err = np.abs(x - y).max()
+        print(
+            f"REL={rel:g}: CR={stats.ratio:6.2f}  "
+            f"comp={x.nbytes/1e6/t_c:5.0f} MB/s  decomp={x.nbytes/1e6/t_d:5.0f} MB/s  "
+            f"PSNR={metrics.psnr(x, y):5.1f} dB  max|err|/e={err/stats.error_bound:.3f}"
+        )
+        assert err <= stats.error_bound, "error bound violated!"
+    print("error bound strictly respected at every setting")
+
+
+if __name__ == "__main__":
+    main()

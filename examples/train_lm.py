@@ -1,0 +1,80 @@
+"""End-to-end training driver: ~100M-param llama-family model, a few hundred
+steps on CPU, with SZx-compressed checkpointing and fault-tolerant restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --d-model 512
+
+The model is the llama3.2-1b config family scaled to ~100M params; data is
+the deterministic synthetic pipeline; checkpoints go to /tmp and the loop
+demonstrates restart-from-checkpoint by re-invoking run().
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import AdamW, warmup_cosine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    base = configs.get("llama3.2-1b")
+    cfg = dataclasses.replace(
+        base,
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=args.d_model // 8,
+        d_ff=args.d_model * 4,
+        vocab_size=8192,
+        compute_dtype="float32",
+        remat=False,
+    )
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    opt = AdamW(lr=warmup_cosine(3e-4, 20, args.steps))
+    params = T.init_params(cfg, jax.random.key(0))
+    state = {"params": params, "opt": opt.init(params)}
+
+    @jax.jit
+    def step_fn(state, batch):
+        loss, grads = jax.value_and_grad(lambda p: T.loss_fn(p, cfg, batch))(
+            state["params"]
+        )
+        p, o, m = opt.update(grads, state["opt"], state["params"])
+        return {"params": p, "opt": o}, {"loss": loss, **m}
+
+    ds = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    batch_fn = lambda step: {  # noqa: E731
+        k: jnp.asarray(v) for k, v in ds.batch_at(step).items()
+    }
+
+    ckpt = CheckpointManager(args.ckpt, keep=2, compress=True, error_bound=1e-6)
+    tr = Trainer(
+        TrainerConfig(total_steps=args.steps, checkpoint_every=50, log_every=20),
+        step_fn, batch_fn, ckpt,
+    )
+    state = tr.run(state)
+    first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
+    print(f"loss: {first:.3f} -> {last:.3f} over {len(tr.history)} steps "
+          f"({tr.restarts} restarts, {len(tr.straggler_steps)} straggler steps)")
+    print(f"checkpoint stats: {ckpt.stats()}")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

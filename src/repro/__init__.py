@@ -1,0 +1,4 @@
+"""repro: SZx (ultra-fast error-bounded lossy compression) as a first-class
+feature of a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing with optional SZx compression."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,2 @@
+"""Assigned-architecture configs (public literature) + the registry."""
+from repro.configs.base import ARCH_NAMES, ArchConfig, SHAPES, all_configs, get, input_specs  # noqa: F401

@@ -1,0 +1,11 @@
+"""repro.core -- the paper's contribution: SZx ultra-fast error-bounded lossy
+compression, as a composable JAX substrate (faithful codec + in-graph planes
+codec + gradient/KV-cache integrations)."""
+
+from repro.core import metrics, planes, szx  # noqa: F401
+from repro.core.szx import (  # noqa: F401
+    compress,
+    compress_with_stats,
+    decompress,
+    roundtrip_max_error,
+)

@@ -1,0 +1,45 @@
+"""Reconstruction-quality metrics used throughout the paper (Section III)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def psnr(orig, recon) -> float:
+    """Peak signal-to-noise ratio, Formula (7) of the paper."""
+    orig = np.asarray(orig, np.float64).reshape(-1)
+    recon = np.asarray(recon, np.float64).reshape(-1)
+    rng = orig.max() - orig.min()
+    mse = float(np.mean((orig - recon) ** 2))
+    if mse == 0:
+        return float("inf")
+    return 20.0 * np.log10(rng / np.sqrt(mse))
+
+
+def ssim(orig, recon, *, window: int = 7) -> float:
+    """Mean 1-D windowed SSIM (flattened); sufficient for regression checks."""
+    x = np.asarray(orig, np.float64).reshape(-1)
+    y = np.asarray(recon, np.float64).reshape(-1)
+    rng = x.max() - x.min()
+    if rng == 0:
+        return 1.0
+    c1, c2 = (0.01 * rng) ** 2, (0.03 * rng) ** 2
+    n = (x.size // window) * window
+    xw = x[:n].reshape(-1, window)
+    yw = y[:n].reshape(-1, window)
+    mx, my = xw.mean(1), yw.mean(1)
+    vx, vy = xw.var(1), yw.var(1)
+    cov = ((xw - mx[:, None]) * (yw - my[:, None])).mean(1)
+    s = ((2 * mx * my + c1) * (2 * cov + c2)) / (
+        (mx**2 + my**2 + c1) * (vx + vy + c2)
+    )
+    return float(s.mean())
+
+
+def max_abs_error(orig, recon) -> float:
+    return float(
+        np.max(np.abs(np.asarray(orig, np.float64) - np.asarray(recon, np.float64)))
+    )
+
+
+def compression_ratio(raw_bytes: int, compressed_bytes: int) -> float:
+    return raw_bytes / max(compressed_bytes, 1)

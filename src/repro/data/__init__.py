@@ -1,0 +1,3 @@
+"""Data substrate: synthetic pipelines + SZx-compressed in-memory cache +
+synthetic scientific fields for the compressor benchmarks."""
+from repro.data.pipeline import CompressedInMemoryCache, DataConfig, Prefetcher, SyntheticLM  # noqa: F401

@@ -1,0 +1,134 @@
+"""Deterministic synthetic token pipeline with a compressed in-memory cache.
+
+The paper's quantum-circuit-simulation use case (Section I) keeps working
+data SZx-compressed in RAM and decompresses on demand; the pipeline mirrors
+that: shards of the token stream are stored compressed (here: token-embedding
+noise fields for modality stubs; token ids stay raw int32) and each batch is
+materialized on the fly.
+
+Sharding contract: every DP rank calls ``batches(rank, num_ranks)`` and gets
+a disjoint, deterministic, restart-reproducible stream (seeded by (seed,
+step, rank)), so restoring a checkpoint at step N resumes the exact stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core import szx
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    frames: int = 0            # enc-dec stub frames per example
+    frame_dim: int = 0
+    prefix_embeds: int = 0     # VLM stub patches per example
+    prefix_dim: int = 0
+
+
+class SyntheticLM:
+    """Markov-ish synthetic token stream: deterministic, seekable, sharded."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int, rank: int = 0, num_ranks: int = 1) -> dict:
+        cfg = self.cfg
+        assert cfg.global_batch % num_ranks == 0
+        b = cfg.global_batch // num_ranks
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, rank])
+        )
+        # zipf-ish marginal over the vocab with local repetition structure
+        base = rng.zipf(1.3, size=(b, cfg.seq_len)).astype(np.int64)
+        toks = (base % (cfg.vocab_size - 2)) + 1
+        rep = rng.random((b, cfg.seq_len)) < 0.3
+        toks[:, 1:] = np.where(rep[:, 1:], toks[:, :-1], toks[:, 1:])
+        tokens = toks.astype(np.int32)
+        labels = np.concatenate(
+            [tokens[:, 1:], np.full((b, 1), -1, np.int32)], axis=1
+        )
+        out = {"tokens": tokens, "labels": labels}
+        if cfg.frames:
+            out["frames"] = rng.standard_normal(
+                (b, cfg.frames, cfg.frame_dim), dtype=np.float32
+            )
+        if cfg.prefix_embeds:
+            out["image_embeds"] = rng.standard_normal(
+                (b, cfg.prefix_embeds, cfg.prefix_dim), dtype=np.float32
+            )
+        return out
+
+    def batches(self, rank: int = 0, num_ranks: int = 1, start_step: int = 0
+                ) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step, rank, num_ranks)
+            step += 1
+
+
+class CompressedInMemoryCache:
+    """SZx-compressed RAM cache of float shards (the QC-simulation pattern).
+
+    put() compresses; get() decompresses on demand.  Error bound is absolute
+    and strict, so consumers can rely on |x - x'| <= e."""
+
+    def __init__(self, error_bound: float = 1e-4, mode: str = "abs"):
+        self.error_bound = error_bound
+        self.mode = mode
+        self._store: dict = {}
+        self._raw_bytes = 0
+        self._stored_bytes = 0
+
+    def put(self, key, arr: np.ndarray) -> None:
+        arr = np.asarray(arr, np.float32)
+        buf = szx.compress(arr, self.error_bound, mode=self.mode)
+        self._store[key] = (buf, arr.shape)
+        self._raw_bytes += arr.nbytes
+        self._stored_bytes += len(buf)
+
+    def get(self, key) -> np.ndarray:
+        buf, shape = self._store[key]
+        return szx.decompress(buf).reshape(shape)
+
+    @property
+    def compression_ratio(self) -> float:
+        return self._raw_bytes / max(self._stored_bytes, 1)
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+class Prefetcher:
+    """Background-thread prefetch of a batch iterator (host-side overlap)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the SZx hot loops + pure-jnp oracles.
+
+Modules:
+  ref.py         -- pure-jnp oracles (ground truth)
+  block_stats.py -- per-block min/max/mu/radius/reqlen (Alg. 1 lines 3-7)
+  pack.py        -- normalize + Solution-C shift + XOR-lead + byte planes
+  unpack.py      -- decompression with log-time index propagation (Fig. 9)
+  ops.py         -- jit'd wrappers + backend dispatch
+"""

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: per-block SZx statistics (paper Alg. 1 lines 3-7).
+
+Tiling: TILE_BLOCKS=8 SZx blocks per grid step so a tile is an (8, 128) f32
+VPU-shaped array in VMEM (sublane x lane).  All math is add/sub/shift/compare
+(the paper's "super-lightweight" constraint); min/max are VPU lane reductions
+(the TPU analogue of the paper's warp-level reductions).
+
+Validated against ``ref.block_stats_ref`` in interpret mode (CPU container);
+on a real TPU the same ``pl.pallas_call`` compiles natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCKS = 8
+
+
+def _kernel(e_ref, x_ref, mu_ref, rad_ref, const_ref, reqlen_ref, shift_ref, nbytes_ref):
+    x = x_ref[...]                      # (TB, bs) f32
+    e = e_ref[0]
+    mn = jnp.min(x, axis=1)
+    mx = jnp.max(x, axis=1)
+    mu = 0.5 * (mn + mx)
+    r = jnp.maximum(mx - mu, mu - mn)
+    const = r <= e
+    rexp = (
+        (jax.lax.bitcast_convert_type(r, jnp.uint32) >> 23) & jnp.uint32(0xFF)
+    ).astype(jnp.int32) - 127
+    eexp = (
+        (jax.lax.bitcast_convert_type(e, jnp.uint32) >> 23) & jnp.uint32(0xFF)
+    ).astype(jnp.int32) - 127
+    req_m_raw = rexp - eexp + 1
+    req_m = jnp.clip(req_m_raw, 0, 23)
+    mu = jnp.where(req_m_raw > 23, jnp.float32(0), mu)  # verbatim blocks
+    reqlen = 9 + req_m
+    shift = (8 - reqlen % 8) % 8
+    nbytes = (reqlen + shift) // 8
+    zero = jnp.zeros_like(reqlen)
+    mu_ref[...] = mu
+    rad_ref[...] = r
+    const_ref[...] = const.astype(jnp.int32)
+    reqlen_ref[...] = jnp.where(const, zero, reqlen)
+    shift_ref[...] = jnp.where(const, zero, shift)
+    nbytes_ref[...] = jnp.where(const, zero, nbytes)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_stats(xb: jax.Array, e: jax.Array, *, interpret: bool | None = None):
+    """xb: (nb, bs) f32, e: scalar f32 -> same tuple as ref.block_stats_ref."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, bs = xb.shape
+    pad = (-nb) % TILE_BLOCKS
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    grid = (nbp // TILE_BLOCKS,)
+    vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((nbp,), jnp.float32),   # mu
+        jax.ShapeDtypeStruct((nbp,), jnp.float32),   # radius
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # const flag
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # reqlen
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # shift
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # nbytes
+    )
+    mu, rad, const, reqlen, shift, nbytes = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                  # e (broadcast)
+            pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0)),   # x tile in VMEM
+        ],
+        out_specs=(vec,) * 6,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(jnp.reshape(e.astype(jnp.float32), (1,)), xb)
+    sl = slice(0, nb)
+    return mu[sl], rad[sl], const[sl].astype(bool), reqlen[sl], shift[sl], nbytes[sl]

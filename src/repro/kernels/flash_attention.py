@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: fused flash-attention forward (GQA, causal/windowed).
+
+This is the fused kernel the roofline cost model assumes for the attention
+tile loops (hlo_cost 'vmem_tile'): per (batch*kv-head, q-block) grid cell the
+kernel streams K/V blocks through VMEM, keeps the online-softmax accumulators
+in VMEM, and only q/k/v/out ever touch HBM.
+
+Grid: (B*Hkv, nq).  Block shapes: q (1, G, CQ, hd), k/v (1, CK_total... the
+kv stream is delivered block-by-block via the third grid dim so BlockSpec
+tiling stays explicit:
+  grid = (B*Hkv, nq, nk); accumulators live in VMEM scratch across the nk
+  steps (sequential innermost dim), flushed to the output on the last step.
+
+Validated in interpret mode against ``models.layers.flash_attention`` /
+the naive oracle (tests/test_flash_kernel.py); compiles natively on TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, cq, ck, nk,
+            causal, window, sq, skv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                        # (G, CQ, hd)
+    k = k_ref[0]                        # (CK, hd)
+    v = v_ref[0]
+    g, _, hd = q.shape
+    s = jax.lax.dot_general(
+        q.reshape(g * cq, hd), k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(g, cq, ck) * (1.0 / math.sqrt(hd))
+
+    qpos = qi * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    kpos = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    valid = (kpos < skv) & (qpos < sq)
+    if causal:
+        valid &= kpos <= qpos
+    if window:
+        valid &= qpos - kpos < window
+    s = jnp.where(valid[None], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    pv = jax.lax.dot_general(
+        p.reshape(g * cq, ck), v.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(g, cq, hd)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_block", "kv_block", "interpret")
+)
+def flash_attention_fwd(
+    q, k, v, *, causal=True, window=0, q_block=128, kv_block=128,
+    interpret: bool | None = None,
+):
+    """q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    cq, ck = min(q_block, sq), min(kv_block, skv)
+    pq, pk = (-sq) % cq, (-skv) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (sq + pq) // cq, (skv + pk) // ck
+
+    # layout: (B*Hkv, G, S, hd) so one grid cell owns one kv-head's group
+    qg = q.reshape(b, sq + pq, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b * hkv, g, sq + pq, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv + pk, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv + pk, hd)
+
+    kern = functools.partial(
+        _kernel, cq=cq, ck=ck, nk=nk, causal=causal, window=window,
+        sq=sq, skv=skv,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(b * hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, cq, hd), lambda h, i, j: (h, 0, i, 0)),
+            pl.BlockSpec((1, ck, hd), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, ck, hd), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, cq, hd), lambda h, i, j: (h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, sq + pq, hd), q.dtype),
+        # VMEM accumulators persist across the sequential innermost (nk) dim
+        scratch_shapes=[
+            pltpu.VMEM((g, cq), jnp.float32),
+            pltpu.VMEM((g, cq), jnp.float32),
+            pltpu.VMEM((g, cq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    out = out.reshape(b, hkv, g, sq + pq, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, sq + pq, hq, hd)[:, :sq]

@@ -1,0 +1,183 @@
+"""jit'd wrappers + backend dispatch for the SZx kernels.
+
+Backends:
+  'jax'    -- jnp oracle from ``ref.py`` under ``jax.jit`` (CPU default)
+  'kernel' -- Pallas TPU kernels (``interpret=True`` automatically off-TPU)
+  'numpy'  -- pure-numpy mirror (no jit/dispatch overhead; host-side use)
+  'auto'   -- 'kernel' on TPU, 'jax' elsewhere
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "jax"
+    return backend
+
+
+# --------------------------------------------------------------------------
+# jit'd oracle paths
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def _block_stats_jax(xb, e):
+    return ref.block_stats_ref(xb, e)
+
+
+@jax.jit
+def _pack_jax(xb, mu, shift, nbytes):
+    return ref.pack_ref(xb, mu, shift, nbytes)
+
+
+@jax.jit
+def _unpack_jax(planes, mu, shift, nbytes, L):
+    return ref.unpack_ref(planes, mu, shift, nbytes, L)
+
+
+# --------------------------------------------------------------------------
+# numpy mirrors (bit-identical to ref.py)
+# --------------------------------------------------------------------------
+
+def _np_exponent(x):
+    bits = np.asarray(x, np.float32).view(np.uint32)
+    return ((bits >> 23) & 0xFF).astype(np.int32) - 127
+
+
+def _block_stats_np(xb, e):
+    xb = np.asarray(xb, np.float32)
+    mn = xb.min(axis=1)
+    mx = xb.max(axis=1)
+    mu = np.float32(0.5) * (mn + mx)
+    radius = np.maximum(mx - mu, mu - mn)
+    const = radius <= np.float32(e)
+    req_m_raw = _np_exponent(radius) - _np_exponent(np.float32(e)) + 1
+    req_m = np.clip(req_m_raw, 0, 23)
+    mu = np.where(req_m_raw > 23, np.float32(0), mu)  # verbatim blocks
+    reqlen = 9 + req_m
+    shift = (8 - reqlen % 8) % 8
+    nbytes = (reqlen + shift) // 8
+    z = np.zeros_like(reqlen)
+    return (
+        mu,
+        radius,
+        const,
+        np.where(const, z, reqlen),
+        np.where(const, z, shift),
+        np.where(const, z, nbytes),
+    )
+
+
+def _pack_np(xb, mu, shift, nbytes):
+    xb = np.asarray(xb, np.float32)
+    v = xb - mu[:, None]
+    w = v.view(np.uint32)
+    ws = w >> shift[:, None].astype(np.uint32)
+    prev = np.concatenate([np.zeros((ws.shape[0], 1), np.uint32), ws[:, :-1]], axis=1)
+    xw = ws ^ prev
+    b0 = (xw >> 24) == 0
+    b1 = xw >> 16 == 0
+    b2 = xw >> 8 == 0
+    L = np.minimum(
+        b0.astype(np.int32) + (b0 & b1) + (b0 & b1 & b2), nbytes[:, None]
+    )
+    # little-endian byte view: plane j (MSB-first) is byte 3-j -- no shifts
+    nb, bs = ws.shape
+    planes = np.ascontiguousarray(
+        ws.view(np.uint8).reshape(nb, bs, 4)[:, :, ::-1].transpose(0, 2, 1)
+    )
+    mid = nbytes[:, None] - L
+    return planes, L, mid
+
+
+def _unpack_np(planes, mu, shift, nbytes, L):
+    nb, _, bs = planes.shape
+    idxs = np.broadcast_to(np.arange(bs, dtype=np.int32)[None, :], (nb, bs))
+    ws = np.zeros((nb, bs), np.uint32)
+    for j in range(4):
+        stored = (L <= j) & (j < nbytes[:, None])
+        src = np.where(stored, idxs, -1)
+        src = np.maximum.accumulate(src, axis=1)
+        byte = np.take_along_axis(
+            planes[:, j, :].astype(np.uint32), np.maximum(src, 0), axis=1
+        )
+        byte = np.where(src >= 0, byte, np.uint32(0))
+        ws = ws | (byte << np.uint32(24 - 8 * j))
+    w = ws << shift[:, None].astype(np.uint32)
+    v = w.view(np.float32)
+    x = v + mu[:, None]
+    return np.where((nbytes == 0)[:, None], mu[:, None], x)
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+def block_stats(xb, e, *, backend: str = "auto"):
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _block_stats_np(xb, e)
+    if backend == "kernel":
+        from repro.kernels import block_stats as k
+
+        return k.block_stats(jnp.asarray(xb, jnp.float32), jnp.float32(e))
+    return _block_stats_jax(jnp.asarray(xb, jnp.float32), jnp.float32(e))
+
+
+def pack(xb, mu, shift, nbytes, *, backend: str = "auto"):
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _pack_np(
+            np.asarray(xb), np.asarray(mu), np.asarray(shift), np.asarray(nbytes)
+        )
+    if backend == "kernel":
+        from repro.kernels import pack as k
+
+        return k.pack(
+            jnp.asarray(xb, jnp.float32),
+            jnp.asarray(mu, jnp.float32),
+            jnp.asarray(shift, jnp.int32),
+            jnp.asarray(nbytes, jnp.int32),
+        )
+    return _pack_jax(
+        jnp.asarray(xb, jnp.float32),
+        jnp.asarray(mu, jnp.float32),
+        jnp.asarray(shift, jnp.int32),
+        jnp.asarray(nbytes, jnp.int32),
+    )
+
+
+def unpack(planes, mu, shift, nbytes, L, *, backend: str = "auto"):
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _unpack_np(
+            np.asarray(planes),
+            np.asarray(mu),
+            np.asarray(shift),
+            np.asarray(nbytes),
+            np.asarray(L),
+        )
+    if backend == "kernel":
+        from repro.kernels import unpack as k
+
+        return k.unpack(
+            jnp.asarray(planes, jnp.uint8),
+            jnp.asarray(mu, jnp.float32),
+            jnp.asarray(shift, jnp.int32),
+            jnp.asarray(nbytes, jnp.int32),
+            jnp.asarray(L, jnp.int32),
+        )
+    return _unpack_jax(
+        jnp.asarray(planes, jnp.uint8),
+        jnp.asarray(mu, jnp.float32),
+        jnp.asarray(shift, jnp.int32),
+        jnp.asarray(nbytes, jnp.int32),
+        jnp.asarray(L, jnp.int32),
+    )

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: SZx normalize + Solution-C shift + XOR-lead + byte planes.
+
+One grid step processes TILE_BLOCKS=8 SZx blocks -> an (8, 128) tile.  The
+XOR-with-predecessor is a lane shift (pad+slice), the paper's per-value
+leading-byte count becomes three vectorized compares, and the byte planes are
+lane-aligned slices (Solution C is *structural* here: byte alignment is what
+makes the plane layout legal).  Output planes stay fixed-shape; compaction is
+host-side (see repro.core.szx).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCKS = 8
+
+
+def _kernel(x_ref, mu_ref, shift_ref, nbytes_ref, planes_ref, L_ref, mid_ref):
+    x = x_ref[...]                                   # (TB, bs) f32
+    mu = mu_ref[...]
+    shift = shift_ref[...]
+    nbytes = nbytes_ref[...]
+    v = x - mu[:, None]
+    w = jax.lax.bitcast_convert_type(v, jnp.uint32)
+    ws = w >> shift[:, None].astype(jnp.uint32)
+    prev = jnp.pad(ws, ((0, 0), (1, 0)))[:, :-1]     # lane shift by 1
+    xw = ws ^ prev
+    b0 = ((xw >> 24) == 0).astype(jnp.int32)
+    b1 = ((xw >> 16) == 0).astype(jnp.int32)
+    b2 = ((xw >> 8) == 0).astype(jnp.int32)
+    L = jnp.minimum(b0 + b0 * b1 + b0 * b1 * b2, nbytes[:, None])
+    for j in range(4):
+        planes_ref[:, j, :] = ((ws >> (24 - 8 * j)) & jnp.uint32(0xFF)).astype(
+            jnp.uint8
+        )
+    L_ref[...] = L
+    mid_ref[...] = nbytes[:, None] - L
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack(xb, mu, shift, nbytes, *, interpret: bool | None = None):
+    """Same contract as ref.pack_ref."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, bs = xb.shape
+    pad = (-nb) % TILE_BLOCKS
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+        mu = jnp.pad(mu, (0, pad))
+        shift = jnp.pad(shift, (0, pad))
+        nbytes = jnp.pad(nbytes, (0, pad))
+    nbp = nb + pad
+    grid = (nbp // TILE_BLOCKS,)
+    vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
+    tile = pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0))
+    planes, L, mid = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[tile, vec, vec, vec],
+        out_specs=(
+            pl.BlockSpec((TILE_BLOCKS, 4, bs), lambda i: (i, 0, 0)),
+            tile,
+            tile,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nbp, 4, bs), jnp.uint8),
+            jax.ShapeDtypeStruct((nbp, bs), jnp.int32),
+            jax.ShapeDtypeStruct((nbp, bs), jnp.int32),
+        ),
+        interpret=interpret,
+    )(xb, mu, shift, nbytes)
+    return planes[:nb], L[:nb], mid[:nb]

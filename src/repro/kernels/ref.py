@@ -1,0 +1,177 @@
+"""Pure-jnp oracles for the SZx block-compression kernels.
+
+These functions are the ground-truth semantics for the Pallas kernels in
+``block_stats.py`` / ``pack.py`` / ``unpack.py``.  Everything here is fixed-shape
+(the variable-length byte compaction happens at the host/serialization boundary
+in ``repro.core.szx``), which is what makes the algorithm expressible on TPU.
+
+Notation follows the paper (Algorithm 1 / Formulas 4-5):
+  mu      -- mean of min and max of a block ("mean of min/max", mu_k)
+  radius  -- variation radius r_k = max(|max-mu|, |mu-min|)
+  reqlen  -- required number of leading IEEE-754 bits: 1 sign + 8 exponent +
+             R_k mantissa bits, R_k = clip(p(r_k) - p(e) + 1, 0, 23).
+             (+1 is a guard bit so the mu-subtraction rounding keeps the bound
+             strict; see DESIGN.md section 2.)
+  shift   -- Solution-C right shift s = (8 - reqlen % 8) % 8 (Formula 5)
+  nbytes  -- bytes kept per value = (reqlen + shift) / 8, in {2,3,4}; 0 marks a
+             constant block.
+  L       -- identical-leading-byte count vs. the predecessor (2-bit code),
+             predecessor of the first value in a block is the zero word (blocks
+             are independently decodable, as in the GPU design).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32_EXP_BIAS = 127
+
+
+def f32_exponent(x):
+    """Biased-removed binary exponent field of float32 |x|.
+
+    floor(log2|x|) for normal values; -127 for zero/subnormals (conservative).
+    """
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    return ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - F32_EXP_BIAS
+
+
+def block_stats_ref(xb: jax.Array, e) -> tuple:
+    """Per-block statistics (paper Alg. 1 lines 3-7).
+
+    xb: (nb, bs) float32.  e: scalar absolute error bound (> 0).
+    Returns (mu, radius, const, reqlen, shift, nbytes) each (nb,)-shaped;
+    reqlen/shift/nbytes are 0 for constant blocks.
+    """
+    xb = jnp.asarray(xb, jnp.float32)
+    mn = jnp.min(xb, axis=-1)
+    mx = jnp.max(xb, axis=-1)
+    mu = 0.5 * (mn + mx)
+    radius = jnp.maximum(mx - mu, mu - mn)
+    const = radius <= e
+    req_m_raw = f32_exponent(radius) - f32_exponent(jnp.float32(e)) + 1
+    req_m = jnp.clip(req_m_raw, 0, 23)
+    # Verbatim blocks (beyond-paper robustness): if the bound is below the
+    # ulp of the normalized values (req_m_raw > 23), the mu-subtraction
+    # rounding alone can break the bound, so store the block bit-exactly by
+    # normalizing against mu = 0.  Real SZx silently violates the bound here.
+    mu = jnp.where(req_m_raw > 23, jnp.float32(0), mu)
+    reqlen = 9 + req_m                      # 1 sign + 8 exponent + R_k mantissa
+    shift = (8 - reqlen % 8) % 8            # Formula (5), Solution C
+    nbytes = (reqlen + shift) // 8          # in {2, 3, 4}
+    zero = jnp.zeros_like(reqlen)
+    return (
+        mu,
+        radius,
+        const,
+        jnp.where(const, zero, reqlen),
+        jnp.where(const, zero, shift),
+        jnp.where(const, zero, nbytes),
+    )
+
+
+def pack_ref(xb: jax.Array, mu: jax.Array, shift: jax.Array, nbytes: jax.Array):
+    """Normalize, right-shift (Solution C), XOR-lead, and byte-plane split.
+
+    xb: (nb, bs) f32; mu/shift/nbytes: (nb,).
+    Returns:
+      planes: (nb, 4, bs) uint8 -- byte j of the shifted word (0 = most
+              significant).  Fixed shape; the serializer keeps only bytes with
+              L <= j < nbytes.
+      L:      (nb, bs) int32 -- identical leading bytes vs. predecessor,
+              clipped to [0, min(3, nbytes)].
+      mid:    (nb, bs) int32 -- mid-bytes to store per value (nbytes - L).
+    """
+    xb = jnp.asarray(xb, jnp.float32)
+    v = xb - mu[:, None]
+    w = jax.lax.bitcast_convert_type(v, jnp.uint32)
+    ws = w >> shift[:, None].astype(jnp.uint32)
+    prev = jnp.concatenate(
+        [jnp.zeros((ws.shape[0], 1), jnp.uint32), ws[:, :-1]], axis=1
+    )
+    xw = ws ^ prev
+    b0 = ((xw >> 24) == 0).astype(jnp.int32)
+    b1 = ((xw >> 16) == 0).astype(jnp.int32)
+    b2 = ((xw >> 8) == 0).astype(jnp.int32)
+    L = b0 + b0 * b1 + b0 * b1 * b2                    # leading zero bytes, <= 3
+    L = jnp.minimum(L, nbytes[:, None])
+    planes = jnp.stack(
+        [((ws >> (24 - 8 * j)) & jnp.uint32(0xFF)).astype(jnp.uint8) for j in range(4)],
+        axis=1,
+    )
+    mid = nbytes[:, None] - L
+    return planes, L, mid
+
+
+def unpack_ref(planes, mu, shift, nbytes, L):
+    """Inverse of pack_ref.
+
+    Reconstructs each byte either from the stored plane entry or, for the L
+    leading bytes, from the most recent predecessor that stored that plane --
+    the paper's GPU "index propagation" realized as a cumulative max
+    (associative scan) along the block.
+    Returns (nb, bs) float32 reconstruction (mu for constant blocks).
+    """
+    nb, _, bs = planes.shape
+    idxs = jnp.broadcast_to(jnp.arange(bs, dtype=jnp.int32)[None, :], (nb, bs))
+    ws = jnp.zeros((nb, bs), jnp.uint32)
+    for j in range(4):
+        stored = (L <= j) & (j < nbytes[:, None])
+        src = jnp.where(stored, idxs, -1)
+        src = jax.lax.cummax(src, axis=1)              # index propagation
+        byte = jnp.take_along_axis(
+            planes[:, j, :].astype(jnp.uint32), jnp.maximum(src, 0), axis=1
+        )
+        byte = jnp.where(src >= 0, byte, jnp.uint32(0))
+        ws = ws | (byte << (24 - 8 * j))
+    w = ws << shift[:, None].astype(jnp.uint32)
+    v = jax.lax.bitcast_convert_type(w, jnp.float32)
+    x = v + mu[:, None]
+    return jnp.where((nbytes == 0)[:, None], mu[:, None], x)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-plane ("szx-planes") in-graph mode -- see DESIGN.md section 2.
+# ---------------------------------------------------------------------------
+
+def planes_encode_ref(xb, num_planes: int):
+    """Error-bounded-by-construction block quantization to `num_planes` bytes.
+
+    xb: (nb, bs) f32.  Returns (mu (nb,) f32, sexp (nb,) int32, planes
+    (num_planes, nb, bs) uint8).  q = rint(v * 2^sexp) with sexp chosen from the
+    block radius exponent so |q| < 2^(8P-1); reconstruction error is
+    <= 2^(E+1-8P) where E = p(radius).
+    """
+    assert 1 <= num_planes <= 3, "szx-planes supports 1..3 byte planes"
+    xb = jnp.asarray(xb, jnp.float32)
+    mn = jnp.min(xb, axis=-1)
+    mx = jnp.max(xb, axis=-1)
+    mu = 0.5 * (mn + mx)
+    radius = jnp.maximum(mx - mu, mu - mn)
+    E = f32_exponent(radius)
+    nbits = 8 * num_planes
+    sexp = (nbits - 2) - E
+    v = xb - mu[..., None]
+    scale = jnp.exp2(sexp.astype(jnp.float32))[..., None]
+    lim = jnp.float32(2.0 ** (nbits - 1))
+    q = jnp.clip(jnp.round(v * scale), -lim, lim - 1).astype(jnp.int32)
+    uq = q.astype(jnp.uint32)
+    planes = jnp.stack(
+        [((uq >> (8 * p)) & jnp.uint32(0xFF)).astype(jnp.uint8) for p in range(num_planes)],
+        axis=0,
+    )
+    return mu, sexp, planes
+
+
+def planes_decode_ref(mu, sexp, planes):
+    """Inverse of planes_encode_ref -> (..., bs) f32.  num_planes must be <= 3."""
+    num_planes = planes.shape[0]
+    assert num_planes <= 3, "szx-planes supports 1..3 byte planes"
+    nbits = 8 * num_planes
+    uq = jnp.zeros(planes.shape[1:], jnp.int32)
+    for p in range(num_planes):
+        uq = uq | (planes[p].astype(jnp.int32) << (8 * p))
+    # sign-extend a width-`nbits` two's-complement integer (fits in int32)
+    q = jnp.where(uq >= (1 << (nbits - 1)), uq - (1 << nbits), uq).astype(jnp.float32)
+    v = q * jnp.exp2(-sexp.astype(jnp.float32))[..., None]
+    return v + mu[..., None]

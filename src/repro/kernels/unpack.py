@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: SZx decompression (leading-byte retrieval + reassembly).
+
+The paper's GPU "index propagation" (Fig. 9: O(log n) interleaved-addressing
+max propagation) maps 1:1 onto a log2(bs) sequence of lane shifts + maxima.
+To avoid an in-kernel gather we propagate a fused key ``idx*256 + byte`` --
+idx dominates the max, so the surviving key carries the byte of the nearest
+preceding stored position; ``key & 0xFF`` recovers it.  This is the TPU
+analogue of the paper's warp-shuffle propagation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCKS = 8
+
+
+def _kernel(planes_ref, mu_ref, shift_ref, nbytes_ref, L_ref, out_ref):
+    planes = planes_ref[...]                        # (TB, 4, bs) uint8
+    mu = mu_ref[...]
+    shift = shift_ref[...]
+    nbytes = nbytes_ref[...]
+    L = L_ref[...]
+    tb, _, bs = planes.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (tb, bs), 1)
+    ws = jnp.zeros((tb, bs), jnp.uint32)
+    for j in range(4):
+        stored = (L <= j) & (j < nbytes[:, None])
+        byte = planes[:, j, :].astype(jnp.int32)
+        key = jnp.where(stored, idx * 256 + byte, -1)
+        step = 1
+        while step < bs:                             # interleaved propagation
+            shifted = jnp.pad(key, ((0, 0), (step, 0)), constant_values=-1)[:, :bs]
+            key = jnp.maximum(key, shifted)
+            step *= 2
+        b = jnp.where(key >= 0, (key & 0xFF).astype(jnp.uint32), jnp.uint32(0))
+        ws = ws | (b << (24 - 8 * j))
+    w = ws << shift[:, None].astype(jnp.uint32)
+    v = jax.lax.bitcast_convert_type(w, jnp.float32)
+    out_ref[...] = jnp.where((nbytes == 0)[:, None], mu[:, None], v + mu[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack(planes, mu, shift, nbytes, L, *, interpret: bool | None = None):
+    """Same contract as ref.unpack_ref -> (nb, bs) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, _, bs = planes.shape
+    pad = (-nb) % TILE_BLOCKS
+    if pad:
+        planes = jnp.pad(planes, ((0, pad), (0, 0), (0, 0)))
+        mu = jnp.pad(mu, (0, pad))
+        shift = jnp.pad(shift, (0, pad))
+        nbytes = jnp.pad(nbytes, (0, pad))
+        L = jnp.pad(L, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    grid = (nbp // TILE_BLOCKS,)
+    vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
+    tile = pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_BLOCKS, 4, bs), lambda i: (i, 0, 0)),
+            vec,
+            vec,
+            vec,
+            tile,
+        ],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((nbp, bs), jnp.float32),
+        interpret=interpret,
+    )(planes, mu, shift, nbytes, L)
+    return out[:nb]

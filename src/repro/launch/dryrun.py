@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run harness.
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles the
+real step function (train_step / prefill / decode_step) against
+ShapeDtypeStruct stand-ins on the production mesh, then records
+memory_analysis / cost_analysis / the collective schedule and the roofline
+terms.  No arrays are ever allocated at full size.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/out/dryrun
+  ... --multi-pod           (2,16,16) pod/data/model mesh
+  ... --kv-mode compressed  SZx-planes KV cache for decode cells
+  ... --grad-compress 1     SZx cross-pod gradient compression (multi-pod)
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, input_specs
+from repro.launch import mesh as mesh_lib
+from repro.models import sharding as shard_rules
+from repro.models import transformer as T
+from repro.optim import AdamW, warmup_cosine
+from repro.roofline import analysis as roofline
+from repro.serve import engine
+from repro.train import step as train_step_mod
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    kv_mode: str = "dense",
+    num_planes: int = 1,
+    grad_compress: int = 0,
+    remat: bool | None = None,
+    parallelism: str = "tp",        # "tp" (baseline) | "dp" (small models)
+    serve_layout: bool = False,     # H1: decode-oriented weight layout
+    serve_bf16: bool = False,       # H3: bf16 serving weights
+):
+    """Lower + compile one cell.  Returns (record dict, compiled)."""
+    cfg = configs.get(arch)
+    if remat is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if shape_name in cfg.shape_skips:
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "reason": cfg.shape_skips[shape_name]}, None
+
+    spec = SHAPES[shape_name]
+    kind = spec["kind"]
+    seq_len, global_batch = spec["seq_len"], spec["global_batch"]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    long_ctx = shape_name == "long_500k"
+    rules = dict(shard_rules.LONG_CONTEXT_RULES if long_ctx else shard_rules.DEFAULT_RULES)
+    if parallelism == "dp":
+        rules = dict(shard_rules.PURE_DP_RULES)
+    if serve_layout and cfg.n_experts:
+        rules.update(shard_rules.SERVE_MOE_RULES)
+    if grad_compress:
+        # inside the manual-'pod' shard_map region only auto axes may appear
+        rules["act_batch"] = ("data",)
+
+    def make_pspecs(tree):
+        if parallelism == "dp":
+            return mesh_lib.replicated_specs_tree(tree)
+        if serve_layout:
+            return mesh_lib.serve_param_specs_tree(cfg, tree, mesh)
+        return mesh_lib.param_specs_tree(cfg, tree, mesh)
+
+    def pspec_source():
+        specs = T.param_specs(cfg)
+        if serve_bf16:
+            specs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+                ),
+                specs,
+            )
+        return specs
+
+    t0 = time.time()
+    with shard_rules.use_rules(mesh, rules):
+        if kind == "train":
+            opt = AdamW(lr=warmup_cosine(3e-4, 2000, 100000))
+            state_shapes = jax.eval_shape(
+                functools.partial(
+                    train_step_mod.init_state, cfg, opt, jax.random.key(0),
+                    ef_planes=grad_compress,
+                )
+            )
+            sspecs = train_step_mod.state_specs(cfg, state_shapes, mesh)
+            if parallelism == "dp":
+                sspecs = {
+                    "params": mesh_lib.replicated_specs_tree(state_shapes["params"]),
+                    "opt": type(state_shapes["opt"])(
+                        step=P(),
+                        m=mesh_lib.replicated_specs_tree(state_shapes["opt"].m),
+                        v=mesh_lib.replicated_specs_tree(state_shapes["opt"].v),
+                    ),
+                }
+            batch = input_specs(cfg, shape_name)
+            bspecs = mesh_lib.batch_specs_tree(cfg, mesh, batch)
+            fn = train_step_mod.make_train_step(
+                cfg, opt, mesh=mesh, compress_planes=grad_compress
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_shardings(mesh, sspecs), _shardings(mesh, bspecs)),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shapes, batch)
+            model_flops = roofline.train_model_flops(cfg, seq_len * global_batch)
+        elif kind == "prefill":
+            pspecs = make_pspecs(pspec_source())
+            batch = input_specs(cfg, shape_name)
+            bspecs = mesh_lib.batch_specs_tree(cfg, mesh, batch)
+
+            def fn(params, batch):
+                return engine.prefill(
+                    params, cfg, batch["tokens"],
+                    frames=batch.get("frames"),
+                    image_embeds=batch.get("image_embeds"),
+                    seq_len=seq_len, kv_mode=kv_mode, num_planes=num_planes,
+                )
+
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    _shardings(mesh, pspecs), _shardings(mesh, bspecs)),
+            )
+            lowered = jitted.lower(pspec_source(), batch)
+            # prefill = fwd only: 2ND over the prompt tokens
+            model_flops = 2.0 * cfg.active_param_count() * seq_len * global_batch
+        else:  # decode
+            pspecs = make_pspecs(pspec_source())
+            cache_shapes = engine.cache_specs(
+                cfg, global_batch, seq_len, kv_mode=kv_mode, num_planes=num_planes
+            )
+            cspecs = mesh_lib.cache_specs_tree(
+                cfg, mesh, cache_shapes, long_context=long_ctx
+            )
+            batch = input_specs(cfg, shape_name)
+            bspecs = mesh_lib.batch_specs_tree(
+                cfg, mesh, batch, long_context=long_ctx
+            )
+
+            def fn(params, cache, batch):
+                return engine.decode_step(
+                    params, cfg, cache, batch["token"],
+                    kv_mode=kv_mode, num_planes=num_planes,
+                )
+
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    _shardings(mesh, pspecs),
+                    _shardings(mesh, cspecs),
+                    _shardings(mesh, bspecs),
+                ),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(pspec_source(), cache_shapes, batch)
+            model_flops = roofline.decode_model_flops(cfg, global_batch)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rl = roofline.analyze(compiled, model_flops=model_flops, chips=chips)
+    extra = {}
+    if kind == "decode":
+        ideal = roofline.sharded_bytes_per_device(
+            pspec_source(), pspecs, mesh
+        ) + roofline.sharded_bytes_per_device(cache_shapes, cspecs, mesh)
+        extra["ideal_bytes_per_device"] = ideal
+        extra["floor_fraction"] = roofline.decode_floor_fraction(ideal, rl)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "kv_mode": kv_mode if kind == "decode" else None,
+        "grad_compress": grad_compress,
+        "status": "OK",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": roofline.memory_analysis_dict(compiled),
+        "roofline": {**rl.to_dict(), **extra},
+    }
+    return rec, compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-mode", default="dense", choices=["dense", "compressed"])
+    ap.add_argument("--num-planes", type=int, default=1)
+    ap.add_argument("--grad-compress", type=int, default=0)
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON")
+    args = ap.parse_args()
+
+    cells = []
+    archs = configs.ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    results = []
+    for a, s, mp in cells:
+        tag = f"{a}|{s}|{'multi' if mp else 'single'}"
+        try:
+            rec, compiled = lower_cell(
+                a, s, multi_pod=mp, kv_mode=args.kv_mode,
+                num_planes=args.num_planes, grad_compress=args.grad_compress,
+            )
+            del compiled
+        except Exception as e:  # a failing cell is a bug: record + continue
+            rec = {"arch": a, "shape": s, "mesh": "multi" if mp else "single",
+                   "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            r = rec["roofline"]
+            frac = r.get("floor_fraction", r["roofline_fraction"])
+            extra = (f" compile={rec['compile_s']}s bottleneck={r['bottleneck']}"
+                     f" frac={frac:.3f}")
+        elif status == "FAIL":
+            extra = " " + rec["error"][:120]
+        print(f"[{status}] {tag}{extra}", flush=True)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            suffix = "" if args.kv_mode == "dense" else f".{args.kv_mode}"
+            if args.grad_compress:
+                suffix += f".gc{args.grad_compress}"
+            fn = f"{a}.{s}.{'multi' if mp else 'single'}{suffix}.json"
+            with open(os.path.join(args.out, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{n_ok} OK, {n_skip} SKIP, {n_fail} FAIL / {len(results)} cells")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Composable model definitions: one block vocabulary covering dense / MoE /
+SSM / hybrid / enc-dec / VLM families, assembled per ArchConfig."""
+from repro.models import layers, transformer  # noqa: F401

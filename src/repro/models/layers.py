@@ -1,0 +1,446 @@
+"""Model layers, pure-functional JAX (params are plain pytrees).
+
+Everything is written scan-friendly (fixed shapes, O(1) HLO in depth) and
+GSPMD-friendly (no shard_map in the model body, so uneven head counts like
+hymba's 25 heads legally pad on a 16-way axis).  Memory-critical paths
+(attention at 32k+, SSD) are chunked ``lax.scan`` implementations so the peak
+temp is a tile, not an S x S buffer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard_activation as _sa
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def dense(x, w):
+    """Matmul in the activation dtype with f32 accumulation."""
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention (pure lax.scan; O(tile) memory)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _chunked(x, n, c):
+    """(B, S, ...) -> (n, B, c, ...) scan-ready."""
+    b = x.shape[0]
+    return jnp.moveaxis(x.reshape((b, n, c) + x.shape[2:]), 1, 0)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset=0,
+):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) with Hq % Hkv == 0.
+    window > 0 => sliding-window causal.  q_offset: absolute position of
+    q[:, 0] (for decode against a longer cache).
+    Returns (B, Sq, Hq, hd) in q.dtype.
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    cq = min(q_chunk, sq)
+    ck = min(kv_chunk, skv)
+    pad_q = (-sq) % cq
+    pad_k = (-skv) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (sq + pad_q) // cq, (skv + pad_k) // ck
+
+    qc = _chunked(q.reshape(b, sq + pad_q, hkv, g, hd), nq, cq)  # (nq,B,cq,hkv,g,hd)
+    kc = _chunked(k, nk, ck)
+    vc = _chunked(v, nk, ck)
+
+    def q_step(_, qi_x):
+        qi, qx = qi_x
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, ki_kv):
+            # named_scope tags this tile's ops as VMEM-resident for the
+            # roofline analyzer: on TPU this body is the Pallas flash kernel
+            # (kernels/flash_attention.py) whose tiles never touch HBM.
+            with jax.named_scope("vmem_tile"):
+                return _kv_tile(carry, ki_kv)
+
+        def _kv_tile(carry, ki_kv):
+            m, l, acc = carry
+            ki, kx, vx = ki_kv
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qx, kx, preferred_element_type=jnp.float32
+            ) * scale
+            valid = kpos[None, :] < skv
+            valid &= (qpos[:, None] < q_offset + sq)
+            if causal:
+                valid &= kpos[None, :] <= qpos[:, None]
+            if window:
+                valid &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # fully-masked chunks have s == m_new == NEG_INF; exp(0) would be
+            # 1 there, so re-mask after the subtraction
+            p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vx, preferred_element_type=jnp.float32
+            )
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, hd), jnp.float32)
+        # checkpoint each kv tile: without this, scan-AD stacks every f32
+        # probability tile across (nq x nk) steps -- GBs per layer.  With it,
+        # the backward recomputes p from (q, k, v) exactly like FlashAttention.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, cq, hq, hd)  # (B,cq,Hq,hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, (sq + pad_q), hq, hd)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# attention layer (GQA / SWA), training/prefill form
+# ---------------------------------------------------------------------------
+
+def attention(p, x, cfg, *, positions=None, causal=True, kv_override=None):
+    """p: {'wq','wk','wv','wo'}; x: (B,S,D).
+
+    kv_override: (k, v) already-projected tensors (whisper cross-attention).
+    Returns (B,S,D) and the (k, v) tensors for cache construction.
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if kv_override is None:
+        k = dense(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = dense(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        if positions is None:
+            positions = jnp.arange(s)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+        if positions is not None:
+            q = rope(q, positions, cfg.rope_theta)
+    # only the query gets an explicit heads-over-model hint; k/v sharding is
+    # left to GSPMD propagation, which picks (kv_heads x head_dim) factorings
+    # that a blanket 16-way heads constraint would fight (forced remat copies)
+    q = _sa(q, ("act_batch", None, "act_heads", None))
+    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window if causal else 0)
+    o = dense(o.reshape(b, s, cfg.n_heads * hd), p["wo"])
+    return o, (k, v)
+
+
+def cross_kv(p, enc_out, cfg):
+    """Project encoder output to (k, v) for cross-attention."""
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = dense(enc_out, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(enc_out, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(p, x):
+    """p: {'wi': (D, 2F), 'wo': (F, D)} -- fused gate+up projection."""
+    gu = dense(x, p["wi"])
+    gate, up = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = _sa(h, ("act_batch", None, "act_ff"))
+    return dense(h, p["wo"])
+
+
+def moe_ffn(p, x, cfg):
+    """Top-k MoE with per-expert FIFO capacity, formulated scatter-free.
+
+    p: {'router': (D,E), 'wi': (E,D,2Fe), 'wo': (E,Fe,D) [, 'shared_wi','shared_wo']}
+    x: (B,S,D).  Experts shard over 'model' (EP), tokens over 'data'.
+
+    GSPMD note: the classic flattened-scatter dispatch forces the partitioner
+    to all-gather the (T*K, D) expanded tokens on every model shard (~50 GB /
+    layer at deepseek scale).  Instead:
+      dispatch -- per-expert top_k over token indices (FIFO capacity, GShard
+                  drop semantics) + batched gather: indices are E-sharded, the
+                  token operand is model-replicated -> fully local;
+      combine  -- batched scatter-add of E-sharded expert outputs into the
+                  model-replicated (B,S,D) result -> partial sums + ONE
+                  (B,S,D) all-reduce over 'model', same wire cost as a TP
+                  row-parallel matmul.
+    Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e_, k_ = cfg.n_experts, cfg.top_k
+    cap = min(s, max(8, int(s * k_ / e_ * cfg.capacity_factor)))
+    logits = dense(x, p["router"]).astype(jnp.float32)        # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k_)                      # (B,S,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, e_, dtype=jnp.float32)       # (B,S,K,E)
+    routed = onehot.sum(2) > 0                                # (B,S,E)
+    gate_full = (onehot * gate[..., None]).sum(2)             # (B,S,E)
+
+    # FIFO top-C token ids per expert (earliest-token priority, GShard drop)
+    spos = jnp.arange(s, dtype=jnp.float32)[None, :, None]
+    score = jnp.where(routed, -spos, -jnp.float32(1e9))       # (B,S,E)
+    top_sc, src = jax.lax.top_k(jnp.swapaxes(score, 1, 2), cap)  # (B,E,C)
+    valid = top_sc > -5e8
+    src = jnp.where(valid, src, 0)
+    src = _sa(src, ("act_moe_batch", "act_expert", None))
+
+    xin = jax.vmap(lambda xb, ib: xb[ib])(x, src)             # (B,E,C,D) gather
+    xin = xin * valid[..., None].astype(x.dtype)
+    xin = _sa(xin, ("act_moe_batch", "act_expert", None, None))
+
+    gu = jnp.einsum("becd,edf->becf", xin, p["wi"].astype(x.dtype))
+    g_, u_ = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u_
+    xout = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+
+    # per-slot gate weight: gate_full[b, src[b,e,c], e]
+    gf_t = jnp.swapaxes(gate_full, 1, 2)                      # (B,E,S)
+    gate_slot = jax.vmap(lambda g2, i2: jnp.take_along_axis(g2, i2, axis=1))(
+        gf_t, src
+    )                                                         # (B,E,C)
+    w_slot = (gate_slot * valid).astype(x.dtype)
+
+    upd = (xout * w_slot[..., None]).reshape(b, e_ * cap, d)
+    flat_idx = src.reshape(b, e_ * cap)
+    y = jax.vmap(
+        lambda ib, ub: jnp.zeros((s, d), x.dtype).at[ib].add(ub)
+    )(flat_idx, upd)
+    y = _sa(y, ("act_batch", None, None))
+
+    if "shared_wi" in p:
+        y = y + swiglu_mlp({"wi": p["shared_wi"], "wo": p["shared_wo"]}, x)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=(0, 1))
+    ce = routed.astype(jnp.float32).mean(axis=(0, 1))
+    aux = e_ * jnp.sum(me * ce)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD -- state-space duality), chunked scan + O(1) decode
+# ---------------------------------------------------------------------------
+
+def _ssm_dims(cfg):
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_n_heads
+    n = cfg.ssm_state
+    return di, h, n, cfg.ssm_head_dim
+
+
+def _ssm_conv(u, w):
+    """Depthwise causal conv1d.  u: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        out = out + u_pad[:, i : i + u.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def mamba2(p, x, cfg, *, init_state=None, return_state=False):
+    """Chunked SSD forward.  x: (B,S,D) -> (B,S,D).
+
+    p: {'in': (D,Z), 'conv': (W,CC), 'dt_bias': (H,), 'A_log': (H,),
+        'D': (H,), 'norm': (di,), 'out': (di,D)}
+    with Z = 2*di + 2*N + H and CC = di + 2*N (x, B, C channels get conv'd).
+    With return_state=True also returns (final_state, conv_tail) for decode.
+    """
+    b, s, _ = x.shape
+    di, h, n, hp = _ssm_dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        # fall back to the largest divisor (only hit by odd test lengths;
+        # production cells are powers of two)
+        q = next(d for d in range(q, 0, -1) if s % d == 0)
+    nc = s // q
+
+    zxbcdt = dense(x, p["in"])
+    # split: z (di) | xbc (di + 2n) | dt (h)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    conv_tail = xbc[:, s - (cfg.ssm_conv_width - 1) :, :]      # pre-conv history
+    xbc = _ssm_conv(xbc, p["conv"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di].reshape(b, s, h, hp)
+    bb = xbc[..., di : di + n]                                 # (B,S,N) (G=1)
+    cc = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+
+    # chunked views
+    xsc = xs.reshape(b, nc, q, h, hp)
+    bbc = bb.reshape(b, nc, q, n)
+    ccc = cc.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+    da = dtc * a[None, None, None, :]                          # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                               # within-chunk
+
+    xs_sc = jnp.moveaxis(xsc, 1, 0)
+    bb_sc = jnp.moveaxis(bbc, 1, 0)
+    cc_sc = jnp.moveaxis(ccc, 1, 0)
+    dt_sc = jnp.moveaxis(dtc, 1, 0)
+    cum_sc = jnp.moveaxis(cum, 1, 0)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, hp), jnp.float32)
+
+    def chunk_step(state, xs_):
+        # tagged VMEM-resident: the SSD chunk math is a fused TPU kernel
+        # (intra-chunk tiles never hit HBM); see roofline/hlo_cost.py
+        with jax.named_scope("vmem_tile"):
+            return _ssd_chunk(state, xs_)
+
+    def _ssd_chunk(state, xs_):
+        xk, bk, ck, dtk, cumk = xs_
+        # intra-chunk (quadratic within chunk)
+        seg = cumk[:, :, None, :] - cumk[:, None, :, :]        # (B,Q,Q,H)
+        iq = jnp.arange(q)
+        causal = iq[:, None] >= iq[None, :]
+        # mask BEFORE exp: upper-triangle seg is positive (cum is decreasing),
+        # exp would overflow and poison the backward pass with inf * 0
+        seg = jnp.where(causal[None, :, :, None], seg, NEG_INF)
+        l_ = jnp.exp(seg)
+        cb = jnp.einsum("bqn,bkn->bqk", ck, bk, preferred_element_type=jnp.float32)
+        w_ = cb[..., None] * l_ * dtk[:, None, :, :]           # (B,Q,K,H)
+        y_intra = jnp.einsum(
+            "bqkh,bkhp->bqhp", w_, xk.astype(jnp.float32)
+        )
+        # inter-chunk (contribution of carried state)
+        y_inter = jnp.einsum(
+            "bqn,bhnp,bqh->bqhp", ck.astype(jnp.float32), state, jnp.exp(cumk)
+        )
+        # state update
+        total = cumk[:, -1, :]                                 # (B,H)
+        decay_rest = jnp.exp(total[:, None, :] - cumk)         # (B,Q,H)
+        upd = jnp.einsum(
+            "bkn,bkh,bkhp->bhnp",
+            bk.astype(jnp.float32),
+            dtk * decay_rest,
+            xk.astype(jnp.float32),
+        )
+        new_state = jnp.exp(total)[:, :, None, None] * state + upd
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    final_state, ys = jax.lax.scan(
+        chunk_step, init_state, (xs_sc, bb_sc, cc_sc, dt_sc, cum_sc)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hp)
+    y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = dense(y, p["out"])
+    if return_state:
+        return out, (final_state, conv_tail)
+    return out
+
+
+def mamba2_decode(p, x1, state, conv_state, cfg):
+    """Single-token SSD step.  x1: (B,1,D); state: (B,H,N,hp);
+    conv_state: (B, W-1, CC).  Returns (out (B,1,D), state, conv_state)."""
+    b = x1.shape[0]
+    di, h, n, hp = _ssm_dims(cfg)
+    zxbcdt = dense(x1, p["in"])[:, 0]                          # (B,Z)
+    z = zxbcdt[:, :di]
+    xbc = zxbcdt[:, di : 2 * di + 2 * n]
+    dt = zxbcdt[:, 2 * di + 2 * n :]
+    # causal conv via rolling state
+    w = p["conv"].astype(x1.dtype)                             # (W,CC)
+    width = w.shape[0]
+    hist = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,W,CC)
+    xbc = jnp.einsum("bwc,wc->bc", hist, w)
+    new_conv_state = hist[:, 1:]
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x1.dtype)
+    xh = xbc[:, :di].reshape(b, h, hp)
+    bb = xbc[:, di : di + n]
+    cc = xbc[:, di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])                              # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bb.astype(jnp.float32), dt, xh.astype(jnp.float32))
+    state = da[:, :, None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", cc.astype(jnp.float32), state)
+    y = y.astype(x1.dtype) + xh * p["D"].astype(x1.dtype)[None, :, None]
+    y = y.reshape(b, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = dense(y, p["out"])[:, None, :]
+    return out, state, new_conv_state
+
+
+def ssm_conv_channels(cfg) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_state
+
+
+def ssm_in_features(cfg) -> int:
+    return 2 * cfg.ssm_d_inner + 2 * cfg.ssm_state + cfg.ssm_n_heads

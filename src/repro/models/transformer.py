@@ -1,0 +1,302 @@
+"""Model assembly: parameter init, forward pass, loss.
+
+All families (dense / moe / ssm / hybrid / audio enc-dec / vlm) share one
+block vocabulary; layers are stacked on a leading L axis and run under
+``jax.lax.scan`` so the HLO is O(1) in depth (critical for the 512-device
+dry-run compiles).  The vocabulary is padded to a multiple of 128 and masked
+in the loss; the CE loss is computed in sequence chunks so (B, S, 128k)
+logits never materialize.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import shard_activation as _sa
+
+Params = dict
+
+
+def compute_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, shape):
+    return jnp.ones(shape, jnp.dtype(cfg.param_dtype))
+
+
+def _dense_init(key, cfg, fan_in, shape):
+    w = jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+    return w.astype(jnp.dtype(cfg.param_dtype))
+
+
+def _init_attn(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(kq, cfg, d, (d, cfg.n_heads * hd)),
+        "wk": _dense_init(kk, cfg, d, (d, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(kv, cfg, d, (d, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ko, cfg, cfg.n_heads * hd, (cfg.n_heads * hd, d)),
+    }
+
+
+def _init_mlp(key, cfg, d_ff) -> Params:
+    d = cfg.d_model
+    ki, ko = jax.random.split(key)
+    return {
+        "wi": _dense_init(ki, cfg, d, (d, 2 * d_ff)),
+        "wo": _dense_init(ko, cfg, d_ff, (d_ff, d)),
+    }
+
+
+def _init_moe(key, cfg) -> Params:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    kr, ki, ko, ksi, kso = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(kr, cfg, d, (d, e)),
+        "wi": _dense_init(ki, cfg, d, (e, d, 2 * f)),
+        "wo": _dense_init(ko, cfg, f, (e, f, d)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        p["shared_wi"] = _dense_init(ksi, cfg, d, (d, 2 * fs))
+        p["shared_wo"] = _dense_init(kso, cfg, fs, (fs, d))
+    return p
+
+
+def _init_ssm(key, cfg) -> Params:
+    d = cfg.d_model
+    di, h = cfg.ssm_d_inner, cfg.ssm_n_heads
+    kin, kconv, kout, kdt = jax.random.split(key, 4)
+    z = L.ssm_in_features(cfg)
+    cc = L.ssm_conv_channels(cfg)
+    return {
+        "in": _dense_init(kin, cfg, d, (d, z)),
+        "conv": _dense_init(kconv, cfg, cfg.ssm_conv_width, (cfg.ssm_conv_width, cc)),
+        "dt_bias": jnp.zeros((h,), jnp.dtype(cfg.param_dtype)),
+        "A_log": jnp.log(
+            jax.random.uniform(kdt, (h,), jnp.float32, 1.0, 16.0)
+        ).astype(jnp.dtype(cfg.param_dtype)),
+        "D": jnp.ones((h,), jnp.dtype(cfg.param_dtype)),
+        "norm": _norm_init(cfg, (di,)),
+        "out": _dense_init(kout, cfg, di, (di, d)),
+    }
+
+
+def _init_layer(key, cfg, *, decoder: bool) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": _norm_init(cfg, (d,))}
+    if cfg.n_heads:
+        p["attn"] = _init_attn(ks[0], cfg)
+    if cfg.ssm_state and cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = _init_ssm(ks[1], cfg)
+    if cfg.n_experts:
+        p["moe"] = _init_moe(ks[2], cfg)
+        p["ln2"] = _norm_init(cfg, (d,))
+        if cfg.dense_ff_residual:
+            p["mlp"] = _init_mlp(ks[3], cfg, cfg.d_ff)
+    elif cfg.d_ff:
+        p["mlp"] = _init_mlp(ks[3], cfg, cfg.d_ff)
+        p["ln2"] = _norm_init(cfg, (d,))
+    if decoder and cfg.encoder_decoder:
+        p["cross"] = _init_attn(ks[4], cfg)
+        p["ln_cross"] = _norm_init(cfg, (d,))
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ke, kl, kh, kf, kenc = jax.random.split(key, 5)
+    v, d = cfg.padded_vocab, cfg.d_model
+    params: Params = {
+        "embed": _dense_init(ke, cfg, d, (v, d)),
+        "layers": jax.vmap(
+            lambda k: _init_layer(k, cfg, decoder=True)
+        )(jax.random.split(kl, cfg.n_layers)),
+        "final_ln": _norm_init(cfg, (d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(kh, cfg, d, (d, v))
+    if cfg.encoder_decoder or cfg.prefix_embeds:
+        params["frontend_proj"] = _dense_init(kf, cfg, d, (d, d))
+    if cfg.encoder_decoder:
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: _init_layer(k, cfg, decoder=False)
+            )(jax.random.split(kenc, cfg.n_encoder_layers)),
+            "final_ln": _norm_init(cfg, (d,)),
+        }
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.key(0))
+    )
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def ffn_part(p: Params, h, cfg: ArchConfig):
+    """Post-mixer FFN residual (dense MLP and/or MoE).  Returns (h, aux)."""
+    aux = jnp.float32(0)
+    if "ln2" in p:
+        hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        ff = jnp.zeros_like(h)
+        if "moe" in p:
+            moe_out, aux = L.moe_ffn(p["moe"], hn, cfg)
+            ff = ff + moe_out
+        if "mlp" in p:
+            ff = ff + L.swiglu_mlp(p["mlp"], hn)
+        h = h + ff
+    return h, aux
+
+
+def _block(p: Params, h, cfg: ArchConfig, *, causal: bool, enc_out=None):
+    """One transformer block (train/prefill form).
+
+    Returns (h, aux_loss, caps) where caps holds the per-layer state a serving
+    cache needs (k/v, ssm state, cross k/v)."""
+    caps: Params = {}
+    hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    mix = None
+    if cfg.n_heads and cfg.family != "ssm":
+        attn_out, (k, v) = L.attention(p["attn"], hn, cfg, causal=causal)
+        caps["k"], caps["v"] = k, v
+        mix = attn_out
+    if "ssm" in p:
+        ssm_out, (state, conv_tail) = L.mamba2(p["ssm"], hn, cfg, return_state=True)
+        caps["state"], caps["conv"] = state, conv_tail
+        # hybrid: parallel heads, outputs averaged (Hymba)
+        mix = ssm_out if mix is None else 0.5 * (mix + ssm_out)
+    h = h + mix
+    if enc_out is not None and "cross" in p:
+        hn = L.rms_norm(h, p["ln_cross"], cfg.norm_eps)
+        kv = L.cross_kv(p["cross"], enc_out, cfg)
+        caps["cross_k"], caps["cross_v"] = kv
+        out, _ = L.attention(p["cross"], hn, cfg, causal=False, kv_override=kv)
+        h = h + out
+    h, aux = ffn_part(p, h, cfg)
+    return h, aux, caps
+
+
+def _run_layers(layers: Params, h, cfg, *, causal: bool, enc_out=None, capture=False):
+    def body(carry, lp):
+        h, aux = carry
+        h = _sa(h, ("act_batch", "act_seq", "act_embed"))
+        h, a, caps = _block(lp, h, cfg, causal=causal, enc_out=enc_out)
+        return (h, aux + a), (caps if capture else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, aux), caps = jax.lax.scan(body, (h, jnp.float32(0)), layers)
+    return (h, aux, caps) if capture else (h, aux)
+
+
+# ---------------------------------------------------------------------------
+# forward + loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype(cfg))
+
+
+def encode(params, cfg, frames):
+    """Whisper encoder over stub frame embeddings (B, T, D)."""
+    h = L.dense(frames.astype(compute_dtype(cfg)), params["frontend_proj"])
+    h, _ = _run_layers(params["encoder"]["layers"], h, cfg, causal=False)
+    return L.rms_norm(h, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, frames=None, image_embeds=None):
+    """-> (hidden (B, S', D), aux_loss); S' includes any VLM prefix."""
+    h = embed_tokens(params, cfg, tokens)
+    if cfg.prefix_embeds and image_embeds is not None:
+        pre = L.dense(image_embeds.astype(h.dtype), params["frontend_proj"])
+        h = jnp.concatenate([pre, h], axis=1)
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = encode(params, cfg, frames)
+    h, aux = _run_layers(params["layers"], h, cfg, causal=True, enc_out=enc_out)
+    return L.rms_norm(h, params["final_ln"], cfg.norm_eps), aux
+
+
+def lm_head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def logits_for(params, cfg, h):
+    out = L.dense(h, lm_head_weight(params, cfg)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        out = out - jnp.pad(
+            jnp.zeros((cfg.vocab_size,), jnp.float32),
+            (0, pad),
+            constant_values=1e9,
+        )
+    return out
+
+
+def chunked_ce_loss(params, cfg, h, labels, *, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V): scan over seq chunks.
+
+    labels: (B, S) int32, -1 = ignore.  Returns (loss_sum, token_count).
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // c
+    hc = jnp.moveaxis(h.reshape(b, n, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    w = lm_head_weight(params, cfg)
+
+    def body(carry, xs):
+        loss, cnt = carry
+        hx, lx = xs
+        logits = L.dense(hx, w).astype(jnp.float32)            # (B,c,V)
+        mask = lx >= 0
+        lse = jax.nn.logsumexp(logits[..., : cfg.vocab_size], axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        return (loss + nll.sum(), cnt + mask.sum()), None
+
+    body = jax.checkpoint(body)
+    (loss, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.int32(0)), (hc, lc))
+    return loss, cnt
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, aux_weight: float = 0.01):
+    """Scalar training loss for a batch dict (tokens, labels [, frames, ...])."""
+    h, aux = forward(
+        params,
+        cfg,
+        batch["tokens"],
+        frames=batch.get("frames"),
+        image_embeds=batch.get("image_embeds"),
+    )
+    labels = batch["labels"]
+    if cfg.prefix_embeds:                      # VLM: no loss on image prefix
+        h = h[:, cfg.prefix_embeds :]
+    loss, cnt = chunked_ce_loss(params, cfg, h, labels)
+    loss = loss / jnp.maximum(cnt.astype(jnp.float32), 1.0)
+    return loss + aux_weight * aux / max(cfg.n_layers, 1)

@@ -1,0 +1,2 @@
+"""Pure-JAX optimizers + schedules."""
+from repro.optim.adamw import AdamW, AdamWState, global_norm, warmup_cosine  # noqa: F401

@@ -1,0 +1,75 @@
+"""AdamW in pure JAX pytrees (fp32 moments, global-norm clip, decay masking).
+
+The moments inherit the parameter PartitionSpecs, so FSDP shards optimizer
+state together with the parameters (ZeRO-style)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdamW(NamedTuple):
+    lr: Any                      # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        else:
+            gn = jnp.float32(0)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        new_m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, g32)
+        new_v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.v, g32)
+
+        def upd(p, m, v):
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if self.weight_decay and p.ndim >= 2:      # no decay on norms/bias
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gn, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,2 @@
+"""Optional GPipe-style pipeline-parallel axis (lax.ppermute microbatching)."""
+from repro.pipeline_par.gpipe import pipeline_apply  # noqa: F401

@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis.
+
+shard_map manual over 'stage'; microbatches stream through stages via
+``jax.lax.ppermute``.  The schedule runs (n_micro + n_stages - 1) ticks; each
+tick every stage processes one microbatch (bubble at the edges, the classic
+GPipe cost).  Stage-local layer stacks are plain scans, so this composes with
+the TP/DP shardings of the stage-interior (auto axes).
+
+This is the optional PP axis (DESIGN.md section 6): the production dry-run
+grid uses DP x TP x EP x FSDP x SP, and PP is validated separately by
+tests/test_pipeline.py on an 8-device host mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable,        # (stage_params, x) -> y   (per-stage compute)
+    mesh,
+    stage_axis: str = "stage",
+):
+    """Returns fn(stacked_stage_params, microbatches) -> outputs.
+
+    stacked_stage_params: pytree with leading [n_stages] dim (stage-sharded).
+    microbatches: (n_micro, mb, ...) input microbatches.
+    Output: (n_micro, mb, ...) as produced by the LAST stage.
+    """
+    n_stages = mesh.shape[stage_axis]
+
+    def run(params, xs):
+        n_micro = xs.shape[0]
+        ticks = n_micro + n_stages - 1
+
+        def body(carry, t):
+            buf, outs = carry          # buf: (1, mb, ...) current stage input
+            stage = jax.lax.axis_index(stage_axis)
+            # stage 0 injects microbatch t (or zeros past the end)
+            inject = jnp.where(
+                t < n_micro,
+                jax.lax.dynamic_index_in_dim(
+                    xs, jnp.minimum(t, n_micro - 1), 0, keepdims=False
+                ),
+                jnp.zeros_like(buf[0]),
+            )
+            x = jnp.where(stage == 0, inject, buf[0])
+            y = stage_fn(jax.tree.map(lambda p: p[0], params), x)
+            # last stage emits its result for microbatch (t - n_stages + 1)
+            emit_idx = t - (n_stages - 1)
+            outs = jax.lax.cond(
+                (stage == n_stages - 1) & (emit_idx >= 0),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(emit_idx, 0), 0
+                ),
+                lambda o: o,
+                outs,
+            )
+            # shift activations to the next stage
+            nxt = jax.lax.ppermute(
+                y, stage_axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            return (nxt[None], outs), None
+
+        buf0 = jnp.zeros_like(xs[:1])
+        outs0 = jnp.zeros_like(xs)
+        (buf, outs), _ = jax.lax.scan(body, (buf0, outs0), jnp.arange(ticks))
+        # only the last stage holds real outputs (zeros elsewhere): psum
+        # broadcasts them so the P() out_spec is truthful
+        return jax.lax.psum(outs, stage_axis)
+
+    return jax.shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(),
+        axis_names={stage_axis},
+        check_vma=False,
+    )

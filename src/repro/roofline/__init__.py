@@ -1,0 +1,1 @@
+"""Roofline-term derivation from dry-run compiled artifacts."""

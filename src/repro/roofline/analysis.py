@@ -1,0 +1,231 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e constants (targets; the container is CPU-only so terms are derived
+from the compiled HLO, not measured):
+    197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI.
+
+collective_bytes is NOT in cost_analysis, so we parse the post-SPMD
+(per-device) HLO from ``compiled.as_text()`` and sum the result-buffer sizes
+of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute.  Ring-cost factors: all-reduce moves ~2x its buffer per
+device; the others ~1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# result type(s) precede "= <kind>(" in HLO text; shapes look like f32[4,8]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s*(" + "|".join(_COLL_KINDS) + r")(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, int]:
+    """Sum result-buffer bytes per collective kind (per-device module)."""
+    out: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    seen_done = set()
+    for m in _LINE_RE.finditer(hlo_text):
+        kind = m.group(2)
+        # async pairs appear as -start/-done; count the op once via -start,
+        # plain ops have no suffix and are counted directly
+        tail = hlo_text[m.end() - len(kind) - 10 : m.end()]
+        if "-done(" in tail:
+            continue
+        out[kind] += _shape_bytes(m.group(1))
+    return out
+
+
+def wire_bytes(coll: dict[str, int]) -> float:
+    """Effective per-device bytes on the wire (ring algorithm factors)."""
+    return (
+        2.0 * coll.get("all-reduce", 0)
+        + 1.0 * coll.get("all-gather", 0)
+        + 1.0 * coll.get("reduce-scatter", 0)
+        + 1.0 * coll.get("all-to-all", 0)
+        + 1.0 * coll.get("collective-permute", 0)
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops (loop-aware)
+    hbm_bytes: float             # per-device bytes accessed (loop-aware)
+    coll_bytes: float            # per-device effective wire bytes
+    collectives: dict[str, int]
+    model_flops: float           # analytic 6*N*D (global)
+    chips: int
+    xla_cost: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops -- catches remat/padding waste."""
+        total = self.flops * self.chips
+        return (self.model_flops / total) if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful compute time / max(terms): how close the *useful* work is
+        to the dominating hardware limit."""
+        t_useful = self.model_flops / self.chips / PEAK_FLOPS
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return (t_useful / bound) if bound else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "collectives": self.collectives,
+            "model_flops_global": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_cost": self.xla_cost,
+        }
+
+
+def analyze(compiled, *, model_flops: float, chips: int) -> Roofline:
+    """Derive roofline terms from the compiled per-device HLO.
+
+    Primary source is the loop-aware analyzer in ``hlo_cost`` (XLA's own
+    cost_analysis counts while bodies once -- useless for scanned layers);
+    XLA numbers are kept in ``xla_cost`` as a cross-check.
+    """
+    from repro.roofline import hlo_cost
+
+    c = hlo_cost.analyze_text(compiled.as_text())
+    xla = compiled.cost_analysis() or {}
+    r = Roofline(
+        flops=c.flops,
+        hbm_bytes=c.bytes,
+        coll_bytes=wire_bytes(c.coll),
+        collectives={k: int(v) for k, v in c.coll.items()},
+        model_flops=model_flops,
+        chips=chips,
+    )
+    r.xla_cost = {
+        "flops": float(xla.get("flops", 0.0)),
+        "bytes accessed": float(xla.get("bytes accessed", 0.0)),
+    }
+    return r
+
+
+def train_model_flops(cfg, tokens: int) -> float:
+    """6*N_active*D for one optimizer step over `tokens` tokens."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def decode_model_flops(cfg, batch: int) -> float:
+    """2*N_active per generated token (fwd only), plus attention reads are
+    counted via the memory term."""
+    return 2.0 * cfg.active_param_count() * batch
+
+
+def sharded_bytes_per_device(shape_tree, spec_tree, mesh) -> float:
+    """Per-device bytes of a ShapeDtypeStruct pytree under PartitionSpecs."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    leaves = jax.tree.leaves(shape_tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    total = 0.0
+    for leaf, spec in zip(leaves, specs):
+        shards = 1
+        for ax in tuple(spec):
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a is not None:
+                    shards *= sizes.get(a, 1)
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize / shards
+    return total
+
+
+def decode_floor_fraction(ideal_bytes_dev: float, rl: "Roofline") -> float:
+    """Decode is bandwidth-bound by construction: the floor is reading the
+    sharded params + KV cache once per token.  Fraction = floor time over the
+    dominating measured term."""
+    t_floor = ideal_bytes_dev / HBM_BW
+    bound = max(rl.t_compute, rl.t_memory, rl.t_collective)
+    return (t_floor / bound) if bound else 0.0
+
+
+def memory_analysis_dict(compiled) -> dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

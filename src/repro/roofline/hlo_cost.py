@@ -1,0 +1,452 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count (verified empirically -- scan L=4 and L=8 report identical flops).
+Every model here runs layers/chunks under ``lax.scan``, so naive counts are
+off by 10-100x.  This module parses the post-SPMD per-device HLO text into a
+computation graph, extracts while-loop trip counts from their condition
+computations, and accumulates flops / HBM bytes / collective bytes with the
+correct multipliers.
+
+Traffic model (per instruction):
+  fusion            -> operands + result hit HBM; internals are free
+  dot               -> operands + result; flops = 2 * prod(result) * prod(contracting)
+  other compute ops -> operands + result
+  tuple/gte/param/bitcast/while/call shells -> free (bodies accounted)
+
+Validated against analytic 6*N*D for the dense-LM train cells (see
+EXPERIMENTS.md section Roofline cross-check).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s*([\w\-]+)\((.*?)\)(.*)$"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "custom-call",
+    "rng-bit-generator", "rng-get-and-update-state",
+}
+_COLL_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    param_types: dict[str, str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[dict] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def __add__(self, o: "Cost") -> "Cost":
+        c = dict(self.coll)
+        for k, v in o.coll.items():
+            c[k] = c.get(k, 0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes, c)
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, {kk: v * k for kk, v in self.coll.items()})
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                params = {}
+                for pm in re.finditer(r"%?([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)", m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), [], params)
+                if line.startswith("ENTRY"):
+                    entry_name = m.group(1)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR.match(line)
+        if im:
+            name, tstr, opcode, opnds, attrs = im.groups()
+            cur.instrs.append(
+                Instr(name, tstr, opcode, _OPERAND.findall(opnds), attrs)
+            )
+    comps["__entry__"] = comps.get(entry_name, next(iter(comps.values())))
+    return comps
+
+
+_CONST_LINE = re.compile(r"%?([\w.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_CMP_LINE = re.compile(
+    r"compare\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\s*\).*direction=(\w+)"
+)
+
+
+def trip_counts(text: str) -> dict[str, int]:
+    """cond-computation name -> trip count, via compare-against-constant."""
+    counts: dict[str, int] = {}
+    cur = None
+    consts: dict[str, int] = {}
+    trip = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            consts, trip = {}, None
+            continue
+        if line.startswith("}"):
+            if cur and trip is not None:
+                counts[cur] = trip
+            cur = None
+            continue
+        if cur is None:
+            continue
+        cm = _CONST_LINE.search(line)
+        if cm:
+            consts[cm.group(1)] = int(cm.group(2))
+        km = _CMP_LINE.search(line)
+        if km:
+            a, b, d = km.groups()
+            val = consts.get(b, consts.get(a))
+            if val is not None:
+                trip = val + 1 if d in ("LE", "GE") else val
+    return counts
+
+
+def _dot_flops(ins: Instr, types: dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    cm = _CONTRACT.search(ins.attrs)
+    contract = 1
+    if cm and ins.operands:
+        lhs_t = types.get(ins.operands[0], "")
+        lhs_dims = _shape_dims(lhs_t)
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _fusion_traffic(ins: Instr, called: Optional[Computation], types: dict) -> Cost:
+    """HBM bytes for one fusion call, slice-aware.
+
+    Scan carries/xs appear as huge fusion operands that are only touched via
+    dynamic-(update-)slice inside the fused computation; charging the full
+    buffer overcounts traffic ~trip-count-fold.  For each fusion parameter we
+    charge the slice sizes actually read; a parameter that is the in-place
+    target of a dynamic-update-slice is aliased and charges only the update.
+    """
+    res_b = _type_bytes(ins.type_str)
+    if called is None:
+        return Cost(0.0, res_b + sum(_type_bytes(types.get(o, "")) for o in ins.operands))
+
+    # Parameters are NOT listed in index order inside the computation; XLA
+    # names them param_<index>[.suffix], so recover the operand mapping from
+    # the name (fallback: textual order).
+    param_instrs = [p for p in called.instrs if p.opcode == "parameter"]
+    param_names = [p.name for p in param_instrs]
+    param_index: dict[str, int] = {}
+    for pos, p in enumerate(param_instrs):
+        m = re.match(r"param_(\d+)", p.name)
+        param_index[p.name] = int(m.group(1)) if m else pos
+    inner_types = dict(called.param_types)
+    for ci in called.instrs:
+        inner_types[ci.name] = ci.type_str
+    uses: dict[str, list[tuple[str, int, str]]] = {p: [] for p in param_names}
+    alias: dict[str, str] = {}   # bitcast/convert chains back to a parameter
+    root = called.instrs[-1] if called.instrs else None
+    _ALIAS_OPS = ("bitcast", "reshape", "copy", "convert", "transpose")
+    for ci in called.instrs:
+        if ci.opcode in _ALIAS_OPS and ci.operands:
+            src = alias.get(ci.operands[0], ci.operands[0])
+            if src in uses:
+                alias[ci.name] = src
+                continue  # pure alias hop: not a real use of the parameter
+        for pos, o in enumerate(ci.operands):
+            src = alias.get(o, o)
+            if src in uses:
+                uses[src].append((ci.opcode, pos, ci.name))
+
+    bytes_total = 0.0
+    for p in param_names:
+        i = param_index[p]
+        full = _type_bytes(
+            types.get(ins.operands[i], "") if i < len(ins.operands) else inner_types.get(p, "")
+        ) or _type_bytes(inner_types.get(p, ""))
+        ulist = uses.get(p, [])
+        if ulist and all(
+            (op_ == "dynamic-slice")
+            or (op_ == "dynamic-update-slice" and pos == 0)
+            for op_, pos, _ in ulist
+        ):
+            b = 0.0
+            for op_, pos, uname in ulist:
+                if op_ == "dynamic-slice":
+                    b += _type_bytes(inner_types.get(uname, ""))
+                else:                       # DUS target: aliased in place
+                    du = next(
+                        (c for c in called.instrs if c.name == uname), None
+                    )
+                    if du is not None and len(du.operands) > 1:
+                        b += _type_bytes(inner_types.get(alias.get(du.operands[1], du.operands[1]), ""))
+            bytes_total += b
+        else:
+            bytes_total += full
+
+    # result: a DUS writing into a parameter aliases the output buffer (the
+    # scan-carry in-place update pattern); charge updates, not the full stack
+    dus_updates = [
+        ci for ci in called.instrs
+        if ci.opcode == "dynamic-update-slice"
+        and ci.operands
+        and alias.get(ci.operands[0], ci.operands[0]) in uses
+    ]
+    if dus_updates:
+        for du in dus_updates:
+            if len(du.operands) > 1:
+                bytes_total += _type_bytes(
+                    inner_types.get(alias.get(du.operands[1], du.operands[1]), "")
+                )
+    else:
+        bytes_total += res_b
+    return Cost(0.0, bytes_total)
+
+
+def _tainted_comps(comps) -> set:
+    """Computations that contain a vmem_tile tag anywhere: these are the
+    bodies of flash-attention / SSD tile loops that a TPU deployment runs as
+    one fused Pallas kernel.  XLA drops metadata on decomposed dots, so the
+    tag is resolved at computation granularity."""
+    out = set()
+    for name, comp in comps.items():
+        for ins in comp.instrs:
+            if "vmem_tile" in ins.attrs:
+                out.add(name)
+                break
+    return out
+
+
+def analyze_text(text: str) -> Cost:
+    comps = parse_module(text)
+    trips = trip_counts(text)
+    tainted = _tainted_comps(comps)
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(name: str, depth=0) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return Cost()
+        in_kernel = name in tainted
+        types = dict(comp.param_types)
+        for ins in comp.instrs:
+            types[ins.name] = ins.type_str
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                body = cond = None
+                for mm in re.finditer(r"(body|condition)=%?([\w.\-]+)", ins.attrs):
+                    if mm.group(1) == "body":
+                        body = mm.group(2)
+                    else:
+                        cond = mm.group(2)
+                tm = _TRIP_RE.search(ins.attrs)   # XLA backend_config annotation
+                t = int(tm.group(1)) if tm else trips.get(cond, 1)
+                inner = comp_cost(body, depth + 1) + comp_cost(cond, depth + 1)
+                total = total + inner * t
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for cn in _CALL_ATTR.findall(ins.attrs):
+                    total = total + comp_cost(cn, depth + 1)
+                continue
+            # ops tagged vmem_tile run inside a fused TPU kernel (Pallas
+            # flash-attention / SSD): tiles stay in VMEM -> no HBM traffic,
+            # flops and collectives still count
+            vmem = in_kernel or "vmem_tile" in ins.attrs
+            if op == "fusion":
+                called = None
+                for cn in _CALL_ATTR.findall(ins.attrs):
+                    called = cn
+                if not vmem:
+                    total = total + _fusion_traffic(ins, comps.get(called), types)
+                if called:
+                    total = total + Cost(comp_cost(called, depth + 1).flops, 0.0)
+                continue
+            if op in _FREE_OPS:
+                continue
+            if op in _COLL_OPS:
+                kind = op.replace("-start", "")
+                b = _type_bytes(ins.type_str)
+                total = total + Cost(0.0, 0.0 if vmem else b, {kind: b})
+                continue
+            if op.endswith("-done"):
+                continue
+            res_b = 0 if vmem else _type_bytes(ins.type_str)
+            if vmem:
+                c = Cost(0.0, 0.0)
+                if op in ("dot", "convolution"):
+                    c.flops = _dot_flops(ins, types)
+                total = total + c
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: read the update, write the slice (target aliased)
+                upd_b = _type_bytes(types.get(ins.operands[1], "")) if len(ins.operands) > 1 else res_b
+                total = total + Cost(0.0, 2.0 * upd_b)
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                total = total + Cost(0.0, 2.0 * res_b)   # read slice, write result
+                continue
+            if op == "scatter":
+                upd_b = _type_bytes(types.get(ins.operands[-1], "")) if ins.operands else res_b
+                total = total + Cost(0.0, 3.0 * upd_b)   # read+write region, read updates
+                continue
+            if op == "broadcast":
+                total = total + Cost(0.0, res_b)
+                continue
+            # generic compute op: operands + result hit memory
+            opb = sum(_type_bytes(types.get(o, "")) for o in ins.operands)
+            c = Cost(0.0, opb + res_b)
+            if op in ("dot", "convolution"):
+                c.flops = _dot_flops(ins, types)
+            total = total + c
+        memo[name] = total
+        return total
+
+    # count fused-computation flops when called via fusion only (handled
+    # above); entry cost covers everything reachable
+    return comp_cost(comps["__entry__"].name)
+
+
+def attribute(text: str, top: int = 25) -> list[dict]:
+    """Per-instruction (bytes x trip) attribution -- the dry-run 'profiler'.
+
+    Returns the top-N instructions by HBM traffic with their loop multiplier,
+    used by the section-Perf hillclimb loop to find the dominant consumers.
+    """
+    comps = parse_module(text)
+    tainted = _tainted_comps(comps)
+    mult: dict[str, float] = {}
+
+    def walk(name, m, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 40:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                body = None
+                for mm in re.finditer(r"body=%?([\w.\-]+)", ins.attrs):
+                    body = mm.group(1)
+                tm = _TRIP_RE.search(ins.attrs)
+                trip = int(tm.group(1)) if tm else 1
+                if body:
+                    walk(body, m * trip, depth + 1)
+            elif ins.opcode in ("call", "conditional"):
+                for cn in _CALL_ATTR.findall(ins.attrs):
+                    walk(cn, m, depth + 1)
+
+    walk(comps["__entry__"].name, 1.0)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if not m:
+            continue
+        types = dict(comp.param_types)
+        for ins in comp.instrs:
+            types[ins.name] = ins.type_str
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _FREE_OPS or op in ("while", "call", "conditional") or op.endswith("-done"):
+                continue
+            res_b = _type_bytes(ins.type_str)
+            if (cname in tainted or "vmem_tile" in ins.attrs) and op not in _COLL_OPS:
+                continue
+            if op == "fusion":
+                called = None
+                for cn in _CALL_ATTR.findall(ins.attrs):
+                    called = cn
+                b = _fusion_traffic(ins, comps.get(called), types).bytes
+            elif op in _COLL_OPS:
+                b = res_b
+            elif op == "dynamic-update-slice":
+                b = 2.0 * (_type_bytes(types.get(ins.operands[1], "")) if len(ins.operands) > 1 else res_b)
+            elif op in ("dynamic-slice", "slice", "gather"):
+                b = 2.0 * res_b
+            elif op == "broadcast":
+                b = res_b
+            else:
+                b = res_b + sum(_type_bytes(types.get(o, "")) for o in ins.operands)
+            rows.append({
+                "total_bytes": b * m, "bytes": b, "trip": m, "op": op,
+                "comp": cname, "name": ins.name, "type": ins.type_str[:60],
+                "is_coll": op in _COLL_OPS,
+            })
+    rows.sort(key=lambda r: -r["total_bytes"])
+    return rows[:top]

@@ -1,0 +1,2 @@
+"""Serving runtime: prefill/decode engine with dense or SZx-compressed KV."""
+from repro.serve import engine  # noqa: F401

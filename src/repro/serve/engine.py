@@ -1,0 +1,410 @@
+"""Serving engine: prefill + single-token decode with KV caches.
+
+Cache modes:
+  'dense'      -- bf16 K/V slabs (B, W, Hkv, hd)
+  'compressed' -- SZx-planes K/V: per (position, kv-head) channel block of
+                  head_dim values -> mu (f32) + sexp (int8) + P uint8 planes.
+                  ~1.9x less HBM traffic than bf16 at P=1 (the paper's
+                  in-memory-compression use case applied to decode, which is
+                  KV-bandwidth-bound -- see DESIGN.md section 3).
+
+Sliding-window archs use a ring buffer of W = window slots (slot = pos % W)
+with an absolute-position array for masking, so long_500k decode allocates
+only the window.  SSM/hybrid archs carry O(1) state.  The whole decode step
+is one jit-able function: scan over layers, fixed shapes throughout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ref as kref
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.sharding import rules_active, shard_activation as _sa
+
+NEG_INF = -1e30
+
+
+def _reduce_scores(s):
+    """Replicate hd-partial scores across 'model'.
+
+    Under a sharding-rules context the cross-shard sum is the decode hot
+    collective; casting the partials to bf16 halves the wire bytes (scores
+    tolerate bf16 -- perf iteration H3.3).  Outside a rules context (unit
+    tests, single device) this is an exact no-op."""
+    if not rules_active():
+        return s
+    s = s.astype(jnp.bfloat16)
+    s = _sa(s, ("act_batch", None, None, None))
+    return s.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# channel-block SZx-planes helpers (block = head_dim values of one position)
+# ---------------------------------------------------------------------------
+
+def _kv_encode(x, num_planes: int):
+    """x: (..., hd) -> (mu f32, sexp int8, planes uint8 (P, ..., hd))."""
+    mu, sexp, planes = kref.planes_encode_ref(x.astype(jnp.float32), num_planes)
+    return mu, jnp.clip(sexp, -127, 127).astype(jnp.int8), planes
+
+
+def _kv_decode(mu, sexp, planes, dtype):
+    return kref.planes_decode_ref(mu, sexp.astype(jnp.int32), planes).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def cache_window(cfg: ArchConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def make_cache(
+    cfg: ArchConfig,
+    batch: int,
+    seq_len: int,
+    *,
+    kv_mode: str = "dense",
+    num_planes: int = 1,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Zero-initialized cache pytree (dry-run uses jax.eval_shape of this)."""
+    w = cache_window(cfg, seq_len)
+    hd = cfg.resolved_head_dim
+    lay: dict[str, Any] = {}
+    nl = cfg.n_layers
+    if cfg.n_heads and cfg.family != "ssm":
+        if kv_mode == "dense":
+            for nm in ("k", "v"):
+                lay[nm] = jnp.zeros((nl, batch, w, cfg.n_kv_heads, hd), dtype)
+        else:
+            for nm in ("k", "v"):
+                lay[nm + "mu"] = jnp.zeros((nl, batch, w, cfg.n_kv_heads), jnp.float32)
+                lay[nm + "sexp"] = jnp.zeros((nl, batch, w, cfg.n_kv_heads), jnp.int8)
+                lay[nm + "pl"] = jnp.zeros(
+                    (nl, num_planes, batch, w, cfg.n_kv_heads, hd), jnp.uint8
+                )
+    if cfg.ssm_state and cfg.family in ("ssm", "hybrid"):
+        lay["state"] = jnp.zeros(
+            (nl, batch, cfg.ssm_n_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        )
+        lay["conv"] = jnp.zeros(
+            (nl, batch, cfg.ssm_conv_width - 1, L.ssm_conv_channels(cfg)), dtype
+        )
+    has_attn = bool(cfg.n_heads) and cfg.family != "ssm"
+    cache: dict[str, Any] = {
+        "pos": jnp.int32(0),
+        "slot_pos": jnp.full((w if has_attn else 1,), -1, jnp.int32),
+        "layers": lay,
+    }
+    if cfg.encoder_decoder:
+        # kept OUTSIDE the scanned layer cache: read-only at decode, so it
+        # must not round-trip through scan outputs every step
+        cache["cross"] = {
+            nm: jnp.zeros((nl, batch, cfg.encoder_len, cfg.n_kv_heads, hd), dtype)
+            for nm in ("k", "v")
+        }
+    return cache
+
+
+def cache_specs(cfg, batch, seq_len, **kw):
+    return jax.eval_shape(
+        functools.partial(make_cache, cfg, batch, seq_len, **kw)
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode attention over a (possibly compressed, possibly ring) cache slab
+# ---------------------------------------------------------------------------
+
+def _slab_attend(q, kslab, vslab, slot_pos, qpos, *, window: int):
+    """q: (B,1,Hq,hd); slabs: (B,W,Hkv,hd); slot_pos: (W,) absolute positions.
+
+    Single-shot masked attention (W is at most the cell seq_len; chunking for
+    big W happens in the caller via _chunked_slab_attend)."""
+    b, _, hq, hd = q.shape
+    hkv = kslab.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    # cache is head_dim-sharded over 'model'; reshard the (tiny) q the same
+    # way so the d-contraction computes partial scores locally, then
+    # all-reduce the small scores -- NOT all-gather the K chunk
+    qg = _sa(qg, ("act_batch", None, None, "act_hd"))
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg, kslab, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    s = _reduce_scores(s)
+    valid = (slot_pos >= 0) & (slot_pos <= qpos)
+    if window:
+        valid &= qpos - slot_pos < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m), 0.0)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, vslab, preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def _chunked_slab_attend(
+    q, get_chunk, nchunks, chunk, slot_pos, qpos, *, window, decode_chunk=None
+):
+    """Online-softmax scan over cache chunks.
+
+    get_chunk(i) -> raw cache slices (counted as HBM reads); decode_chunk
+    (optional) dequantizes them -> (k, v).  The dequant+attend body is tagged
+    vmem_tile: on TPU it is one fused decompress-attend kernel whose decoded
+    tiles never hit HBM (DESIGN.md section 3) -- the roofline memory term then
+    reflects the *compressed* cache bytes, which is the paper's win.
+    """
+    b, _, hq, hd = q.shape
+    if decode_chunk is None:
+        decode_chunk = lambda raw: raw  # noqa: E731
+
+    def step(carry, i):
+        raw = get_chunk(i)                       # HBM loads (counted)
+        sp = jax.lax.dynamic_slice_in_dim(slot_pos, i * chunk, chunk)
+        with jax.named_scope("vmem_tile"):       # fused dequant+attend tile
+            return _tile(carry, raw, sp), None
+
+    def _tile(carry, raw, sp):
+        m, l, acc = carry
+        kc, vc = decode_chunk(raw)
+        hkv = kc.shape[2]
+        g = hq // hkv
+        qg = q.reshape(b, hkv, g, hd)
+        qg = _sa(qg, ("act_batch", None, None, "act_hd"))   # see _slab_attend
+        s = jnp.einsum(
+            "bhgd,bkhd->bhgk", qg, kc, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
+        s = _reduce_scores(s)
+        valid = (sp >= 0) & (sp <= qpos)
+        if window:
+            valid &= qpos - sp < window
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bhgk,bkhd->bhgd", p, vc, preferred_element_type=jnp.float32)
+        return (m_new, l_new, alpha[..., None] * acc + pv)
+
+    # hkv sizes the carriers; fetch statically from the chunk shape
+    k0, _ = jax.eval_shape(lambda i: decode_chunk(get_chunk(i)), jnp.int32(0))
+    hkv = k0.shape[2]
+    g = hq // hkv
+    m0 = jnp.full((b, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nchunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+DECODE_CHUNK = 2048
+
+
+def decode_attention(p, x1, lc, cache_meta, cfg: ArchConfig, *, kv_mode, num_planes):
+    """One layer's decode-attention incl. cache append.  Returns (out, new_lc)."""
+    b = x1.shape[0]
+    hd = cfg.resolved_head_dim
+    pos, slot_pos, w = cache_meta["pos"], cache_meta["slot_pos"], cache_meta["w"]
+    slot = pos % w
+    q = L.dense(x1, p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    k = L.dense(x1, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = L.dense(x1, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    new_lc = {}
+    window = cfg.sliding_window
+    if kv_mode == "dense":
+        kslab = jax.lax.dynamic_update_slice_in_dim(lc["k"], k, slot, axis=1)
+        vslab = jax.lax.dynamic_update_slice_in_dim(lc["v"], v, slot, axis=1)
+        new_lc["k"], new_lc["v"] = kslab, vslab
+        if w <= DECODE_CHUNK * 2:
+            out = _slab_attend(q, kslab, vslab, slot_pos, pos, window=window)
+        else:
+            nch = w // DECODE_CHUNK
+
+            def get_chunk(i):
+                kc = jax.lax.dynamic_slice_in_dim(kslab, i * DECODE_CHUNK, DECODE_CHUNK, 1)
+                vc = jax.lax.dynamic_slice_in_dim(vslab, i * DECODE_CHUNK, DECODE_CHUNK, 1)
+                return kc, vc
+
+            out = _chunked_slab_attend(
+                q, get_chunk, nch, DECODE_CHUNK, slot_pos, pos, window=window
+            )
+    else:
+        kmu, ksexp, kpl = _kv_encode(k[:, 0], num_planes)   # (B,Hkv),(B,Hkv),(P,B,Hkv,hd)
+        vmu, vsexp, vpl = _kv_encode(v[:, 0], num_planes)
+        ins = lambda slab, val: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
+            slab, val[:, None] if val.ndim == slab.ndim - 1 else val, slot, axis=1
+        )
+        new_lc["kmu"] = ins(lc["kmu"], kmu)
+        new_lc["ksexp"] = ins(lc["ksexp"], ksexp)
+        new_lc["vmu"] = ins(lc["vmu"], vmu)
+        new_lc["vsexp"] = ins(lc["vsexp"], vsexp)
+        new_lc["kpl"] = jax.lax.dynamic_update_slice_in_dim(
+            lc["kpl"], kpl[:, :, None], slot, axis=2
+        )
+        new_lc["vpl"] = jax.lax.dynamic_update_slice_in_dim(
+            lc["vpl"], vpl[:, :, None], slot, axis=2
+        )
+        ck = min(w, DECODE_CHUNK)
+        nch = w // ck
+
+        def get_chunk(i):
+            sl = lambda a, ax: jax.lax.dynamic_slice_in_dim(a, i * ck, ck, ax)  # noqa: E731
+            return (
+                sl(new_lc["kmu"], 1), sl(new_lc["ksexp"], 1), sl(new_lc["kpl"], 2),
+                sl(new_lc["vmu"], 1), sl(new_lc["vsexp"], 1), sl(new_lc["vpl"], 2),
+            )
+
+        def decode_chunk(raw):
+            kmu_, ksexp_, kpl_, vmu_, vsexp_, vpl_ = raw
+            return (
+                _kv_decode(kmu_, ksexp_, kpl_, x1.dtype),
+                _kv_decode(vmu_, vsexp_, vpl_, x1.dtype),
+            )
+
+        out = _chunked_slab_attend(
+            q, get_chunk, nch, ck, slot_pos, pos, window=window,
+            decode_chunk=decode_chunk,
+        )
+    out = L.dense(out.reshape(b, 1, cfg.n_heads * hd), p["wo"])
+    return out, new_lc
+
+
+def _cross_attend(p, x1, lc, cfg):
+    """Decoder cross-attention against the cached encoder K/V."""
+    b = x1.shape[0]
+    hd = cfg.resolved_head_dim
+    q = L.dense(x1, p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    t = lc["cross_k"].shape[1]
+    slotp = jnp.arange(t, dtype=jnp.int32)
+    out = _slab_attend(q, lc["cross_k"], lc["cross_v"], slotp, jnp.int32(t), window=0)
+    return L.dense(out.reshape(b, 1, cfg.n_heads * hd), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode steps
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params,
+    cfg: ArchConfig,
+    tokens,
+    *,
+    frames=None,
+    image_embeds=None,
+    seq_len: int | None = None,
+    kv_mode: str = "dense",
+    num_planes: int = 1,
+):
+    """Run the full-context forward, build the cache, return (cache, logits)."""
+    h = T.embed_tokens(params, cfg, tokens)
+    if cfg.prefix_embeds and image_embeds is not None:
+        pre = L.dense(image_embeds.astype(h.dtype), params["frontend_proj"])
+        h = jnp.concatenate([pre, h], axis=1)
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = T.encode(params, cfg, frames)
+    h, _, caps = T._run_layers(
+        params["layers"], h, cfg, causal=True, enc_out=enc_out, capture=True
+    )
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = T.logits_for(params, cfg, h[:, -1:])
+
+    b, s = h.shape[0], h.shape[1]
+    w = cache_window(cfg, seq_len or s)
+    cache = make_cache(cfg, b, seq_len or s, kv_mode=kv_mode, num_planes=num_planes,
+                       dtype=h.dtype)
+    lay = cache["layers"]
+    take = min(w, s)
+    src_pos = jnp.arange(s - take, s)
+    slots = src_pos % w
+    if "k" in lay or "kmu" in lay:
+        k_t = caps["k"][:, :, s - take :].astype(h.dtype)   # (L,B,take,Hkv,hd)
+        v_t = caps["v"][:, :, s - take :].astype(h.dtype)
+        if kv_mode == "dense":
+            lay["k"] = lay["k"].at[:, :, slots].set(k_t)
+            lay["v"] = lay["v"].at[:, :, slots].set(v_t)
+        else:
+            for nm, t_ in (("k", k_t), ("v", v_t)):
+                mu, sexp, pl = _kv_encode(t_, num_planes)   # pl: (P,L,B,take,Hkv,hd)
+                lay[nm + "mu"] = lay[nm + "mu"].at[:, :, slots].set(mu)
+                lay[nm + "sexp"] = lay[nm + "sexp"].at[:, :, slots].set(sexp)
+                lay[nm + "pl"] = (
+                    lay[nm + "pl"].at[:, :, :, slots].set(jnp.moveaxis(pl, 0, 1))
+                )
+    if "state" in lay:
+        lay["state"] = caps["state"]
+        lay["conv"] = caps["conv"].astype(h.dtype)
+    if cfg.encoder_decoder:
+        cache["cross"] = {
+            "k": caps["cross_k"].astype(h.dtype),
+            "v": caps["cross_v"].astype(h.dtype),
+        }
+    cache["pos"] = jnp.int32(s)
+    if cache["slot_pos"].shape[0] == w:
+        cache["slot_pos"] = jnp.full((w,), -1, jnp.int32).at[slots].set(src_pos)
+    return cache, logits
+
+
+def decode_step(
+    params, cfg: ArchConfig, cache, token, *, kv_mode: str = "dense", num_planes: int = 1
+):
+    """One token for every sequence in the batch.  Returns (logits, new_cache)."""
+    h = T.embed_tokens(params, cfg, token)
+    h = _sa(h, ("act_batch", None, None))
+    pos = cache["pos"]
+    w = cache["slot_pos"].shape[0]
+    # mark the current token's slot BEFORE the layer scan so attention can
+    # see the token it is appending (self-attention to position `pos`)
+    slot_pos = cache["slot_pos"].at[pos % w].set(pos)
+    meta = {"pos": pos, "slot_pos": slot_pos, "w": w}
+    xs = (params["layers"], cache["layers"])
+    if cfg.encoder_decoder:
+        xs = xs + (cache["cross"],)
+
+    def body(h, xs):
+        lp, lc = xs[0], xs[1]
+        new_lc = dict(lc)
+        hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        mix = None
+        if cfg.n_heads and cfg.family != "ssm":
+            out, upd = decode_attention(
+                lp["attn"], hn, lc, meta, cfg, kv_mode=kv_mode, num_planes=num_planes
+            )
+            new_lc.update(upd)
+            mix = out
+        if "ssm" in lp:
+            out, st, cv = L.mamba2_decode(lp["ssm"], hn, lc["state"], lc["conv"], cfg)
+            new_lc["state"], new_lc["conv"] = st, cv
+            mix = out if mix is None else 0.5 * (mix + out)
+        h = h + mix
+        if "cross" in lp:
+            hn = L.rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+            h = h + _cross_attend(lp["cross"], hn, {"cross_k": xs[2]["k"], "cross_v": xs[2]["v"]}, cfg)
+        h, _ = T.ffn_part(lp, h, cfg)
+        return h, new_lc
+
+    h, new_layers = jax.lax.scan(body, h, xs)
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = T.logits_for(params, cfg, h)
+    new_cache = {
+        "pos": pos + 1,
+        "slot_pos": slot_pos,
+        "layers": new_layers,
+    }
+    if cfg.encoder_decoder:
+        new_cache["cross"] = cache["cross"]
+    return logits, new_cache

@@ -1,0 +1,1 @@
+"""Training runtime: step factory + fault-tolerant trainer loop."""

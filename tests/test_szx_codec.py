@@ -1,0 +1,119 @@
+"""End-to-end + property-based tests for the faithful SZx codec.
+
+The system's central invariant (paper Formula 1): for every element,
+|d_i - d'_i| <= e, for any input data and any positive error bound.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, szx
+
+
+def _roundtrip(x, e, **kw):
+    buf = szx.compress(x, e, **kw)
+    y = szx.decompress(buf)
+    return buf, y.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# property-based: the error bound invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    seed=st.integers(0, 2**31 - 1),
+    log_e=st.floats(-6, 1),
+    kind=st.sampled_from(["gauss", "walk", "spiky", "const", "steps"]),
+    block_size=st.sampled_from([8, 32, 64, 128, 256]),
+)
+def test_error_bound_invariant(n, seed, log_e, kind, block_size):
+    rng = np.random.default_rng(seed)
+    if kind == "gauss":
+        x = rng.standard_normal(n)
+    elif kind == "walk":
+        x = np.cumsum(rng.standard_normal(n)) * 0.01
+    elif kind == "spiky":
+        x = rng.standard_normal(n)
+        x[rng.integers(0, n, max(1, n // 50))] *= 1e4
+    elif kind == "const":
+        x = np.full(n, float(rng.standard_normal()))
+    else:
+        x = np.repeat(rng.standard_normal(max(1, n // 17 + 1)), 17)[:n]
+    x = x.astype(np.float32)
+    e = float(10.0**log_e)
+    buf, y = _roundtrip(x, e, block_size=block_size)
+    assert np.abs(x - y).max() <= e
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rel=st.sampled_from([1e-2, 1e-3, 1e-4]),
+)
+def test_relative_bound_mode(seed, rel):
+    rng = np.random.default_rng(seed)
+    x = (np.cumsum(rng.standard_normal(3000)) * rng.uniform(0.1, 100)).astype(np.float32)
+    e = rel * float(x.max() - x.min())
+    buf, y = _roundtrip(x, rel, mode="rel")
+    assert np.abs(x - y).max() <= e * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# deterministic behaviours
+# ---------------------------------------------------------------------------
+
+def test_stream_is_deterministic():
+    x = np.sin(np.linspace(0, 10, 5000)).astype(np.float32)
+    assert szx.compress(x, 1e-3) == szx.compress(x, 1e-3)
+
+
+def test_multidim_input_roundtrip():
+    x = np.random.default_rng(3).standard_normal((7, 33, 12)).astype(np.float32)
+    buf, st_ = szx.compress_with_stats(x, 1e-3)
+    y = szx.decompress(buf).reshape(x.shape)
+    assert np.abs(x - y).max() <= st_.error_bound
+
+
+def test_smooth_data_compresses_well():
+    """Paper Table III: smooth fields reach CR >= 4 at REL=1e-2."""
+    t = np.linspace(0, 4 * np.pi, 1 << 18).astype(np.float32)
+    x = np.sin(t) * np.exp(-t / 20)
+    buf, stats = szx.compress_with_stats(x, 1e-2, mode="rel")
+    assert stats.ratio > 4.0
+    y = szx.decompress(buf)
+    assert metrics.psnr(x, y) > 40.0
+
+
+def test_constant_data_hits_block_floor():
+    """All-constant data: ~4/128 bytes/value + header -> CR near 100x."""
+    x = np.full(1 << 16, 7.5, np.float32)
+    buf, stats = szx.compress_with_stats(x, 1e-3)
+    assert stats.constant_block_fraction == 1.0
+    assert stats.ratio > 80
+
+
+def test_incompressible_data_bounded_expansion():
+    """Worst case stays below 4 bytes + L-code overhead per value."""
+    x = np.random.default_rng(0).standard_normal(1 << 16).astype(np.float32)
+    buf, stats = szx.compress_with_stats(x, 1e-7)  # tiny bound -> keep ~all bits
+    assert stats.mean_bytes_per_value < 4.5
+
+
+def test_psnr_tracks_bound():
+    rng = np.random.default_rng(2)
+    x = np.cumsum(rng.standard_normal(1 << 16)).astype(np.float32)
+    p = []
+    for rel in (1e-2, 1e-3, 1e-4):
+        y = szx.decompress(szx.compress(x, rel, mode="rel"))
+        p.append(metrics.psnr(x, y))
+    assert p[0] < p[1] < p[2]          # tighter bound -> higher PSNR
+    assert p[0] > 30                   # paper: visually fine at REL 1e-2
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError):
+        szx.compress(np.zeros(4, np.float32), 0.0)
+    with pytest.raises(ValueError):
+        szx.decompress(b"not a stream at all....")

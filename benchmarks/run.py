@@ -16,26 +16,35 @@ repro.data.scidata (SDRBench is offline-unavailable; DESIGN.md section 8.3).
                                 time vs raw I/O
   beyond_planes_codec        -- szx-planes (in-graph) throughput + wire bytes
                                 for gradient/KV compression
+  chunked_dump_load          -- monolithic vs chunked (frame-streamed)
+                                compression: throughput + peak RSS; writes
+                                BENCH_codec.json at the repo root
+
+Run everything: ``PYTHONPATH=src python -m benchmarks.run``
+Run a subset:   ``PYTHONPATH=src python -m benchmarks.run chunked_dump_load``
+(must run as ``-m`` from the repo root so the ``benchmarks`` package imports)
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 from benchmarks import baselines as B
-from repro.core import metrics, szx
+from repro.core import metrics
+from repro.core.codec import SZxCodec
 from repro.data import scidata
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RELS = (1e-2, 1e-3, 1e-4)
+_SZX = SZxCodec(backend="numpy")
 CODECS = {
-    "szx": (
-        lambda x, e: szx.compress(x, e, backend="numpy"),
-        lambda b: szx.decompress(b, backend="numpy"),
-    ),
+    "szx": (_SZX.compress, _SZX.decompress),
     "zfp-lite": (B.zfp_lite_compress, B.zfp_lite_decompress),
     "sz-lite": (B.sz_lite_compress, B.sz_lite_decompress),
 }
@@ -128,6 +137,7 @@ def fig2_block_range_cdf() -> dict:
 
 def fig6_shift_overhead() -> dict:
     """Solution C (byte-aligned, shift s) vs Solution B (bit-granular)."""
+    from repro.core.codec import plan as codec_plan
     from repro.kernels import ops
 
     out = {}
@@ -135,8 +145,11 @@ def fig6_shift_overhead() -> dict:
         for rel in RELS:
             tot_c = tot_b = comp_bytes = 0
             for _, x in scidata.fields(app):
-                e = rel * float(x.max() - x.min())
-                xb, n = szx._to_blocks(x, 128)
+                p, xt = codec_plan.make_plan(
+                    x, rel, mode="rel", block_size=128, backend="numpy"
+                )
+                e = p.error_bound
+                xb = codec_plan.to_blocks(xt, p)
                 mu, rad, const, reqlen, shift, nbytes = [
                     np.asarray(a) for a in ops.block_stats(xb, e, backend="numpy")
                 ]
@@ -155,7 +168,7 @@ def fig6_shift_overhead() -> dict:
                 bits_b = int((reqlen[nc][:, None] - 8 * L0[nc]).clip(min=0).sum())
                 tot_c += bits_c
                 tot_b += bits_b
-                comp_bytes += len(szx.compress(x, e, backend="numpy"))
+                comp_bytes += len(_SZX.compress(x, e))
             ovh = (tot_c - tot_b) / 8.0 / comp_bytes
             out[f"{app}|{rel:g}"] = ovh
             _emit(f"fig6/{app}/{rel:g}", 0.0, f"overhead={ovh*100:.2f}%")
@@ -168,10 +181,11 @@ def fig8_block_size() -> dict:
     for rel in (1e-3, 1e-4):
         for bs in (8, 16, 32, 64, 128, 256):
             crs, psnrs = [], []
+            codec = SZxCodec(block_size=bs, backend="numpy")
             for _, x in flds:
                 e = rel * float(x.max() - x.min())
-                buf = szx.compress(x, e, block_size=bs, backend="numpy")
-                y = szx.decompress(buf, backend="numpy").reshape(-1)
+                buf = codec.compress(x, e)
+                y = codec.decompress(buf).reshape(-1)
                 crs.append(x.nbytes / len(buf))
                 psnrs.append(metrics.psnr(x, y))
             hm = len(crs) / sum(1 / c for c in crs)
@@ -186,7 +200,7 @@ def fig10_quality() -> dict:
     name, x = next(iter(scidata.fields("Hurricane")))
     for rel in RELS:
         e = rel * float(x.max() - x.min())
-        y = szx.decompress(szx.compress(x, e, backend="numpy")).reshape(x.shape)
+        y = _SZX.decompress(_SZX.compress(x, e)).reshape(x.shape)
         out[f"{rel:g}"] = dict(
             psnr=metrics.psnr(x, y), ssim=metrics.ssim(x, y),
             maxerr_over_e=float(np.abs(x - y).max() / e),
@@ -207,7 +221,7 @@ def fig13_dump_load(tmpdir: str = "/tmp/repro_io") -> dict:
         paths = []
         for i, x in enumerate(data):
             e = rel * float(x.max() - x.min())
-            buf = szx.compress(x, e, backend="numpy")
+            buf = _SZX.compress(x, e)
             p = os.path.join(tmpdir, f"c{i}.szx")
             with open(p, "wb") as f:
                 f.write(buf)
@@ -224,7 +238,7 @@ def fig13_dump_load(tmpdir: str = "/tmp/repro_io") -> dict:
         t0 = time.time()
         for p in paths:
             with open(p, "rb") as f:
-                szx.decompress(f.read(), backend="numpy")
+                _SZX.decompress(f.read())
         t_comp_load = time.time() - t0
         t0 = time.time()
         for i in range(len(data)):
@@ -311,6 +325,90 @@ def beyond_planes_codec() -> dict:
     return out
 
 
+_CHUNKED_CHILD = r"""
+import json, os, resource, sys, time
+import numpy as np
+from repro.core.codec import SZxCodec
+
+mode, path = sys.argv[1], sys.argv[2]
+n = 1 << 26                          # 256 MiB float32 synthetic field
+codec = SZxCodec(backend="numpy")
+rel = 1e-3
+
+if mode.endswith("dump"):
+    rng = np.random.default_rng(0)
+    x = np.cumsum(rng.standard_normal(n, dtype=np.float32) * 0.01)
+    x = x.astype(np.float32)
+    e = rel * float(x.max() - x.min())
+    t0 = time.time()
+    if mode == "mono_dump":
+        buf = codec.compress(x, e)
+        with open(path, "wb") as f:
+            f.write(buf)
+        stored = len(buf)
+    else:
+        with open(path, "wb") as f:
+            stored = codec.dump_chunked(x, f, e, chunk_bytes=8 << 20)
+    dt = time.time() - t0
+else:
+    t0 = time.time()
+    if mode == "mono_load":
+        with open(path, "rb") as f:
+            y = codec.decompress(f.read())
+    else:
+        with open(path, "rb") as f:
+            y = codec.load_chunked(f)
+    dt = time.time() - t0
+    stored = os.path.getsize(path)
+    assert y.size == n
+
+rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": stored, "n": n}))
+"""
+
+
+def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
+    """Monolithic vs chunked (frame-streamed) codec: throughput + peak RSS.
+
+    Each phase runs in a fresh subprocess so ru_maxrss isolates that phase's
+    peak memory.  Results also land in BENCH_codec.json at the repo root to
+    anchor the codec perf trajectory.
+    """
+    os.makedirs(tmpdir, exist_ok=True)
+    out: dict = {}
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
+    for kind in ("mono", "chunked"):
+        path = os.path.join(tmpdir, f"{kind}.szx")
+        res = {}
+        for phase in ("dump", "load"):
+            r = subprocess.run(
+                [sys.executable, "-c", _CHUNKED_CHILD, f"{kind}_{phase}", path],
+                capture_output=True, text=True, timeout=1800, env=env,
+            )
+            assert r.returncode == 0, r.stderr[-2000:]
+            res[phase] = json.loads(r.stdout.strip().splitlines()[-1])
+        raw_mb = res["dump"]["n"] * 4 / 1e6
+        out[kind] = dict(
+            comp_mbs=raw_mb / res["dump"]["t"],
+            decomp_mbs=raw_mb / res["load"]["t"],
+            dump_peak_rss_mb=res["dump"]["rss_mb"],
+            load_peak_rss_mb=res["load"]["rss_mb"],
+            stored_mb=res["dump"]["stored"] / 1e6,
+            cr=res["dump"]["n"] * 4 / res["dump"]["stored"],
+        )
+        _emit(
+            f"beyond/chunked_dump_load/{kind}", res["dump"]["t"] * 1e6,
+            f"comp_MB/s={out[kind]['comp_mbs']:.0f};"
+            f"decomp_MB/s={out[kind]['decomp_mbs']:.0f};"
+            f"dump_RSS_MB={out[kind]['dump_peak_rss_mb']:.0f};"
+            f"load_RSS_MB={out[kind]['load_peak_rss_mb']:.0f};"
+            f"CR={out[kind]['cr']:.2f}",
+        )
+    with open(os.path.join(REPO_ROOT, "BENCH_codec.json"), "w") as f:
+        json.dump({"chunked_dump_load": out}, f, indent=1, default=float)
+    return out
+
+
 ALL = [
     table3_compression_ratio,
     table4_compression_speed,
@@ -321,14 +419,23 @@ ALL = [
     fig10_quality,
     fig13_dump_load,
     beyond_planes_codec,
+    chunked_dump_load,
 ]
 
 
-def main() -> None:
+def main(names: list[str] | None = None) -> None:
     os.makedirs(OUT, exist_ok=True)
+    by_name = {fn.__name__: fn for fn in ALL}
+    if names:
+        unknown = [n for n in names if n not in by_name]
+        if unknown:
+            raise SystemExit(f"unknown benchmarks {unknown}; have {sorted(by_name)}")
+        todo = [by_name[n] for n in names]
+    else:
+        todo = ALL
     results = {}
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in todo:
         results[fn.__name__] = fn()
     with open(os.path.join(OUT, "benchmarks.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
@@ -336,4 +443,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -1,12 +1,18 @@
 """Quickstart: SZx error-bounded compression of a scientific field.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Shows the classic float32 byte-stream API (repro.core.szx, unchanged) plus
+the layered codec front-end (repro.core.codec.SZxCodec): native multi-dtype
+streams and bounded-memory chunked compression.
 """
+import io
 import time
 
 import numpy as np
 
 from repro.core import metrics, szx
+from repro.core.codec import SZxCodec
 from repro.data import scidata
 
 
@@ -29,6 +35,27 @@ def main():
         )
         assert err <= stats.error_bound, "error bound violated!"
     print("error bound strictly respected at every setting")
+
+    # --- layered codec: multi-dtype + chunked streaming ------------------
+    codec = SZxCodec(backend="numpy")
+    for dtype in (np.float64, np.float16):
+        xd = x.astype(dtype)
+        buf = codec.compress(xd, 1e-2, mode="rel")
+        y = codec.decompress(buf)
+        print(
+            f"native {np.dtype(dtype).name}: CR={xd.nbytes/len(buf):5.2f}  "
+            f"decoded dtype={y.dtype}"
+        )
+    sink = io.BytesIO()
+    written = codec.dump_chunked(x, sink, 1e-3, mode="rel", chunk_bytes=1 << 20)
+    sink.seek(0)
+    y = codec.load_chunked(sink).reshape(x.shape)
+    e = 1e-3 * float(x.max() - x.min())
+    print(
+        f"chunked: {written/1e6:.1f} MB in 1 MB self-delimiting frames, "
+        f"max|err|/e={np.abs(x - y).max() / e:.3f}"
+    )
+    assert np.abs(x - y).max() <= e, "chunked error bound violated!"
 
 
 if __name__ == "__main__":

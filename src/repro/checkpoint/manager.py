@@ -11,13 +11,15 @@ Features required at 1000-node scale and implemented here:
     corrupts the latest checkpoint
   * keep-last-k garbage collection
   * background (async) save thread so the train loop is not blocked
-  * error-bounded SZx compression of fp32/bf16 leaves (the paper's Fig. 13
-    dump/load use case: compression above PFS bandwidth = faster I/O wall)
+  * error-bounded SZx compression of float leaves (the paper's Fig. 13
+    dump/load use case: compression above PFS bandwidth = faster I/O wall),
+    native per-dtype streams (f32/f64/f16/bf16) via repro.core.codec
+  * chunked frame streams for large leaves: bounded-memory compression and
+    restore of arbitrarily big arrays (codec 'szx-chunked')
   * cross-topology restore: leaves are stored as full logical arrays, so any
     mesh can load any checkpoint (elastic scaling); device placement is the
     caller's (jax.device_put with the new sharding)
-  * integer/float leaves that SZx would mangle (ints, step counters) are
-    stored raw
+  * integer leaves that SZx would mangle (ints, step counters) are stored raw
 """
 from __future__ import annotations
 
@@ -31,7 +33,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core import szx
+from repro.core.codec import SZxCodec, plan as codec_plan
 
 _MARKER = "_COMMITTED"
 
@@ -55,6 +57,7 @@ class CheckpointManager:
         error_bound: float = 1e-6,
         mode: str = "rel",
         async_save: bool = False,
+        chunk_bytes: int = 64 << 20,
     ):
         self.root = root
         self.keep = keep
@@ -62,6 +65,10 @@ class CheckpointManager:
         self.error_bound = error_bound
         self.mode = mode
         self.async_save = async_save
+        # leaves larger than chunk_bytes are written as self-delimiting SZx
+        # frame sequences so save/restore memory stays bounded per leaf
+        self.chunk_bytes = chunk_bytes
+        self._codec = SZxCodec()
         self._thread: Optional[threading.Thread] = None
         self._last_error: Optional[BaseException] = None
         os.makedirs(root, exist_ok=True)
@@ -102,19 +109,29 @@ class CheckpointManager:
             arr = np.asarray(leaf)
             fn = f"{i:05d}.bin"
             codec = "raw"
-            if (
+            compressible = (
                 self.compress
-                and arr.dtype in (np.float32, np.dtype("bfloat16"))
+                and arr.dtype in codec_plan.BY_DTYPE
                 and arr.size >= 1024
-            ):
-                data = szx.compress(
-                    arr.astype(np.float32), self.error_bound, mode=self.mode
-                )
-                codec = "szx"
+            )
+            path = os.path.join(tmp, fn)
+            if compressible and arr.nbytes > self.chunk_bytes:
+                # large leaf: stream self-delimiting frames, O(chunk) memory
+                with open(path, "wb") as f:
+                    stored = self._codec.dump_chunked(
+                        arr, f, self.error_bound, mode=self.mode,
+                        chunk_bytes=self.chunk_bytes,
+                    )
+                codec = "szx-chunked"
             else:
-                data = arr.tobytes()
-            with open(os.path.join(tmp, fn), "wb") as f:
-                f.write(data)
+                if compressible:
+                    data = self._codec.compress(arr, self.error_bound, mode=self.mode)
+                    codec = "szx"
+                else:
+                    data = arr.tobytes()
+                with open(path, "wb") as f:
+                    f.write(data)
+                stored = len(data)
             manifest["leaves"].append(
                 {
                     "name": name,
@@ -123,7 +140,7 @@ class CheckpointManager:
                     "dtype": str(arr.dtype),
                     "codec": codec,
                     "raw_bytes": arr.nbytes,
-                    "stored_bytes": len(data),
+                    "stored_bytes": stored,
                 }
             )
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
@@ -177,12 +194,19 @@ class CheckpointManager:
             meta = by_name.get(name)
             if meta is None:
                 raise KeyError(f"leaf {name} not in checkpoint step {step}")
-            with open(os.path.join(d, meta["file"]), "rb") as f:
-                data = f.read()
             dtype = np.dtype(meta["dtype"]) if meta["dtype"] != "bfloat16" else jax.numpy.bfloat16
-            if meta["codec"] == "szx":
-                arr = szx.decompress(data).reshape(meta["shape"]).astype(dtype)
+            if meta["codec"] == "szx-chunked":
+                n = int(np.prod(meta["shape"], dtype=np.int64)) if meta["shape"] else 1
+                with open(os.path.join(d, meta["file"]), "rb") as f:
+                    arr = self._codec.load_chunked(f, n=n)   # O(leaf+chunk) peak
+                arr = arr.reshape(meta["shape"]).astype(dtype)
+            elif meta["codec"] == "szx":
+                with open(os.path.join(d, meta["file"]), "rb") as f:
+                    data = f.read()
+                arr = self._codec.decompress(data).reshape(meta["shape"]).astype(dtype)
             else:
+                with open(os.path.join(d, meta["file"]), "rb") as f:
+                    data = f.read()
                 arr = np.frombuffer(data, dtype=dtype).reshape(meta["shape"])
             if shard_leaves is not None:
                 arr = jax.device_put(arr, shard_leaves[idx])

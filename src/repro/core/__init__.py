@@ -2,7 +2,8 @@
 compression, as a composable JAX substrate (faithful codec + in-graph planes
 codec + gradient/KV-cache integrations)."""
 
-from repro.core import metrics, planes, szx  # noqa: F401
+from repro.core import codec, metrics, planes, szx  # noqa: F401
+from repro.core.codec import PlanesCodec, SZxCodec  # noqa: F401
 from repro.core.szx import (  # noqa: F401
     compress,
     compress_with_stats,

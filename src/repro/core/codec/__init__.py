@@ -1,0 +1,26 @@
+"""repro.core.codec -- layered SZx compression (the paper's Algorithm 1 as a
+stage pipeline, in the style of cuSZ/FZ-GPU).
+
+Layers:
+  plan       -- dtype/error-bound resolution, blocking/padding (Alg. 1 l. 1-2)
+  transform  -- fixed-shape block stats / Solution-C shift / XOR-lead /
+                byte-plane split, via the kernels.ops dispatch (Alg. 1 l. 3-9)
+  container  -- versioned header + section serialization, self-delimiting
+                chunk frames (Alg. 1 l. 10, the host compaction boundary)
+
+Front-ends over the same core:
+  SZxCodec    -- byte-stream codec (monolithic + chunked streaming,
+                 multi-dtype: f32/f64/f16/bf16)
+  PlanesCodec -- fixed-shape in-graph codec (gradient / KV-cache compression)
+"""
+from repro.core.codec import container, plan, transform  # noqa: F401
+from repro.core.codec.plan import DEFAULT_BLOCK_SIZE  # noqa: F401
+from repro.core.codec.planes_codec import PlanesCodec  # noqa: F401
+from repro.core.codec.szx_codec import (  # noqa: F401
+    DEFAULT_CHUNK_BYTES,
+    CompressionStats,
+    SZxCodec,
+    compress,
+    compress_with_stats,
+    decompress,
+)

@@ -1,0 +1,229 @@
+"""Container layer: versioned stream serialization + self-delimiting frames.
+
+Stage three of the pipeline: the only place that knows the byte layout.  The
+v2 stream layout is pinned by a golden-bytes test (tests/test_codec.py) and
+specified in docs/FORMAT.md:
+
+  header  '<4sBBHQdIIQ': magic 'SZXJ' | version u8 | dtype u8 |
+          block_size u16 | n u64 | e f64 | nblocks u32 | n_nonconst u32 |
+          nmid u64
+  const bitmap  ceil(nb/8) bytes (np.packbits order)
+  mu            itemsize * nb bytes (input dtype, one per block)
+  reqlen        u8 * n_nonconst
+  L codes       2-bit * (n_nonconst * block_size), little-endian packed
+  mid stream    nmid bytes in (block, value, byteplane) order
+
+Chunked streams are sequences of frames, each framing one independent v2
+stream:
+
+  frame header '<4sBBIQ': magic 'SZXF' | version u8 | flags u8 (bit0 = last)
+               | seq u32 | payload_len u64
+"""
+from __future__ import annotations
+
+import struct
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.codec import plan as plan_mod
+from repro.core.codec.plan import Plan
+from repro.core.codec.transform import BlockEncoding, derive_layout
+
+MAGIC = b"SZXJ"
+VERSION = 2
+HEADER = struct.Struct("<4sBBHQdIIQ")
+
+FRAME_MAGIC = b"SZXF"
+FRAME_VERSION = 1
+FRAME_HEADER = struct.Struct("<4sBBIQ")
+FLAG_LAST = 0x01
+
+
+# ---------------------------------------------------------------------------
+# 2-bit code packing
+# ---------------------------------------------------------------------------
+
+def pack_2bit(codes: np.ndarray) -> np.ndarray:
+    """codes: (m,) uint8 in [0,3] -> ceil(m/4) bytes."""
+    pad = (-codes.size) % 4
+    if pad:
+        codes = np.concatenate([codes, np.zeros(pad, np.uint8)])
+    c = codes.reshape(-1, 4)
+    return (c[:, 0] | (c[:, 1] << 2) | (c[:, 2] << 4) | (c[:, 3] << 6)).astype(np.uint8)
+
+
+def unpack_2bit(raw: np.ndarray, m: int) -> np.ndarray:
+    b = raw.astype(np.uint8)
+    out = np.empty((b.size, 4), np.uint8)
+    out[:, 0] = b & 3
+    out[:, 1] = (b >> 2) & 3
+    out[:, 2] = (b >> 4) & 3
+    out[:, 3] = (b >> 6) & 3
+    return out.reshape(-1)[:m]
+
+
+# ---------------------------------------------------------------------------
+# monolithic v2 stream
+# ---------------------------------------------------------------------------
+
+def build_stream(p: Plan, enc: BlockEncoding) -> bytes:
+    """Serialize one plan + block encoding into a self-contained v2 stream."""
+    nc = ~enc.const
+    nnc = int(nc.sum())
+    itemsize = p.dtype.itemsize
+    # mid-byte mask in (block, value, byteplane) order so each value's bytes
+    # are contiguous in the stream (paper Fig. 4 layout)
+    planes_t = enc.planes.transpose(0, 2, 1)            # (nb, bs, W)
+    j = np.arange(itemsize, dtype=np.int32)[None, None, :]
+    mask = (enc.L[:, :, None] <= j) & (j < enc.nbytes[:, None, None])
+    mask &= nc[:, None, None]
+    mid_stream = planes_t[mask]                         # (nmid,) uint8
+    out = [
+        HEADER.pack(
+            MAGIC, VERSION, p.dtype.code, p.block_size, p.n, p.error_bound,
+            p.nblocks, nnc, int(mid_stream.size),
+        ),
+        np.packbits(enc.const.astype(np.uint8)).tobytes(),
+        np.ascontiguousarray(enc.mu).tobytes(),
+        enc.reqlen[nc].astype(np.uint8).tobytes(),
+        pack_2bit(enc.L[nc].reshape(-1).astype(np.uint8)).tobytes(),
+        mid_stream.tobytes(),
+    ]
+    return b"".join(out)
+
+
+def parse_stream(buf: bytes, *, backend: str = "auto") -> tuple[Plan, BlockEncoding]:
+    """Validate + deserialize a v2 stream into (plan, block encoding)."""
+    if len(buf) < HEADER.size:
+        raise ValueError("truncated SZx stream (shorter than header)")
+    magic, version, dtype_code, bs, n, e, nb, nnc, nmid = HEADER.unpack_from(buf, 0)
+    if magic != MAGIC:
+        raise ValueError("bad SZx stream header (magic mismatch)")
+    if version != VERSION:
+        raise ValueError(f"unsupported SZx stream version {version}")
+    spec = plan_mod.spec_for_code(dtype_code)           # raises on unknown code
+    if nnc > nb:
+        raise ValueError("corrupt SZx stream (n_nonconst > nblocks)")
+    if bs == 0 or nb != (n + bs - 1) // bs:
+        raise ValueError("corrupt SZx stream (block count mismatch)")
+    p = plan_mod.plan_for_stream(dtype_code, bs, n, e, backend)
+
+    nbm = (nb + 7) // 8
+    nl = (nnc * bs + 3) // 4
+    expected = HEADER.size + nbm + spec.itemsize * nb + nnc + nl + nmid
+    if len(buf) < expected:
+        raise ValueError(
+            f"truncated SZx stream ({len(buf)} bytes, expected {expected})"
+        )
+    off = HEADER.size
+    const = np.unpackbits(np.frombuffer(buf, np.uint8, nbm, off))[:nb].astype(bool)
+    off += nbm
+    mu = np.frombuffer(buf, spec.np_dtype, nb, off).copy()
+    off += spec.itemsize * nb
+    reqlen_nc = np.frombuffer(buf, np.uint8, nnc, off).astype(np.int32)
+    off += nnc
+    L_nc = unpack_2bit(np.frombuffer(buf, np.uint8, nl, off), nnc * bs)
+    off += nl
+    mid_stream = np.frombuffer(buf, np.uint8, nmid, off)
+
+    nc = ~const
+    if int(nc.sum()) != nnc:
+        raise ValueError("corrupt SZx stream (const bitmap / n_nonconst mismatch)")
+    reqlen = np.zeros(nb, np.int32)
+    reqlen[nc] = reqlen_nc
+    shift, nbytes = derive_layout(reqlen, const, spec)
+    if nbytes.max(initial=0) > spec.itemsize:
+        raise ValueError("corrupt SZx stream (reqlen exceeds dtype width)")
+    L = np.zeros((nb, bs), np.int32)
+    L[nc] = L_nc.reshape(nnc, bs)
+
+    planes_t = np.zeros((nb, bs, spec.itemsize), np.uint8)
+    j = np.arange(spec.itemsize, dtype=np.int32)[None, None, :]
+    mask = (L[:, :, None] <= j) & (j < nbytes[:, None, None])
+    mask &= nc[:, None, None]
+    if int(mask.sum()) != nmid:
+        raise ValueError("corrupt SZx stream (mid-stream length mismatch)")
+    planes_t[mask] = mid_stream
+    planes = planes_t.transpose(0, 2, 1)
+    return p, BlockEncoding(mu, const, reqlen, shift, nbytes, planes, L)
+
+
+# ---------------------------------------------------------------------------
+# self-delimiting frames (chunked streaming)
+# ---------------------------------------------------------------------------
+
+def build_frame(payload: bytes, seq: int, last: bool) -> bytes:
+    """Wrap one v2 stream as a self-delimiting frame."""
+    flags = FLAG_LAST if last else 0
+    return FRAME_HEADER.pack(FRAME_MAGIC, FRAME_VERSION, flags, seq, len(payload)) + payload
+
+
+def _read_exact(f, size: int) -> bytes:
+    data = f.read(size)
+    if len(data) != size:
+        raise ValueError(
+            f"truncated SZx frame sequence (wanted {size} bytes, got {len(data)})"
+        )
+    return data
+
+
+def iter_frames(source) -> Iterator[bytes]:
+    """Yield frame payloads from bytes, a binary file object, or an iterable
+    of frame byte strings.  Validates magic, version, sequence numbers, and
+    that the sequence terminates with a LAST-flagged frame."""
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        import io
+
+        source = io.BytesIO(source)
+    if hasattr(source, "read"):
+        yield from _iter_frames_file(source)
+        return
+    # iterable of per-frame byte strings (e.g. straight from compress_chunked)
+    seq_expected = 0
+    saw_last = False
+    for frame in source:
+        if saw_last:
+            raise ValueError("SZx frame after the LAST-flagged frame")
+        payload, last = _parse_one_frame(frame, seq_expected)
+        saw_last = last
+        seq_expected += 1
+        yield payload
+    if not saw_last:
+        raise ValueError("SZx frame sequence ended without a LAST frame")
+
+
+def _parse_one_frame(frame: bytes, seq_expected: int) -> tuple[bytes, bool]:
+    if len(frame) < FRAME_HEADER.size:
+        raise ValueError("truncated SZx frame (shorter than frame header)")
+    magic, version, flags, seq, plen = FRAME_HEADER.unpack_from(frame, 0)
+    if magic != FRAME_MAGIC:
+        raise ValueError("bad SZx frame (magic mismatch)")
+    if version != FRAME_VERSION:
+        raise ValueError(f"unsupported SZx frame version {version}")
+    if seq != seq_expected:
+        raise ValueError(f"SZx frame out of order (seq {seq}, expected {seq_expected})")
+    if len(frame) != FRAME_HEADER.size + plen:
+        raise ValueError("truncated SZx frame (payload length mismatch)")
+    return frame[FRAME_HEADER.size:], bool(flags & FLAG_LAST)
+
+
+def _iter_frames_file(f) -> Iterator[bytes]:
+    seq_expected = 0
+    while True:
+        hdr = _read_exact(f, FRAME_HEADER.size)
+        magic, version, flags, seq, plen = FRAME_HEADER.unpack(hdr)
+        if magic != FRAME_MAGIC:
+            raise ValueError("bad SZx frame (magic mismatch)")
+        if version != FRAME_VERSION:
+            raise ValueError(f"unsupported SZx frame version {version}")
+        if seq != seq_expected:
+            raise ValueError(
+                f"SZx frame out of order (seq {seq}, expected {seq_expected})"
+            )
+        yield _read_exact(f, plen)
+        seq_expected += 1
+        if flags & FLAG_LAST:
+            if f.read(1):
+                raise ValueError("SZx frame after the LAST-flagged frame")
+            return

@@ -1,0 +1,174 @@
+"""Plan layer: dtype resolution, error-bound resolution, blocking/padding.
+
+This is the first stage of the codec pipeline (paper Algorithm 1, lines 1-2):
+everything that must be decided *before* any per-block math runs.  A
+:class:`Plan` is a tiny immutable record that the transform and container
+layers consume; it is also what makes multi-dtype support principled -- the
+IEEE-754 exponent/mantissa geometry is carried explicitly instead of silently
+upcasting every input to float32.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+try:  # bfloat16 is a numpy extension dtype shipped by ml_dtypes (a jax dep)
+    import ml_dtypes
+
+    _BFLOAT16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    _BFLOAT16 = None
+
+DEFAULT_BLOCK_SIZE = 128  # paper Fig. 8: best compression-ratio/PSNR tradeoff
+
+
+@dataclass(frozen=True)
+class DtypeSpec:
+    """IEEE-754 geometry of one supported input dtype.
+
+    ``code`` is the on-stream dtype id (container header byte); the remaining
+    fields parameterize the transform: required-bit computation uses
+    ``exp_bits``/``mant_bits``, the byte-plane split uses ``itemsize``.
+    """
+
+    code: int
+    name: str
+    np_dtype: np.dtype
+    uint_dtype: np.dtype
+    itemsize: int
+    exp_bits: int
+    mant_bits: int
+    exp_bias: int
+
+    @property
+    def word_bits(self) -> int:
+        return 8 * self.itemsize
+
+
+_SPECS = [
+    DtypeSpec(0, "float32", np.dtype(np.float32), np.dtype(np.uint32), 4, 8, 23, 127),
+    DtypeSpec(1, "float64", np.dtype(np.float64), np.dtype(np.uint64), 8, 11, 52, 1023),
+    DtypeSpec(2, "float16", np.dtype(np.float16), np.dtype(np.uint16), 2, 5, 10, 15),
+]
+if _BFLOAT16 is not None:
+    _SPECS.append(DtypeSpec(3, "bfloat16", _BFLOAT16, np.dtype(np.uint16), 2, 8, 7, 127))
+
+BY_CODE = {s.code: s for s in _SPECS}
+BY_DTYPE = {s.np_dtype: s for s in _SPECS}
+
+
+def finfo(dtype):
+    """np.finfo that also understands ml_dtypes extension floats (bf16)."""
+    try:
+        return np.finfo(dtype)
+    except ValueError:
+        import ml_dtypes
+
+        return ml_dtypes.finfo(dtype)
+
+
+def spec_for(dtype) -> DtypeSpec:
+    spec = BY_DTYPE.get(np.dtype(dtype))
+    if spec is None:
+        raise TypeError(
+            f"unsupported dtype {np.dtype(dtype)}; supported: "
+            + ", ".join(s.name for s in _SPECS)
+        )
+    return spec
+
+
+def spec_for_code(code: int) -> DtypeSpec:
+    spec = BY_CODE.get(int(code))
+    if spec is None:
+        raise ValueError(f"unknown dtype code {code} in SZx stream")
+    return spec
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Resolved compression parameters for one array (or one chunk of it)."""
+
+    dtype: DtypeSpec
+    n: int                 # logical element count
+    block_size: int
+    nblocks: int
+    error_bound: float     # resolved ABSOLUTE bound (rel already applied)
+    backend: str           # kernels.ops backend for the f32 fast path
+
+    @property
+    def raw_bytes(self) -> int:
+        return self.n * self.dtype.itemsize
+
+
+def resolve_error_bound(x: np.ndarray, error_bound: float, mode: str, spec: DtypeSpec) -> float:
+    """Resolve the user bound to an absolute e > 0 (paper REL semantics)."""
+    if mode == "rel":
+        rng = float(x.max() - x.min()) if x.size else 0.0
+        e = float(error_bound) * rng
+        if e == 0.0:
+            e = float(finfo(spec.np_dtype).tiny)
+    elif mode == "abs":
+        e = float(error_bound)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    if e <= 0:
+        raise ValueError("error bound must be positive")
+    return e
+
+
+def make_plan(
+    x,
+    error_bound: float,
+    *,
+    mode: str = "abs",
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    backend: str = "auto",
+    dtype=None,
+) -> tuple[Plan, np.ndarray]:
+    """Build the plan for ``x`` and return ``(plan, x_as_plan_dtype)``.
+
+    ``dtype`` forces the codec dtype (the input is cast); by default the
+    input's own dtype is kept -- no silent upcast.
+    """
+    x = np.asarray(x)
+    if dtype is not None:
+        x = x.astype(np.dtype(dtype), copy=False)
+    if not np.issubdtype(np.asarray(x).dtype, np.floating) and np.asarray(x).dtype not in BY_DTYPE:
+        raise TypeError(f"SZx compresses float arrays, got {x.dtype}")
+    spec = spec_for(x.dtype)
+    if not 1 <= block_size <= 0xFFFF:
+        raise ValueError(f"block_size {block_size} out of range [1, 65535]")
+    e = resolve_error_bound(x, error_bound, mode, spec)
+    n = int(x.size)
+    nblocks = max((n + block_size - 1) // block_size, 0)
+    return Plan(spec, n, block_size, nblocks, e, backend), x
+
+
+def plan_for_stream(dtype_code: int, block_size: int, n: int, e: float, backend: str) -> Plan:
+    """Reconstruct the plan of an existing stream (decode side)."""
+    spec = spec_for_code(dtype_code)
+    nblocks = max((n + block_size - 1) // block_size, 0)
+    return Plan(spec, int(n), int(block_size), nblocks, float(e), backend)
+
+
+def to_blocks(x: np.ndarray, plan: Plan) -> np.ndarray:
+    """Flatten and pad (edge-replicate) to (nblocks, block_size)."""
+    flat = np.asarray(x, plan.dtype.np_dtype).reshape(-1)
+    pad = (-flat.size) % plan.block_size
+    if pad:
+        flat = np.concatenate([flat, np.full(pad, flat[-1], plan.dtype.np_dtype)])
+    return flat.reshape(-1, plan.block_size)
+
+
+def float_exponent_of(e: float) -> int:
+    """Exact floor(log2 e) of a positive python float (Formula 4's p(e))."""
+    m, ex = math.frexp(e)  # e = m * 2**ex with 0.5 <= m < 1
+    return ex - 1
+
+
+def chunk_elements(plan_block_size: int, chunk_bytes: int, itemsize: int) -> int:
+    """Largest chunk element count <= chunk_bytes, aligned to block_size."""
+    elems = max(chunk_bytes // itemsize, plan_block_size)
+    return max(elems // plan_block_size, 1) * plan_block_size

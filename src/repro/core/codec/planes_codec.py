@@ -1,0 +1,88 @@
+"""Fixed-shape front-end: PlanesCodec (szx-planes, in-graph).
+
+The static-shape TPU variant of SZx used *inside* jit/GSPMD programs
+(gradient compression, KV-cache compression) where XLA cannot represent
+data-dependent output sizes.  It keeps the paper's structure -- block mu,
+radius-exponent-derived bit budget, byte-aligned planes -- and trades the
+per-value XOR leading-byte elision for a static plane count P in {1,2,3}.
+
+All block math dispatches through ``repro.kernels.ops`` so in-graph callers
+(under jit / shard_map / scan) and host callers share one implementation.
+Consumers (``repro.core.grad_compress``, ``repro.serve.engine``) go through
+this class instead of reaching into ``repro.kernels.ref`` directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PlanesCodec:
+    """Configured fixed-shape codec; instances are cheap, hashable, and safe
+    to close over inside jit."""
+
+    num_planes: int = 1
+    backend: str = "jax"       # kernels.ops planes dispatch
+
+    def __post_init__(self):
+        if not 1 <= self.num_planes <= 3:
+            raise ValueError("szx-planes supports 1..3 byte planes")
+
+    # ----------------------------------------------------------- block level
+    def encode_blocks(self, xb) -> tuple:
+        """xb (..., bs) f32 -> (mu (...,), sexp (...,) int32, planes (P, ..., bs))."""
+        from repro.kernels import ops
+
+        return ops.planes_encode(xb, self.num_planes, backend=self.backend)
+
+    def decode_blocks(self, mu, sexp, planes):
+        """Inverse of :meth:`encode_blocks` -> (..., bs) f32."""
+        from repro.kernels import ops
+
+        return ops.planes_decode(mu, sexp, planes, backend=self.backend)
+
+    # ------------------------------------------------------------ leaf level
+    def encode_last_axis(self, x, block: int) -> dict[str, Any]:
+        """Block along the LAST axis only, leading dims untouched.
+
+        Keeping the leaf shape keeps every encode op local to its shard under
+        GSPMD (flattening would all-gather the full-precision array first).
+        Zero-pads the last axis to a whole number of blocks.
+        """
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim == 0:
+            x = x[None]
+        pad = (-x.shape[-1]) % block
+        if pad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        xb = x.reshape(x.shape[:-1] + (-1, block))
+        mu, sexp, planes = self.encode_blocks(xb)
+        return {"mu": mu, "sexp": sexp, "planes": planes}
+
+    def decode_last_axis(self, enc: dict[str, Any], shape, dtype):
+        """Inverse of :meth:`encode_last_axis`, trimming the pad."""
+        xb = self.decode_blocks(enc["mu"], enc["sexp"], enc["planes"])
+        last = shape[-1] if shape else 1
+        out = xb.reshape(xb.shape[:-2] + (-1,))[..., :last]
+        return out.reshape(shape).astype(dtype)
+
+    # -------------------------------------------------------------- flat API
+    def encode_flat(self, x, block_size: int) -> tuple:
+        """Flatten + edge-pad to blocks; returns (mu, sexp, planes) with
+        (nb,)-shaped stats -- the layout of ``repro.core.planes``."""
+        n = x.size
+        flat = jnp.ravel(x).astype(jnp.float32)
+        pad = (-n) % block_size
+        if pad:
+            flat = jnp.pad(flat, (0, pad), mode="edge")
+        xb = flat.reshape(-1, block_size)
+        return self.encode_blocks(xb)
+
+    # ------------------------------------------------------------ accounting
+    def wire_bytes_per_value(self, block: int) -> float:
+        """Bytes/value moved by a collective (vs 4.0 uncompressed fp32):
+        P planes plus f32 mu + int16 sexp per block."""
+        return self.num_planes + 6.0 / block

@@ -1,0 +1,183 @@
+"""Byte-stream front-end: SZxCodec (monolithic + chunked streaming).
+
+This is the host-facing API over the plan -> transform -> container pipeline.
+``compress``/``decompress`` handle whole arrays; ``compress_chunked`` /
+``decompress_chunked`` process arbitrarily large arrays in bounded-memory
+chunks, each chunk an independent, self-delimiting frame (the paper's
+Fig. 13 checkpoint dump/load use case at scale).  Chunk payloads are
+bit-identical to compressing the same slice monolithically, so the chunked
+path inherits every error-bound guarantee of the monolithic one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.codec import container, plan as plan_mod, transform
+from repro.core.codec.plan import DEFAULT_BLOCK_SIZE, Plan
+
+DEFAULT_CHUNK_BYTES = 64 << 20     # 64 MB of input per frame
+
+
+@dataclass(frozen=True)
+class CompressionStats:
+    n: int
+    raw_bytes: int
+    compressed_bytes: int
+    ratio: float
+    constant_block_fraction: float
+    mean_bytes_per_value: float
+    error_bound: float
+
+
+@dataclass(frozen=True)
+class SZxCodec:
+    """Configured byte-stream codec; instances are cheap and immutable."""
+
+    block_size: int = DEFAULT_BLOCK_SIZE
+    backend: str = "auto"          # kernels.ops backend for the f32 path
+
+    # ------------------------------------------------------------- monolithic
+    def compress(self, x, error_bound: float, *, mode: str = "abs", dtype=None) -> bytes:
+        """Compress an array (f32/f64/f16/bf16) into one v2 stream.
+
+        mode: 'abs' -- `error_bound` is the absolute bound e.
+              'rel' -- value-range-relative: e = error_bound * (max - min).
+        dtype: optionally force the codec dtype (input is cast first).
+        """
+        p, xt = plan_mod.make_plan(
+            x, error_bound, mode=mode, block_size=self.block_size,
+            backend=self.backend, dtype=dtype,
+        )
+        return self._compress_planned(xt, p)
+
+    def _compress_planned(self, xt: np.ndarray, p: Plan) -> bytes:
+        xb = plan_mod.to_blocks(xt, p)
+        enc = transform.encode_blocks(xb, p)
+        return container.build_stream(p, enc)
+
+    def decompress(self, buf: bytes) -> np.ndarray:
+        """Decompress one v2 stream -> flat array in the stream's dtype."""
+        p, enc = container.parse_stream(buf, backend=self.backend)
+        xb = transform.decode_blocks(enc, p)
+        return np.asarray(xb).reshape(-1)[: p.n]
+
+    def compress_with_stats(self, x, error_bound: float, **kw) -> tuple[bytes, CompressionStats]:
+        buf = self.compress(x, error_bound, **kw)
+        _, _, _, _, n, e, nb, nnc, _ = container.HEADER.unpack_from(buf, 0)
+        itemsize = plan_mod.spec_for_code(buf[5]).itemsize
+        return buf, CompressionStats(
+            n=int(n),
+            raw_bytes=itemsize * int(n),
+            compressed_bytes=len(buf),
+            ratio=itemsize * int(n) / len(buf),
+            constant_block_fraction=1.0 - nnc / max(nb, 1),
+            mean_bytes_per_value=len(buf) / max(int(n), 1),
+            error_bound=float(e),
+        )
+
+    # ---------------------------------------------------------------- chunked
+    def compress_chunked(
+        self,
+        x,
+        error_bound: float,
+        *,
+        mode: str = "abs",
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        dtype=None,
+    ) -> Iterator[bytes]:
+        """Yield self-delimiting frames covering ``x`` in order.
+
+        The error bound is resolved over the FULL array first (so 'rel' mode
+        matches the monolithic stream), then each block-aligned chunk is
+        compressed independently: peak memory is O(chunk), and each frame
+        payload is bit-identical to ``compress(chunk, e_abs)``.
+        """
+        x = np.asarray(x)
+        if dtype is not None:
+            x = x.astype(np.dtype(dtype), copy=False)
+        spec = plan_mod.spec_for(x.dtype)
+        e = plan_mod.resolve_error_bound(x, error_bound, mode, spec)
+        flat = x.reshape(-1)
+        per_chunk = plan_mod.chunk_elements(self.block_size, chunk_bytes, spec.itemsize)
+        nchunks = max((flat.size + per_chunk - 1) // per_chunk, 1)
+        for i in range(nchunks):
+            sl = flat[i * per_chunk : (i + 1) * per_chunk]
+            payload = self.compress(sl, e, mode="abs")
+            yield container.build_frame(payload, i, last=(i == nchunks - 1))
+
+    def decompress_chunked(self, frames, *, n: int | None = None) -> np.ndarray:
+        """Decompress a frame sequence -> flat array.
+
+        ``frames`` may be concatenated bytes, a binary file object, or an
+        iterable of frame byte strings (e.g. from :meth:`compress_chunked`).
+        Pass ``n`` (the total element count, e.g. from a manifest) to
+        preallocate the output and keep peak memory at O(n + chunk);
+        without it the decoded chunks are buffered and concatenated,
+        peaking at ~2x the output size.
+        """
+        parts: list[np.ndarray] = []
+        out = None
+        spec_code = None
+        filled = 0
+        for payload in container.iter_frames(frames):
+            part = self.decompress(payload)
+            if spec_code is None:
+                spec_code = payload[5]
+                if n is not None:
+                    out = np.empty(n, part.dtype)
+            elif payload[5] != spec_code:
+                raise ValueError("SZx frame sequence mixes dtypes")
+            if out is not None:
+                if filled + part.size > n:
+                    raise ValueError(
+                        f"SZx frame sequence longer than expected ({n} elements)"
+                    )
+                out[filled : filled + part.size] = part
+            else:
+                parts.append(part)
+            filled += part.size
+        if spec_code is None:
+            raise ValueError("empty SZx frame sequence")
+        if out is not None:
+            if filled != n:
+                raise ValueError(
+                    f"SZx frame sequence has {filled} elements, expected {n}"
+                )
+            return out
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def dump_chunked(self, x, fileobj, error_bound: float, **kw) -> int:
+        """Stream ``compress_chunked`` frames straight to a file; returns
+        bytes written.  Peak memory stays O(chunk)."""
+        written = 0
+        for frame in self.compress_chunked(x, error_bound, **kw):
+            fileobj.write(frame)
+            written += len(frame)
+        return written
+
+    def load_chunked(self, fileobj, *, n: int | None = None) -> np.ndarray:
+        """Read + decompress a frame sequence from a file object.  Pass ``n``
+        (total element count) to preallocate: peak memory O(n + chunk)."""
+        return self.decompress_chunked(fileobj, n=n)
+
+
+# functional API (compat shim repro.core.szx re-exports these)
+def compress(x, error_bound: float, *, mode: str = "abs",
+             block_size: int = DEFAULT_BLOCK_SIZE, backend: str = "auto",
+             dtype=None) -> bytes:
+    return SZxCodec(block_size, backend).compress(x, error_bound, mode=mode, dtype=dtype)
+
+
+def decompress(buf: bytes, *, backend: str = "auto") -> np.ndarray:
+    return SZxCodec(backend=backend).decompress(buf)
+
+
+def compress_with_stats(x, error_bound: float, *, mode: str = "abs",
+                        block_size: int = DEFAULT_BLOCK_SIZE, backend: str = "auto",
+                        dtype=None) -> tuple[bytes, CompressionStats]:
+    return SZxCodec(block_size, backend).compress_with_stats(
+        x, error_bound, mode=mode, dtype=dtype
+    )

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels import ref as kref
+from repro import compat
+from repro.core.codec import PlanesCodec
 
 DEFAULT_BLOCK = 64
 
@@ -36,23 +37,14 @@ def _encode_leaf(g, num_planes, block):
     all-gather the full-precision gradient before encoding (measured +11 GB
     of intra-pod collectives per step on llama -- EXPERIMENTS section Perf);
     keeping the leaf shape keeps every encode op local to its shard."""
-    g = g.astype(jnp.float32)
-    if g.ndim == 0:
-        g = g[None]
-    last = g.shape[-1]
-    pad = (-last) % block
-    if pad:
-        g = jnp.pad(g, [(0, 0)] * (g.ndim - 1) + [(0, pad)])
-    xb = g.reshape(g.shape[:-1] + (-1, block))
-    mu, sexp, planes = kref.planes_encode_ref(xb, num_planes)
-    return {"mu": mu, "sexp": sexp.astype(jnp.int16), "planes": planes}
+    enc = PlanesCodec(num_planes).encode_last_axis(g, block)
+    enc["sexp"] = enc["sexp"].astype(jnp.int16)   # wire dtype: halve sexp bytes
+    return enc
 
 
 def _decode_leaf(enc, shape, dtype, block):
-    xb = kref.planes_decode_ref(enc["mu"], enc["sexp"].astype(jnp.int32), enc["planes"])
-    last = shape[-1] if shape else 1
-    out = xb.reshape(xb.shape[:-2] + (-1,))[..., :last]
-    return out.reshape(shape).astype(dtype)
+    enc = dict(enc, sexp=enc["sexp"].astype(jnp.int32))
+    return PlanesCodec(enc["planes"].shape[0]).decode_last_axis(enc, shape, dtype)
 
 
 def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1, block: int = DEFAULT_BLOCK):
@@ -60,7 +52,7 @@ def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1, block: i
 
     Returns the mean of the decoded per-member gradients plus this member's
     compression residual (for error feedback)."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
 
     def leaf(g):
         enc = _encode_leaf(g, num_planes, block)
@@ -81,4 +73,4 @@ def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1, block: i
 
 def wire_bytes_per_value(num_planes: int, block: int = DEFAULT_BLOCK) -> float:
     """Bytes/gradient-value moved over the pod axis (vs 4.0 uncompressed)."""
-    return num_planes + 6.0 / block
+    return PlanesCodec(num_planes).wire_bytes_per_value(block)

@@ -19,13 +19,12 @@ feedback path (grad compression) -- see repro.core.grad_compress.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.core.codec import PlanesCodec
 
 DEFAULT_BLOCK_SIZE = 128
 
@@ -45,19 +44,13 @@ def wire_bytes(enc: PlanesEncoded) -> int:
 
 def encode(x: jax.Array, *, num_planes: int = 1, block_size: int = DEFAULT_BLOCK_SIZE) -> PlanesEncoded:
     """Compress a flat f32 array into the fixed-shape plane representation."""
-    n = x.size
-    flat = jnp.ravel(x).astype(jnp.float32)
-    pad = (-n) % block_size
-    if pad:
-        flat = jnp.pad(flat, (0, pad), mode="edge")
-    xb = flat.reshape(-1, block_size)
-    mu, sexp, planes = ref.planes_encode_ref(xb, num_planes)
-    return PlanesEncoded(mu, sexp, planes, n, block_size)
+    mu, sexp, planes = PlanesCodec(num_planes).encode_flat(x, block_size)
+    return PlanesEncoded(mu, sexp, planes, x.size, block_size)
 
 
 def decode(enc: PlanesEncoded, shape=None, dtype=jnp.float32) -> jax.Array:
     """Reconstruct the (optionally reshaped) array."""
-    xb = ref.planes_decode_ref(enc.mu, enc.sexp, enc.planes)
+    xb = PlanesCodec(enc.planes.shape[0]).decode_blocks(enc.mu, enc.sexp, enc.planes)
     flat = xb.reshape(-1)[: enc.n]
     if shape is not None:
         flat = flat.reshape(shape)

@@ -1,74 +1,28 @@
-"""SZx (UFZ) -- faithful error-bounded lossy compressor, JAX/TPU-adapted.
+"""Compat shim over ``repro.core.codec`` -- the original float32 SZx API.
 
-Implements Algorithm 1 of the paper end-to-end:
-  * fixed-size 1D blocks, constant-block detection via mu = (min+max)/2
-  * required-bit computation from the radius/error-bound exponents (Formula 4)
-  * Solution-C bitwise right-shift byte alignment (Formula 5)
-  * XOR identical-leading-byte elision with a 2-bit/value code
-  * variable-length mid-byte stream
+The monolithic encoder that used to live here was decomposed into the layered
+``repro.core.codec`` package (plan / transform / container + SZxCodec /
+PlanesCodec front-ends).  This module keeps the old public surface working
+unchanged: float32-only byte-stream compression with the exact v2 stream
+layout (golden-bytes pinned in tests/test_codec.py).
 
-The fixed-shape array transforms (block stats, shift, XOR-lead, byte-plane
-split) run through ``repro.kernels.ops`` (Pallas kernel or jnp oracle); the
-variable-length compaction/serialization is host-side numpy, mirroring how a
-TPU deployment would stream fixed-shape kernel output through a host DMA and
-compact it on the fly.
-
-Stream layout (little-endian):
-  magic 'SZXJ' | version u8 | dtype u8 | block_size u16 | n u64 | e f64
-  | nblocks u32 | n_nonconst u32 | nmid u64
-  | const bitmap ceil(nb/8) | mu f32*nb | reqlen u8*nnc
-  | L 2-bit*(nnc*bs) | mid-byte stream
+New code should use :class:`repro.core.codec.SZxCodec`, which adds chunked
+streaming and native f64/f16/bf16 support.
 """
 from __future__ import annotations
 
-import struct
-from dataclasses import dataclass
-
 import numpy as np
 
-MAGIC = b"SZXJ"
-VERSION = 2
-_HDR = struct.Struct("<4sBBHQdIIQ")
+from repro.core import codec as _codec
+from repro.core.codec import container as _container
+from repro.core.codec import plan as _plan
+from repro.core.codec.szx_codec import CompressionStats  # noqa: F401  (re-export)
 
-DEFAULT_BLOCK_SIZE = 128  # paper Fig. 8: best compression-ratio/PSNR tradeoff
+MAGIC = _container.MAGIC
+VERSION = _container.VERSION
+_HDR = _container.HEADER
 
-
-def _to_blocks(x: np.ndarray, bs: int) -> tuple[np.ndarray, int]:
-    """Flatten and pad (edge-replicate) to a whole number of blocks."""
-    flat = np.asarray(x, np.float32).reshape(-1)
-    n = flat.size
-    pad = (-n) % bs
-    if pad:
-        flat = np.concatenate([flat, np.full(pad, flat[-1], np.float32)])
-    return flat.reshape(-1, bs), n
-
-
-def _encode_arrays(xb: np.ndarray, e: float, backend: str):
-    """Run the fixed-shape transform; returns numpy arrays."""
-    from repro.kernels import ops
-
-    mu, radius, const, reqlen, shift, nbytes = ops.block_stats(xb, e, backend=backend)
-    planes, L, mid = ops.pack(xb, mu, shift, nbytes, backend=backend)
-    return tuple(np.asarray(a) for a in (mu, const, reqlen, shift, nbytes, planes, L, mid))
-
-
-def _pack_2bit(codes: np.ndarray) -> np.ndarray:
-    """codes: (m,) uint8 in [0,3] -> ceil(m/4) bytes."""
-    pad = (-codes.size) % 4
-    if pad:
-        codes = np.concatenate([codes, np.zeros(pad, np.uint8)])
-    c = codes.reshape(-1, 4)
-    return (c[:, 0] | (c[:, 1] << 2) | (c[:, 2] << 4) | (c[:, 3] << 6)).astype(np.uint8)
-
-
-def _unpack_2bit(raw: np.ndarray, m: int) -> np.ndarray:
-    b = raw.astype(np.uint8)
-    out = np.empty((b.size, 4), np.uint8)
-    out[:, 0] = b & 3
-    out[:, 1] = (b >> 2) & 3
-    out[:, 2] = (b >> 4) & 3
-    out[:, 3] = (b >> 6) & 3
-    return out.reshape(-1)[:m]
+DEFAULT_BLOCK_SIZE = _plan.DEFAULT_BLOCK_SIZE  # paper Fig. 8 tradeoff
 
 
 def compress(
@@ -79,119 +33,21 @@ def compress(
     block_size: int = DEFAULT_BLOCK_SIZE,
     backend: str = "auto",
 ) -> bytes:
-    """Compress an array of float32 values.
-
-    mode: 'abs' -- `error_bound` is the absolute bound e.
-          'rel' -- value-range-relative: e = error_bound * (max(x) - min(x)),
-                   matching the paper's REL bounds.
-    backend: 'auto' | 'jax' | 'kernel' | 'numpy' (see repro.kernels.ops).
-    """
-    x = np.asarray(x, np.float32)
-    if mode == "rel":
-        rng = float(x.max() - x.min()) if x.size else 0.0
-        e = float(error_bound) * rng
-        if e == 0.0:
-            e = float(np.finfo(np.float32).tiny)
-    elif mode == "abs":
-        e = float(error_bound)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    if e <= 0:
-        raise ValueError("error bound must be positive")
-
-    xb, n = _to_blocks(x, block_size)
-    nb = xb.shape[0]
-    mu, const, reqlen, shift, nbytes, planes, L, mid = _encode_arrays(xb, e, backend)
-
-    nc = ~const
-    nnc = int(nc.sum())
-    # mid-byte mask in (block, value, byteplane) order so each value's bytes
-    # are contiguous in the stream (paper Fig. 4 layout)
-    planes_t = planes.transpose(0, 2, 1)                        # (nb, bs, 4)
-    j = np.arange(4, dtype=np.int32)[None, None, :]
-    mask = (L[:, :, None] <= j) & (j < nbytes[:, None, None])
-    mask &= nc[:, None, None]
-    mid_stream = planes_t[mask]                                  # (nmid,) uint8
-
-    out = [
-        _HDR.pack(
-            MAGIC, VERSION, 0, block_size, n, e, nb, nnc, int(mid_stream.size)
-        ),
-        np.packbits(const.astype(np.uint8)).tobytes(),
-        mu.astype(np.float32).tobytes(),
-        reqlen[nc].astype(np.uint8).tobytes(),
-        _pack_2bit(L[nc].reshape(-1).astype(np.uint8)).tobytes(),
-        mid_stream.tobytes(),
-    ]
-    return b"".join(out)
+    """Compress an array of float32 values (other dtypes are cast, as the
+    original monolith did; use SZxCodec for native multi-dtype streams)."""
+    return _codec.compress(
+        np.asarray(x, np.float32), error_bound,
+        mode=mode, block_size=block_size, backend=backend,
+    )
 
 
 def decompress(buf: bytes, *, backend: str = "auto") -> np.ndarray:
-    """Decompress a stream produced by :func:`compress` -> flat float32 array."""
-    from repro.kernels import ops
-
-    if len(buf) < _HDR.size:
-        raise ValueError("truncated SZx stream")
-    magic, version, dtype, bs, n, e, nb, nnc, nmid = _HDR.unpack_from(buf, 0)
-    if magic != MAGIC or version != VERSION or dtype != 0:
-        raise ValueError("bad SZx stream header")
-    off = _HDR.size
-
-    nbm = (nb + 7) // 8
-    const = np.unpackbits(np.frombuffer(buf, np.uint8, nbm, off))[:nb].astype(bool)
-    off += nbm
-    mu = np.frombuffer(buf, np.float32, nb, off).copy()
-    off += 4 * nb
-    reqlen_nc = np.frombuffer(buf, np.uint8, nnc, off).astype(np.int32)
-    off += nnc
-    nl = (nnc * bs + 3) // 4
-    L_nc = _unpack_2bit(np.frombuffer(buf, np.uint8, nl, off), nnc * bs)
-    off += nl
-    mid_stream = np.frombuffer(buf, np.uint8, nmid, off)
-
-    nc = ~const
-    reqlen = np.zeros(nb, np.int32)
-    reqlen[nc] = reqlen_nc
-    shift = np.where(const, 0, (8 - reqlen % 8) % 8).astype(np.int32)
-    nbytes = np.where(const, 0, (reqlen + shift) // 8).astype(np.int32)
-    L = np.zeros((nb, bs), np.int32)
-    L[nc] = L_nc.reshape(nnc, bs)
-
-    planes_t = np.zeros((nb, bs, 4), np.uint8)
-    j = np.arange(4, dtype=np.int32)[None, None, :]
-    mask = (L[:, :, None] <= j) & (j < nbytes[:, None, None])
-    mask &= nc[:, None, None]
-    planes_t[mask] = mid_stream
-    planes = planes_t.transpose(0, 2, 1)
-
-    x = np.asarray(ops.unpack(planes, mu, shift, nbytes, L, backend=backend))
-    return x.reshape(-1)[:n]
-
-
-@dataclass(frozen=True)
-class CompressionStats:
-    n: int
-    raw_bytes: int
-    compressed_bytes: int
-    ratio: float
-    constant_block_fraction: float
-    mean_bytes_per_value: float
-    error_bound: float
+    """Decompress a stream produced by :func:`compress` -> flat float32."""
+    return _codec.decompress(buf, backend=backend)
 
 
 def compress_with_stats(x, error_bound, **kw) -> tuple[bytes, CompressionStats]:
-    x = np.asarray(x, np.float32)
-    buf = compress(x, error_bound, **kw)
-    magic, version, dtype, bs, n, e, nb, nnc, nmid = _HDR.unpack_from(buf, 0)
-    return buf, CompressionStats(
-        n=int(n),
-        raw_bytes=4 * int(n),
-        compressed_bytes=len(buf),
-        ratio=4.0 * int(n) / len(buf),
-        constant_block_fraction=1.0 - nnc / max(nb, 1),
-        mean_bytes_per_value=len(buf) / max(int(n), 1),
-        error_bound=float(e),
-    )
+    return _codec.compress_with_stats(np.asarray(x, np.float32), error_bound, **kw)
 
 
 def roundtrip_max_error(x, error_bound, **kw) -> float:

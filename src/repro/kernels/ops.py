@@ -117,6 +117,44 @@ def _unpack_np(planes, mu, shift, nbytes, L):
 
 
 # --------------------------------------------------------------------------
+# szx-planes numpy mirrors (bit-identical to ref.py)
+# --------------------------------------------------------------------------
+
+def _planes_encode_np(xb, num_planes):
+    assert 1 <= num_planes <= 3, "szx-planes supports 1..3 byte planes"
+    xb = np.asarray(xb, np.float32)
+    mn = xb.min(axis=-1)
+    mx = xb.max(axis=-1)
+    mu = np.float32(0.5) * (mn + mx)
+    radius = np.maximum(mx - mu, mu - mn)
+    E = _np_exponent(radius)
+    nbits = 8 * num_planes
+    sexp = (nbits - 2) - E
+    v = xb - mu[..., None]
+    scale = np.exp2(sexp.astype(np.float32))[..., None]
+    lim = np.float32(2.0 ** (nbits - 1))
+    q = np.clip(np.rint(v * scale), -lim, lim - 1).astype(np.int32)
+    uq = q.astype(np.uint32)
+    planes = np.stack(
+        [((uq >> np.uint32(8 * p)) & np.uint32(0xFF)).astype(np.uint8) for p in range(num_planes)],
+        axis=0,
+    )
+    return mu, sexp, planes
+
+
+def _planes_decode_np(mu, sexp, planes):
+    num_planes = planes.shape[0]
+    assert num_planes <= 3, "szx-planes supports 1..3 byte planes"
+    nbits = 8 * num_planes
+    uq = np.zeros(planes.shape[1:], np.int32)
+    for p in range(num_planes):
+        uq = uq | (planes[p].astype(np.int32) << (8 * p))
+    q = np.where(uq >= (1 << (nbits - 1)), uq - (1 << nbits), uq).astype(np.float32)
+    v = q * np.exp2(-np.asarray(sexp, np.int32).astype(np.float32))[..., None]
+    return v + np.asarray(mu, np.float32)[..., None]
+
+
+# --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
 
@@ -151,6 +189,28 @@ def pack(xb, mu, shift, nbytes, *, backend: str = "auto"):
         jnp.asarray(mu, jnp.float32),
         jnp.asarray(shift, jnp.int32),
         jnp.asarray(nbytes, jnp.int32),
+    )
+
+
+def planes_encode(xb, num_planes: int, *, backend: str = "auto"):
+    """szx-planes fixed-plane encode (see kernels.ref.planes_encode_ref).
+
+    The jax path calls the oracle untraced -- in-graph callers (jit /
+    shard_map / scan bodies) stage it into their own program; there is no
+    Pallas kernel for planes yet, so 'kernel' also routes to the oracle.
+    """
+    if _resolve(backend) == "numpy":
+        return _planes_encode_np(xb, num_planes)
+    return ref.planes_encode_ref(jnp.asarray(xb, jnp.float32), num_planes)
+
+
+def planes_decode(mu, sexp, planes, *, backend: str = "auto"):
+    """Inverse of :func:`planes_encode`."""
+    if _resolve(backend) == "numpy":
+        return _planes_decode_np(mu, sexp, planes)
+    return ref.planes_decode_ref(
+        jnp.asarray(mu, jnp.float32), jnp.asarray(sexp, jnp.int32),
+        jnp.asarray(planes, jnp.uint8),
     )
 
 

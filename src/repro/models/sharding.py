@@ -13,6 +13,8 @@ import threading
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 _state = threading.local()
 
 
@@ -63,7 +65,7 @@ def rules_active() -> bool:
 
 def shard_activation(x, logical_axes):
     ctx = getattr(_state, "ctx", None)
-    if ctx is None:
+    if ctx is None or not compat.sharding_hints_supported():
         return x
     mesh, rules = ctx
     axes = []

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,        # (stage_params, x) -> y   (per-stage compute)
@@ -73,7 +75,7 @@ def pipeline_apply(
         # broadcasts them so the P() out_spec is truthful
         return jax.lax.psum(outs, stage_axis)
 
-    return jax.shard_map(
+    return shard_map(
         run,
         mesh=mesh,
         in_specs=(P(stage_axis), P()),

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.kernels import ref as kref
+from repro.core.codec import PlanesCodec
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.sharding import rules_active, shard_activation as _sa
@@ -50,13 +50,17 @@ def _reduce_scores(s):
 # ---------------------------------------------------------------------------
 
 def _kv_encode(x, num_planes: int):
-    """x: (..., hd) -> (mu f32, sexp int8, planes uint8 (P, ..., hd))."""
-    mu, sexp, planes = kref.planes_encode_ref(x.astype(jnp.float32), num_planes)
+    """x: (..., hd) -> (mu f32, sexp int8, planes uint8 (P, ..., hd)).
+
+    The head_dim axis IS the block, so this is PlanesCodec at block level;
+    sexp is clipped to int8 for the cache slab (HBM bytes are the point)."""
+    mu, sexp, planes = PlanesCodec(num_planes).encode_blocks(x.astype(jnp.float32))
     return mu, jnp.clip(sexp, -127, 127).astype(jnp.int8), planes
 
 
 def _kv_decode(mu, sexp, planes, dtype):
-    return kref.planes_decode_ref(mu, sexp.astype(jnp.int32), planes).astype(dtype)
+    codec = PlanesCodec(planes.shape[0])
+    return codec.decode_blocks(mu, sexp.astype(jnp.int32), planes).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

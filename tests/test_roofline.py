@@ -6,6 +6,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro.compat import compiled_cost_analysis
 from repro.roofline import analysis, hlo_cost
 
 
@@ -33,8 +34,10 @@ def test_loop_aware_flops_exact():
 
 def test_xla_cost_analysis_ignores_trip_count():
     """Documents WHY hlo_cost exists: XLA counts scan bodies once."""
-    a = _scan_matmul(4).cost_analysis()["flops"]
-    b = _scan_matmul(8).cost_analysis()["flops"]
+    # cost_analysis() returns a dict on older JAX and a 1-element list of
+    # dicts on current JAX; compiled_cost_analysis normalizes both
+    a = compiled_cost_analysis(_scan_matmul(4))["flops"]
+    b = compiled_cost_analysis(_scan_matmul(8))["flops"]
     assert a == b                     # broken-by-design for our purpose
 
 

@@ -1,0 +1,103 @@
+"""CI perf-regression gate for the codec benchmarks.
+
+Compares a freshly generated ``chunked_dump_load`` JSON (``benchmarks.run
+chunked_dump_load`` with ``SZX_BENCH_JSON`` pointing somewhere disposable)
+against a committed baseline and exits non-zero if, for any kind present in
+the baseline:
+
+  * compression or decompression throughput dropped more than ``--max-drop``
+    (default 30%), or
+  * the compression ratio drifted more than ``--max-cr-drift`` (default 1%)
+    in either direction.
+
+CR depends on the synthetic input length, so the two files must have been
+produced at the same ``n``; a mismatch is an error (regenerate the baseline
+with the same ``SZX_BENCH_N``).
+
+Usage (what .github/workflows/ci.yml runs):
+
+    SZX_BENCH_N=4194304 SZX_BENCH_JSON=fresh.json \
+        python -m benchmarks.run chunked_dump_load
+    python -m benchmarks.check_regression \
+        --baseline benchmarks/BENCH_codec_smoke.json --fresh fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_codec.json")
+THROUGHPUT_KEYS = ("comp_mbs", "decomp_mbs")
+
+
+def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float) -> list[str]:
+    """Return a list of human-readable regression messages (empty = pass)."""
+    errors: list[str] = []
+    base = baseline.get("chunked_dump_load", {})
+    new = fresh.get("chunked_dump_load", {})
+    if not base:
+        return ["baseline has no chunked_dump_load section"]
+    if not new:
+        return ["fresh results have no chunked_dump_load section"]
+    if base.get("n") != new.get("n"):
+        return [
+            f"input size mismatch: baseline n={base.get('n')}, fresh "
+            f"n={new.get('n')} (regenerate the baseline at this SZX_BENCH_N)"
+        ]
+    kinds = [k for k, v in base.items() if isinstance(v, dict)]
+    if not kinds:
+        return ["baseline chunked_dump_load section has no benchmark kinds"]
+    for kind in kinds:
+        got = new.get(kind)
+        if not isinstance(got, dict):
+            errors.append(f"{kind}: missing from fresh results")
+            continue
+        for key in THROUGHPUT_KEYS:
+            b, f = float(base[kind][key]), float(got[key])
+            if f < b * (1.0 - max_drop):
+                errors.append(
+                    f"{kind}.{key}: {f:.1f} MB/s is more than "
+                    f"{max_drop:.0%} below the baseline {b:.1f} MB/s"
+                )
+        b_cr, f_cr = float(base[kind]["cr"]), float(got["cr"])
+        if abs(f_cr - b_cr) > max_cr_drift * b_cr:
+            errors.append(
+                f"{kind}.cr: {f_cr:.4f} drifted more than "
+                f"{max_cr_drift:.0%} from the baseline {b_cr:.4f}"
+            )
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed BENCH JSON to compare against")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH JSON (SZX_BENCH_JSON output)")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="max tolerated fractional throughput drop (default 0.30)")
+    ap.add_argument("--max-cr-drift", type=float, default=0.01,
+                    help="max tolerated fractional CR drift (default 0.01)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errors = compare(
+        baseline, fresh, max_drop=args.max_drop, max_cr_drift=args.max_cr_drift
+    )
+    for msg in errors:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    if errors:
+        return 1
+    kinds = [k for k, v in fresh["chunked_dump_load"].items() if isinstance(v, dict)]
+    print(f"perf gate OK: {', '.join(kinds)} within {args.max_drop:.0%} "
+          f"throughput / {args.max_cr_drift:.0%} CR of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

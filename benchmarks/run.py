@@ -16,9 +16,12 @@ repro.data.scidata (SDRBench is offline-unavailable; DESIGN.md section 8.3).
                                 time vs raw I/O
   beyond_planes_codec        -- szx-planes (in-graph) throughput + wire bytes
                                 for gradient/KV compression
-  chunked_dump_load          -- monolithic vs chunked (frame-streamed)
-                                compression: throughput + peak RSS; writes
-                                BENCH_codec.json at the repo root
+  chunked_dump_load          -- monolithic vs chunked vs parallel-chunked
+                                (frame-streamed) compression: throughput +
+                                peak RSS; writes BENCH_codec.json at the repo
+                                root (SZX_BENCH_N / SZX_BENCH_JSON override
+                                input size / output path; CI runs this small
+                                and gates via benchmarks/check_regression.py)
 
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
 Run a subset:   ``PYTHONPATH=src python -m benchmarks.run chunked_dump_load``
@@ -331,53 +334,65 @@ import numpy as np
 from repro.core.codec import SZxCodec
 
 mode, path = sys.argv[1], sys.argv[2]
-n = 1 << 26                          # 256 MiB float32 synthetic field
-codec = SZxCodec(backend="numpy")
+kind, phase = mode.rsplit("_", 1)
+n = int(os.environ.get("SZX_BENCH_N", 1 << 26))   # default: 256 MiB f32 field
+workers = (os.cpu_count() or 1) if kind == "chunked-par" else 1
+codec = SZxCodec(backend="numpy", workers=workers)
 rel = 1e-3
 
-if mode.endswith("dump"):
+reps = int(os.environ.get("SZX_BENCH_REPS", 3))   # best-of-N vs host noise
+if phase == "dump":
     rng = np.random.default_rng(0)
     x = np.cumsum(rng.standard_normal(n, dtype=np.float32) * 0.01)
     x = x.astype(np.float32)
     e = rel * float(x.max() - x.min())
-    t0 = time.time()
-    if mode == "mono_dump":
-        buf = codec.compress(x, e)
-        with open(path, "wb") as f:
-            f.write(buf)
-        stored = len(buf)
-    else:
-        with open(path, "wb") as f:
-            stored = codec.dump_chunked(x, f, e, chunk_bytes=8 << 20)
-    dt = time.time() - t0
+    dt = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        if kind == "mono":
+            buf = codec.compress(x, e)
+            with open(path, "wb") as f:
+                f.write(buf)
+            stored = len(buf)
+        else:
+            with open(path, "wb") as f:
+                stored = codec.dump_chunked(x, f, e, chunk_bytes=8 << 20)
+        dt = min(dt, time.time() - t0)
 else:
-    t0 = time.time()
-    if mode == "mono_load":
-        with open(path, "rb") as f:
-            y = codec.decompress(f.read())
-    else:
-        with open(path, "rb") as f:
-            y = codec.load_chunked(f)
-    dt = time.time() - t0
+    dt = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        if kind == "mono":
+            with open(path, "rb") as f:
+                y = codec.decompress(f.read())
+        else:
+            with open(path, "rb") as f:
+                y = codec.load_chunked(f)
+        dt = min(dt, time.time() - t0)
     stored = os.path.getsize(path)
     assert y.size == n
 
 rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
-print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": stored, "n": n}))
+print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": stored, "n": n,
+                  "workers": workers}))
 """
 
 
 def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
-    """Monolithic vs chunked (frame-streamed) codec: throughput + peak RSS.
+    """Monolithic vs chunked vs parallel-chunked codec: throughput + peak RSS.
 
     Each phase runs in a fresh subprocess so ru_maxrss isolates that phase's
-    peak memory.  Results also land in BENCH_codec.json at the repo root to
-    anchor the codec perf trajectory.
+    peak memory.  'chunked-par' runs the frame pipeline with one worker
+    thread per core (byte output identical to 'chunked').  Results also land
+    in BENCH_codec.json at the repo root (override the path with
+    SZX_BENCH_JSON, the input element count with SZX_BENCH_N) to anchor the
+    codec perf trajectory; benchmarks/check_regression.py gates CI on them.
     """
     os.makedirs(tmpdir, exist_ok=True)
-    out: dict = {}
+    n = int(os.environ.get("SZX_BENCH_N", 1 << 26))
+    out: dict = {"n": n}
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
-    for kind in ("mono", "chunked"):
+    for kind in ("mono", "chunked", "chunked-par"):
         path = os.path.join(tmpdir, f"{kind}.szx")
         res = {}
         for phase in ("dump", "load"):
@@ -387,14 +402,15 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
             )
             assert r.returncode == 0, r.stderr[-2000:]
             res[phase] = json.loads(r.stdout.strip().splitlines()[-1])
-        raw_mb = res["dump"]["n"] * 4 / 1e6
+        raw_mb = n * 4 / 1e6
         out[kind] = dict(
             comp_mbs=raw_mb / res["dump"]["t"],
             decomp_mbs=raw_mb / res["load"]["t"],
             dump_peak_rss_mb=res["dump"]["rss_mb"],
             load_peak_rss_mb=res["load"]["rss_mb"],
             stored_mb=res["dump"]["stored"] / 1e6,
-            cr=res["dump"]["n"] * 4 / res["dump"]["stored"],
+            cr=n * 4 / res["dump"]["stored"],
+            workers=res["dump"]["workers"],
         )
         _emit(
             f"beyond/chunked_dump_load/{kind}", res["dump"]["t"] * 1e6,
@@ -404,7 +420,10 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
             f"load_RSS_MB={out[kind]['load_peak_rss_mb']:.0f};"
             f"CR={out[kind]['cr']:.2f}",
         )
-    with open(os.path.join(REPO_ROOT, "BENCH_codec.json"), "w") as f:
+    bench_json = os.environ.get(
+        "SZX_BENCH_JSON", os.path.join(REPO_ROOT, "BENCH_codec.json")
+    )
+    with open(bench_json, "w") as f:
         json.dump({"chunked_dump_load": out}, f, indent=1, default=float)
     return out
 

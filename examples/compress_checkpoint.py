@@ -5,7 +5,6 @@ verify the error bound end-to-end.
     PYTHONPATH=src python examples/compress_checkpoint.py
 """
 import dataclasses
-import os
 import shutil
 import time
 

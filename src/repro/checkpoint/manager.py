@@ -15,7 +15,8 @@ Features required at 1000-node scale and implemented here:
     dump/load use case: compression above PFS bandwidth = faster I/O wall),
     native per-dtype streams (f32/f64/f16/bf16) via repro.core.codec
   * chunked frame streams for large leaves: bounded-memory compression and
-    restore of arbitrarily big arrays (codec 'szx-chunked')
+    restore of arbitrarily big arrays (codec 'szx-chunked'); ``workers > 1``
+    runs the frame bodies on a thread pool with byte-identical output
   * cross-topology restore: leaves are stored as full logical arrays, so any
     mesh can load any checkpoint (elastic scaling); device placement is the
     caller's (jax.device_put with the new sharding)
@@ -58,6 +59,7 @@ class CheckpointManager:
         mode: str = "rel",
         async_save: bool = False,
         chunk_bytes: int = 64 << 20,
+        workers: int = 1,
     ):
         self.root = root
         self.keep = keep
@@ -66,9 +68,10 @@ class CheckpointManager:
         self.mode = mode
         self.async_save = async_save
         # leaves larger than chunk_bytes are written as self-delimiting SZx
-        # frame sequences so save/restore memory stays bounded per leaf
+        # frame sequences so save/restore memory stays bounded per leaf;
+        # workers > 1 runs those frames on a thread pool (identical bytes)
         self.chunk_bytes = chunk_bytes
-        self._codec = SZxCodec()
+        self._codec = SZxCodec(workers=workers)
         self._thread: Optional[threading.Thread] = None
         self._last_error: Optional[BaseException] = None
         os.makedirs(root, exist_ok=True)

@@ -7,7 +7,6 @@ yields ShapeDtypeStruct stand-ins for the dry-run (no allocation).
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from dataclasses import dataclass, field, replace
 from typing import Any

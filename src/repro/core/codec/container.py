@@ -21,6 +21,7 @@ stream:
 """
 from __future__ import annotations
 
+import functools
 import struct
 from typing import Iterator
 
@@ -67,30 +68,100 @@ def unpack_2bit(raw: np.ndarray, m: int) -> np.ndarray:
 # monolithic v2 stream
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=4)
+def _value_base_cached(nb: int, bs: int, itemsize: int, wide: bool) -> np.ndarray:
+    dt = np.int64 if wide else np.int32
+    return (
+        np.arange(nb, dtype=dt)[:, None] * (itemsize * bs)
+        + np.arange(bs, dtype=dt)
+    ).reshape(-1)
+
+
+def _value_base(nb: int, bs: int, itemsize: int, wide: bool) -> np.ndarray:
+    """Flat plane-0 index of each value in a C-contiguous (nb, itemsize, bs)
+    plane array.  Small shapes are cached (read-only) because the chunked
+    paths reuse one shape for every frame; larger ones are rebuilt per call
+    so the cache pins at most 4 x 16 MB for the process lifetime."""
+    if nb * bs <= 1 << 22:
+        return _value_base_cached(nb, bs, itemsize, wide)
+    return _value_base_cached.__wrapped__(nb, bs, itemsize, wide)
+
+
+def _mid_plan(L: np.ndarray, nbytes: np.ndarray, itemsize: int):
+    """Exact mid-stream layout from per-value counts (``nbytes - L``).
+
+    Returns ``(counts, start, nmid, wide)``: flat per-value byte counts, the
+    exclusive prefix sum (each value's offset into the mid stream), the total
+    mid-byte count, and whether flat plane indices overflow int32.  Replaces
+    the O(nblocks*block_size*itemsize) boolean mask of the v1 implementation.
+    """
+    nb, bs = L.shape
+    wide = nb * bs * itemsize > np.iinfo(np.int32).max - bs
+    counts = np.maximum(nbytes[:, None] - L, 0).reshape(-1)
+    ends = np.cumsum(counts, dtype=np.int64 if wide else np.int32)
+    nmid = int(ends[-1]) if counts.size else 0
+    return counts, ends - counts, nmid, wide
+
+
+def _copy_mid(L, nbytes, itemsize, counts, start, wide, src, dst, *, gather):
+    """Move mid bytes between a flat (nb, itemsize, bs) plane array and the
+    packed mid stream, in (block, value, byteplane) order.
+
+    One fancy-index copy per byte slot k (<= itemsize passes, each over only
+    the values with ``counts > k``): value v's k-th stored byte is plane
+    ``L[v] + k`` and lands at mid offset ``start[v] + k``.  Indices are unique,
+    so plain fancy assignment suffices -- no ``np.add.at``.
+    """
+    nb, bs = L.shape
+    lb = L.reshape(-1)
+    if wide:
+        lb = lb.astype(np.int64)
+    src0 = _value_base(nb, bs, itemsize, wide) + lb * bs
+    for k in range(itemsize):
+        sel = np.flatnonzero(counts > k)
+        if sel.size == 0:
+            break
+        plane_idx = src0[sel] + k * bs
+        mid_idx = start[sel] + k
+        if gather:
+            dst[mid_idx] = src[plane_idx]
+        else:
+            dst[plane_idx] = src[mid_idx]
+
+
 def build_stream(p: Plan, enc: BlockEncoding) -> bytes:
     """Serialize one plan + block encoding into a self-contained v2 stream."""
     nc = ~enc.const
     nnc = int(nc.sum())
     itemsize = p.dtype.itemsize
-    # mid-byte mask in (block, value, byteplane) order so each value's bytes
-    # are contiguous in the stream (paper Fig. 4 layout)
-    planes_t = enc.planes.transpose(0, 2, 1)            # (nb, bs, W)
-    j = np.arange(itemsize, dtype=np.int32)[None, None, :]
-    mask = (enc.L[:, :, None] <= j) & (j < enc.nbytes[:, None, None])
-    mask &= nc[:, None, None]
-    mid_stream = planes_t[mask]                         # (nmid,) uint8
-    out = [
-        HEADER.pack(
-            MAGIC, VERSION, p.dtype.code, p.block_size, p.n, p.error_bound,
-            p.nblocks, nnc, int(mid_stream.size),
-        ),
-        np.packbits(enc.const.astype(np.uint8)).tobytes(),
-        np.ascontiguousarray(enc.mu).tobytes(),
-        enc.reqlen[nc].astype(np.uint8).tobytes(),
-        pack_2bit(enc.L[nc].reshape(-1).astype(np.uint8)).tobytes(),
-        mid_stream.tobytes(),
-    ]
-    return b"".join(out)
+    nb = p.nblocks
+    bs = p.block_size
+    counts, start, nmid, wide = _mid_plan(enc.L, enc.nbytes, itemsize)
+    nbm = (nb + 7) // 8
+    nl = (nnc * bs + 3) // 4
+    # one preallocated buffer, every section written in place (no join copies)
+    out = bytearray(HEADER.size + nbm + itemsize * nb + nnc + nl + nmid)
+    HEADER.pack_into(
+        out, 0, MAGIC, VERSION, p.dtype.code, p.block_size, p.n,
+        p.error_bound, p.nblocks, nnc, nmid,
+    )
+    u8 = np.frombuffer(out, np.uint8)
+    off = HEADER.size
+    u8[off : off + nbm] = np.packbits(enc.const.astype(np.uint8))
+    off += nbm
+    u8[off : off + itemsize * nb] = np.ascontiguousarray(enc.mu).view(np.uint8)
+    off += itemsize * nb
+    u8[off : off + nnc] = enc.reqlen[nc].astype(np.uint8)
+    off += nnc
+    u8[off : off + nl] = pack_2bit(enc.L[nc].reshape(-1).astype(np.uint8))
+    off += nl
+    if nmid:
+        _copy_mid(
+            enc.L, enc.nbytes, itemsize, counts, start, wide,
+            np.ascontiguousarray(enc.planes).reshape(-1),
+            u8[off : off + nmid], gather=True,
+        )
+    return bytes(out)
 
 
 def parse_stream(buf: bytes, *, backend: str = "auto") -> tuple[Plan, BlockEncoding]:
@@ -138,14 +209,15 @@ def parse_stream(buf: bytes, *, backend: str = "auto") -> tuple[Plan, BlockEncod
     L = np.zeros((nb, bs), np.int32)
     L[nc] = L_nc.reshape(nnc, bs)
 
-    planes_t = np.zeros((nb, bs, spec.itemsize), np.uint8)
-    j = np.arange(spec.itemsize, dtype=np.int32)[None, None, :]
-    mask = (L[:, :, None] <= j) & (j < nbytes[:, None, None])
-    mask &= nc[:, None, None]
-    if int(mask.sum()) != nmid:
+    counts, start, total, wide = _mid_plan(L, nbytes, spec.itemsize)
+    if total != nmid:
         raise ValueError("corrupt SZx stream (mid-stream length mismatch)")
-    planes_t[mask] = mid_stream
-    planes = planes_t.transpose(0, 2, 1)
+    planes = np.zeros((nb, spec.itemsize, bs), np.uint8)
+    if nmid:
+        _copy_mid(
+            L, nbytes, spec.itemsize, counts, start, wide,
+            mid_stream, planes.reshape(-1), gather=False,
+        )
     return p, BlockEncoding(mu, const, reqlen, shift, nbytes, planes, L)
 
 
@@ -189,6 +261,8 @@ def iter_frames(source) -> Iterator[bytes]:
         saw_last = last
         seq_expected += 1
         yield payload
+    if seq_expected == 0:
+        raise ValueError("empty SZx frame sequence")
     if not saw_last:
         raise ValueError("SZx frame sequence ended without a LAST frame")
 
@@ -211,7 +285,17 @@ def _parse_one_frame(frame: bytes, seq_expected: int) -> tuple[bytes, bool]:
 def _iter_frames_file(f) -> Iterator[bytes]:
     seq_expected = 0
     while True:
-        hdr = _read_exact(f, FRAME_HEADER.size)
+        if seq_expected == 0:
+            hdr = f.read(FRAME_HEADER.size)
+            if not hdr:
+                raise ValueError("empty SZx frame sequence")
+            if len(hdr) != FRAME_HEADER.size:
+                raise ValueError(
+                    f"truncated SZx frame sequence (wanted {FRAME_HEADER.size} "
+                    f"bytes, got {len(hdr)})"
+                )
+        else:
+            hdr = _read_exact(f, FRAME_HEADER.size)
         magic, version, flags, seq, plen = FRAME_HEADER.unpack(hdr)
         if magic != FRAME_MAGIC:
             raise ValueError("bad SZx frame (magic mismatch)")

@@ -10,8 +10,10 @@ path inherits every error-bound guarantee of the monolithic one.
 """
 from __future__ import annotations
 
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Callable, Iterable, Iterator
 
 import numpy as np
 
@@ -19,6 +21,29 @@ from repro.core.codec import container, plan as plan_mod, transform
 from repro.core.codec.plan import DEFAULT_BLOCK_SIZE, Plan
 
 DEFAULT_CHUNK_BYTES = 64 << 20     # 64 MB of input per frame
+
+
+def _imap_ordered(fn: Callable, items: Iterable, workers: int) -> Iterator:
+    """Ordered, bounded-lookahead parallel map over a thread pool.
+
+    Results are yielded strictly in input order; at most ``2 * workers`` items
+    are in flight, so peak memory stays O(workers * item) no matter how slowly
+    the consumer drains.  Frame bodies are numpy-heavy and numpy releases the
+    GIL, so threads give real parallelism without pickling the input.
+    """
+    lookahead = 2 * workers
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        pending: deque = deque()
+        try:
+            for item in items:
+                pending.append(pool.submit(fn, item))
+                if len(pending) >= lookahead:
+                    yield pending.popleft().result()
+            while pending:
+                yield pending.popleft().result()
+        finally:
+            while pending:
+                pending.popleft().cancel()
 
 
 @dataclass(frozen=True)
@@ -34,10 +59,16 @@ class CompressionStats:
 
 @dataclass(frozen=True)
 class SZxCodec:
-    """Configured byte-stream codec; instances are cheap and immutable."""
+    """Configured byte-stream codec; instances are cheap and immutable.
+
+    ``workers > 1`` runs the chunked paths' frame bodies on a thread pool
+    (frames are independent and order-tagged); the byte output is identical
+    to the serial path and memory stays O(workers * chunk).
+    """
 
     block_size: int = DEFAULT_BLOCK_SIZE
     backend: str = "auto"          # kernels.ops backend for the f32 path
+    workers: int = 1               # threads for compress_chunked/decompress_chunked
 
     # ------------------------------------------------------------- monolithic
     def compress(self, x, error_bound: float, *, mode: str = "abs", dtype=None) -> bytes:
@@ -92,8 +123,11 @@ class SZxCodec:
 
         The error bound is resolved over the FULL array first (so 'rel' mode
         matches the monolithic stream), then each block-aligned chunk is
-        compressed independently: peak memory is O(chunk), and each frame
-        payload is bit-identical to ``compress(chunk, e_abs)``.
+        compressed independently: peak memory is O(workers * chunk), and each
+        frame payload is bit-identical to ``compress(chunk, e_abs)``.  With
+        ``workers > 1`` the chunk bodies run concurrently but frames are
+        yielded strictly in order, so the byte stream is identical to the
+        serial one.
         """
         x = np.asarray(x)
         if dtype is not None:
@@ -103,10 +137,17 @@ class SZxCodec:
         flat = x.reshape(-1)
         per_chunk = plan_mod.chunk_elements(self.block_size, chunk_bytes, spec.itemsize)
         nchunks = max((flat.size + per_chunk - 1) // per_chunk, 1)
-        for i in range(nchunks):
+
+        def frame(i: int) -> bytes:
             sl = flat[i * per_chunk : (i + 1) * per_chunk]
             payload = self.compress(sl, e, mode="abs")
-            yield container.build_frame(payload, i, last=(i == nchunks - 1))
+            return container.build_frame(payload, i, last=(i == nchunks - 1))
+
+        if self.workers > 1 and nchunks > 1:
+            yield from _imap_ordered(frame, range(nchunks), self.workers)
+        else:
+            for i in range(nchunks):
+                yield frame(i)
 
     def decompress_chunked(self, frames, *, n: int | None = None) -> np.ndarray:
         """Decompress a frame sequence -> flat array.
@@ -114,22 +155,37 @@ class SZxCodec:
         ``frames`` may be concatenated bytes, a binary file object, or an
         iterable of frame byte strings (e.g. from :meth:`compress_chunked`).
         Pass ``n`` (the total element count, e.g. from a manifest) to
-        preallocate the output and keep peak memory at O(n + chunk);
+        preallocate the output and keep peak memory at O(n + workers * chunk);
         without it the decoded chunks are buffered and concatenated,
-        peaking at ~2x the output size.
+        peaking at ~2x the output size.  With ``workers > 1`` frame payloads
+        decode concurrently; results are consumed strictly in frame order.
         """
+
+        def checked_payloads() -> Iterator[bytes]:
+            spec_code = None
+            for payload in container.iter_frames(frames):
+                if len(payload) <= 5:
+                    raise ValueError("truncated SZx stream (shorter than header)")
+                if spec_code is None:
+                    spec_code = payload[5]
+                elif payload[5] != spec_code:
+                    raise ValueError("SZx frame sequence mixes dtypes")
+                yield payload
+
+        if self.workers > 1:
+            decoded = _imap_ordered(self.decompress, checked_payloads(), self.workers)
+        else:
+            decoded = map(self.decompress, checked_payloads())
+
         parts: list[np.ndarray] = []
         out = None
-        spec_code = None
         filled = 0
-        for payload in container.iter_frames(frames):
-            part = self.decompress(payload)
-            if spec_code is None:
-                spec_code = payload[5]
+        seen = False
+        for part in decoded:
+            if not seen:
+                seen = True
                 if n is not None:
                     out = np.empty(n, part.dtype)
-            elif payload[5] != spec_code:
-                raise ValueError("SZx frame sequence mixes dtypes")
             if out is not None:
                 if filled + part.size > n:
                     raise ValueError(
@@ -139,7 +195,7 @@ class SZxCodec:
             else:
                 parts.append(part)
             filled += part.size
-        if spec_code is None:
+        if not seen:
             raise ValueError("empty SZx frame sequence")
         if out is not None:
             if filled != n:
@@ -151,7 +207,7 @@ class SZxCodec:
 
     def dump_chunked(self, x, fileobj, error_bound: float, **kw) -> int:
         """Stream ``compress_chunked`` frames straight to a file; returns
-        bytes written.  Peak memory stays O(chunk)."""
+        bytes written.  Peak memory stays O(workers * chunk)."""
         written = 0
         for frame in self.compress_chunked(x, error_bound, **kw):
             fileobj.write(frame)
@@ -160,7 +216,8 @@ class SZxCodec:
 
     def load_chunked(self, fileobj, *, n: int | None = None) -> np.ndarray:
         """Read + decompress a frame sequence from a file object.  Pass ``n``
-        (total element count) to preallocate: peak memory O(n + chunk)."""
+        (total element count) to preallocate: peak memory
+        O(n + workers * chunk)."""
         return self.decompress_chunked(fileobj, n=n)
 
 

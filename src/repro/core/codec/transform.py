@@ -133,17 +133,25 @@ def _encode_generic(xb: np.ndarray, p: Plan) -> BlockEncoding:
 def _decode_generic(enc: BlockEncoding, p: Plan) -> np.ndarray:
     spec = p.dtype
     nb, itemsize, bs = enc.planes.shape
-    idxs = np.broadcast_to(np.arange(bs, dtype=np.int32)[None, :], (nb, bs))
+    idxs = np.arange(bs, dtype=np.int32)[None, :]
     ws = np.zeros((nb, bs), spec.uint_dtype)
-    for j in range(itemsize):
-        stored = (enc.L <= j) & (j < enc.nbytes[:, None])
-        src = np.where(stored, idxs, -1)
-        src = np.maximum.accumulate(src, axis=1)       # index propagation
-        byte = np.take_along_axis(
-            enc.planes[:, j, :].astype(spec.uint_dtype), np.maximum(src, 0), axis=1
-        )
-        byte = np.where(src >= 0, byte, spec.uint_dtype.type(0))
-        ws = ws | (byte << np.array(8 * (itemsize - 1 - j), spec.uint_dtype))
+    # little-endian host: plane j (MSB-first) is byte itemsize-1-j of the word
+    wsb = ws.view(np.uint8).reshape(nb, bs, itemsize)
+    for j in range(min(itemsize, int(enc.nbytes.max(initial=0)))):
+        live = enc.nbytes > j
+        act = slice(None) if live.all() else np.flatnonzero(live)
+        pj = enc.planes[act, j, :]
+        Lj = enc.L[act]
+        # L <= 3, so planes past 2 (or with no L > j value) are stored verbatim
+        # for every live value -- the propagation scan is skipped
+        if j >= 3 or not (Lj > j).any():
+            wsb[act, :, itemsize - 1 - j] = pj
+            continue
+        src = np.where(Lj <= j, idxs, np.int32(-1))
+        np.maximum.accumulate(src, axis=1, out=src)    # index propagation
+        byte = np.take_along_axis(pj, np.maximum(src, 0), axis=1)
+        byte[src < 0] = 0
+        wsb[act, :, itemsize - 1 - j] = byte
     w = ws << enc.shift[:, None].astype(spec.uint_dtype)
     v = w.view(spec.np_dtype)
     mu64 = enc.mu.astype(np.float64)
@@ -163,7 +171,19 @@ def encode_blocks(xb: np.ndarray, p: Plan) -> BlockEncoding:
 
 
 def decode_blocks(enc: BlockEncoding, p: Plan) -> np.ndarray:
-    """Inverse of :func:`encode_blocks` -> (nb, bs) in the plan dtype."""
+    """Inverse of :func:`encode_blocks` -> (nb, bs) in the plan dtype.
+
+    Frames whose L codes are all zero (no XOR-lead elision anywhere) take the
+    batched dense f32 path, which skips the per-byte index-propagation scan.
+    """
     if p.dtype.code == 0:
+        if not enc.L.any():
+            from repro.kernels import ops
+
+            return np.asarray(
+                ops.unpack_dense(
+                    enc.planes, enc.mu, enc.shift, enc.nbytes, backend=p.backend
+                )
+            )
         return _decode_f32(enc, p)
     return _decode_generic(enc, p)

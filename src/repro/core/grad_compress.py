@@ -17,12 +17,8 @@ re-applied next step instead of being lost).  Everything is fixed-shape.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.codec import PlanesCodec

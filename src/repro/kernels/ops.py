@@ -42,6 +42,11 @@ def _unpack_jax(planes, mu, shift, nbytes, L):
     return ref.unpack_ref(planes, mu, shift, nbytes, L)
 
 
+@jax.jit
+def _unpack_dense_jax(planes, mu, shift, nbytes):
+    return ref.unpack_dense_ref(planes, mu, shift, nbytes)
+
+
 # --------------------------------------------------------------------------
 # numpy mirrors (bit-identical to ref.py)
 # --------------------------------------------------------------------------
@@ -76,44 +81,74 @@ def _block_stats_np(xb, e):
 
 
 def _pack_np(xb, mu, shift, nbytes):
+    """Bit-identical to ``ref.pack_ref`` but allocation-lean: the shift runs
+    in place on the normalized words and the XOR-lead run length is computed
+    by byte-view equality against the predecessor (no xor word, no shifts)."""
     xb = np.asarray(xb, np.float32)
+    nb, bs = xb.shape
     v = xb - mu[:, None]
-    w = v.view(np.uint32)
-    ws = w >> shift[:, None].astype(np.uint32)
-    prev = np.concatenate([np.zeros((ws.shape[0], 1), np.uint32), ws[:, :-1]], axis=1)
-    xw = ws ^ prev
-    b0 = (xw >> 24) == 0
-    b1 = xw >> 16 == 0
-    b2 = xw >> 8 == 0
-    L = np.minimum(
-        b0.astype(np.int32) + (b0 & b1) + (b0 & b1 & b2), nbytes[:, None]
-    )
-    # little-endian byte view: plane j (MSB-first) is byte 3-j -- no shifts
-    nb, bs = ws.shape
-    planes = np.ascontiguousarray(
-        ws.view(np.uint8).reshape(nb, bs, 4)[:, :, ::-1].transpose(0, 2, 1)
-    )
+    ws = v.view(np.uint32)
+    np.right_shift(ws, shift[:, None].astype(np.uint32), out=ws)
+    # little-endian byte view: plane j (MSB-first) is byte 3-j -- no shifts.
+    # L counts how many leading bytes equal the predecessor's (the first
+    # value compares against the zero word), capped at 3 by the 2-bit code.
+    wsb = ws.view(np.uint8).reshape(nb, bs, 4)
+    L = np.zeros((nb, bs), np.int32)
+    run = np.empty((nb, bs), bool)
+    eq = np.empty((nb, bs), bool)
+    for j in range(3):
+        pj = wsb[:, :, 3 - j]
+        eq[:, 0] = pj[:, 0] == 0
+        np.equal(pj[:, 1:], pj[:, :-1], out=eq[:, 1:])
+        if j == 0:
+            run[:] = eq
+        else:
+            run &= eq
+        L += run
+    np.minimum(L, nbytes[:, None], out=L)
+    planes = np.ascontiguousarray(wsb[:, :, ::-1].transpose(0, 2, 1))
     mid = nbytes[:, None] - L
     return planes, L, mid
 
 
 def _unpack_np(planes, mu, shift, nbytes, L):
+    """Bit-identical to ``ref.unpack_ref`` but byte-oriented: planes are written
+    straight into a little-endian uint32 byte view, index propagation runs only
+    on planes that actually need it (some value has ``L > j``) and only over
+    blocks where the plane is live (``nbytes > j``)."""
     nb, _, bs = planes.shape
-    idxs = np.broadcast_to(np.arange(bs, dtype=np.int32)[None, :], (nb, bs))
     ws = np.zeros((nb, bs), np.uint32)
-    for j in range(4):
-        stored = (L <= j) & (j < nbytes[:, None])
-        src = np.where(stored, idxs, -1)
-        src = np.maximum.accumulate(src, axis=1)
-        byte = np.take_along_axis(
-            planes[:, j, :].astype(np.uint32), np.maximum(src, 0), axis=1
-        )
-        byte = np.where(src >= 0, byte, np.uint32(0))
-        ws = ws | (byte << np.uint32(24 - 8 * j))
+    wsb = ws.view(np.uint8).reshape(nb, bs, 4)         # little-endian host:
+    idxs = np.arange(bs, dtype=np.int32)[None, :]      # plane j is byte 3-j
+    for j in range(min(4, int(nbytes.max(initial=0)))):
+        live = nbytes > j
+        act = slice(None) if live.all() else np.flatnonzero(live)
+        pj = planes[act, j, :]
+        Lj = L[act]
+        # L <= 3, so plane 3 (and any plane with no L > j value) is stored
+        # verbatim for every live value -- no propagation pass needed
+        if j >= 3 or not (Lj > j).any():
+            wsb[act, :, 3 - j] = pj
+            continue
+        src = np.where(Lj <= j, idxs, np.int32(-1))
+        np.maximum.accumulate(src, axis=1, out=src)    # index propagation
+        byte = np.take_along_axis(pj, np.maximum(src, 0), axis=1)
+        byte[src < 0] = 0
+        wsb[act, :, 3 - j] = byte
     w = ws << shift[:, None].astype(np.uint32)
     v = w.view(np.float32)
     x = v + mu[:, None]
     return np.where((nbytes == 0)[:, None], mu[:, None], x)
+
+
+def _unpack_dense_np(planes, mu, shift, nbytes):
+    """All-``L==0`` fast path.  ``_unpack_np`` already degenerates to verbatim
+    byte composition on every plane when no value has ``L > j``, so delegate
+    with a broadcastable all-zero L instead of duplicating the loop (the real
+    dense-path win is the jitted oracle, which drops the propagation scan)."""
+    return _unpack_np(
+        planes, mu, shift, nbytes, np.zeros((planes.shape[0], 1), np.int32)
+    )
 
 
 # --------------------------------------------------------------------------
@@ -240,4 +275,22 @@ def unpack(planes, mu, shift, nbytes, L, *, backend: str = "auto"):
         jnp.asarray(shift, jnp.int32),
         jnp.asarray(nbytes, jnp.int32),
         jnp.asarray(L, jnp.int32),
+    )
+
+
+def unpack_dense(planes, mu, shift, nbytes, *, backend: str = "auto"):
+    """Batched fast path for frames whose L codes are all zero: every stored
+    byte sits at its own value, so decode skips the per-byte index-propagation
+    scan entirely.  Bit-identical to ``unpack(..., L=0)``.  There is no Pallas
+    kernel for this path yet, so 'kernel' routes to the jitted oracle.
+    """
+    if _resolve(backend) == "numpy":
+        return _unpack_dense_np(
+            np.asarray(planes), np.asarray(mu), np.asarray(shift), np.asarray(nbytes)
+        )
+    return _unpack_dense_jax(
+        jnp.asarray(planes, jnp.uint8),
+        jnp.asarray(mu, jnp.float32),
+        jnp.asarray(shift, jnp.int32),
+        jnp.asarray(nbytes, jnp.int32),
     )

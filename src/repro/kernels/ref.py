@@ -130,6 +130,25 @@ def unpack_ref(planes, mu, shift, nbytes, L):
     return jnp.where((nbytes == 0)[:, None], mu[:, None], x)
 
 
+def unpack_dense_ref(planes, mu, shift, nbytes):
+    """``unpack_ref`` specialized to all-zero L codes (no XOR-lead elision).
+
+    With L == 0 every live plane byte (j < nbytes) is stored at its own value,
+    so the index-propagation scan degenerates to a masked byte composition.
+    Bit-identical to ``unpack_ref(planes, mu, shift, nbytes, L=0)``.
+    """
+    nb, _, bs = planes.shape
+    ws = jnp.zeros((nb, bs), jnp.uint32)
+    for j in range(4):
+        live = (nbytes > j)[:, None]
+        byte = jnp.where(live, planes[:, j, :].astype(jnp.uint32), jnp.uint32(0))
+        ws = ws | (byte << (24 - 8 * j))
+    w = ws << shift[:, None].astype(jnp.uint32)
+    v = jax.lax.bitcast_convert_type(w, jnp.float32)
+    x = v + mu[:, None]
+    return jnp.where((nbytes == 0)[:, None], mu[:, None], x)
+
+
 # ---------------------------------------------------------------------------
 # Fixed-plane ("szx-planes") in-graph mode -- see DESIGN.md section 2.
 # ---------------------------------------------------------------------------

@@ -8,7 +8,6 @@
         scheduler overlaps the collectives this module emits with compute)
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,6 @@ from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM
 from repro.launch import mesh as mesh_lib
-from repro.models import sharding as shard_rules
 from repro.optim import AdamW, warmup_cosine
 from repro.train import step as step_mod
 from repro.train.trainer import Trainer, TrainerConfig

@@ -9,8 +9,6 @@ temp is a tile, not an S x S buffer.
 from __future__ import annotations
 
 import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -416,7 +414,6 @@ def mamba2_decode(p, x1, state, conv_state, cfg):
     dt = zxbcdt[:, 2 * di + 2 * n :]
     # causal conv via rolling state
     w = p["conv"].astype(x1.dtype)                             # (W,CC)
-    width = w.shape[0]
     hist = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,W,CC)
     xbc = jnp.einsum("bwc,wc->bc", hist, w)
     new_conv_state = hist[:, 1:]

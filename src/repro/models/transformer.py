@@ -9,7 +9,6 @@ logits never materialize.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

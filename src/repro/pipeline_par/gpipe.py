@@ -12,7 +12,6 @@ tests/test_pipeline.py on an 8-device host mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -57,7 +57,6 @@ def _shape_bytes(type_str: str) -> int:
 def parse_collectives(hlo_text: str) -> dict[str, int]:
     """Sum result-buffer bytes per collective kind (per-device module)."""
     out: dict[str, int] = {k: 0 for k in _COLL_KINDS}
-    seen_done = set()
     for m in _LINE_RE.finditer(hlo_text):
         kind = m.group(2)
         # async pairs appear as -start/-done; count the op once via -start,

@@ -217,7 +217,6 @@ def _fusion_traffic(ins: Instr, called: Optional[Computation], types: dict) -> C
         inner_types[ci.name] = ci.type_str
     uses: dict[str, list[tuple[str, int, str]]] = {p: [] for p in param_names}
     alias: dict[str, str] = {}   # bitcast/convert chains back to a parameter
-    root = called.instrs[-1] if called.instrs else None
     _ALIAS_OPS = ("bitcast", "reshape", "copy", "convert", "transpose")
     for ci in called.instrs:
         if ci.opcode in _ALIAS_OPS and ci.operands:

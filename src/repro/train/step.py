@@ -10,9 +10,6 @@ repro.core.grad_compress and DESIGN.md section 3.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

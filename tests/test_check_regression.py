@@ -1,0 +1,99 @@
+"""Unit tests for the CI perf-regression gate (benchmarks/check_regression.py):
+doctored-slow and CR-drifted BENCH JSONs must fail, within-tolerance noise
+must pass, and the CLI exit code must reflect it."""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.check_regression import compare, main
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BASE = {
+    "chunked_dump_load": {
+        "n": 4194304,
+        "mono": {"comp_mbs": 100.0, "decomp_mbs": 50.0, "cr": 7.0},
+        "chunked": {"comp_mbs": 120.0, "decomp_mbs": 80.0, "cr": 7.0},
+    }
+}
+
+
+def _doctor(**kv):
+    doc = copy.deepcopy(BASE)
+    doc["chunked_dump_load"]["mono"].update(kv)
+    return doc
+
+
+def _cmp(fresh, **kw):
+    kw.setdefault("max_drop", 0.30)
+    kw.setdefault("max_cr_drift", 0.01)
+    return compare(BASE, fresh, **kw)
+
+
+def test_identical_passes():
+    assert _cmp(copy.deepcopy(BASE)) == []
+
+
+def test_within_tolerance_passes():
+    # 25% slower and 0.5% CR drift: inside the 30% / 1% envelope
+    assert _cmp(_doctor(comp_mbs=75.0, decomp_mbs=40.0, cr=7.03)) == []
+
+
+def test_throughput_drop_fails():
+    errs = _cmp(_doctor(decomp_mbs=30.0))          # 40% drop
+    assert len(errs) == 1 and "decomp_mbs" in errs[0]
+
+
+def test_cr_drift_fails_both_directions():
+    assert "cr" in _cmp(_doctor(cr=7.2))[0]        # ~2.9% up
+    assert "cr" in _cmp(_doctor(cr=6.8))[0]        # ~2.9% down
+
+
+def test_size_mismatch_fails():
+    doc = copy.deepcopy(BASE)
+    doc["chunked_dump_load"]["n"] = 1024
+    errs = _cmp(doc)
+    assert len(errs) == 1 and "size mismatch" in errs[0]
+
+
+def test_missing_kind_and_section_fail():
+    doc = copy.deepcopy(BASE)
+    del doc["chunked_dump_load"]["chunked"]
+    assert any("chunked: missing" in e for e in _cmp(doc))
+    assert _cmp({}) == ["fresh results have no chunked_dump_load section"]
+
+
+def test_main_exit_codes(tmp_path):
+    b = tmp_path / "baseline.json"
+    b.write_text(json.dumps(BASE))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(BASE))
+    slow = tmp_path / "slow.json"
+    slow.write_text(json.dumps(_doctor(comp_mbs=10.0)))
+    assert main(["--baseline", str(b), "--fresh", str(good)]) == 0
+    assert main(["--baseline", str(b), "--fresh", str(slow)]) == 1
+    # looser tolerance rescues the same file
+    assert main(["--baseline", str(b), "--fresh", str(slow), "--max-drop", "0.95"]) == 0
+
+
+def test_cli_exits_nonzero_on_doctored_json(tmp_path):
+    """End to end: the exact command CI runs returns a non-zero exit code."""
+    b = tmp_path / "baseline.json"
+    b.write_text(json.dumps(BASE))
+    slow = tmp_path / "slow.json"
+    slow.write_text(json.dumps(_doctor(decomp_mbs=1.0)))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline", str(b), "--fresh", str(slow)],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+    )
+    assert r.returncode != 0
+    assert "REGRESSION" in r.stderr
+    r_ok = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline", str(b), "--fresh", str(b)],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+    )
+    assert r_ok.returncode == 0, r_ok.stderr

@@ -14,12 +14,10 @@ import pytest
 
 from repro.core import szx
 from repro.core.codec import (
-    DEFAULT_CHUNK_BYTES,
     PlanesCodec,
     SZxCodec,
     container,
     plan,
-    transform,
 )
 
 try:

@@ -6,7 +6,6 @@ pod/data/model mesh so the main process keeps 1 device."""
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

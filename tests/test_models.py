@@ -91,7 +91,6 @@ def test_flash_vs_naive(causal, window, s, hq, hkv):
     k = jax.random.normal(kk, (b, s, hkv, hd))
     v = jax.random.normal(kv, (b, s, hkv, hd))
     # NOTE: grouped-head repeat order in the oracle must match (hkv-major)
-    g = hq // hkv
     out = L.flash_attention(q, k, v, causal=causal, window=window, q_chunk=16, kv_chunk=16)
     ref = _naive_attention(q, k, v, causal, window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,121 @@
+"""Parallel (workers > 1) chunked frame pipeline.
+
+The contract under test: with any worker count the chunked byte stream is
+bit-identical to the serial one (frames are order-tagged and yielded in
+order), errors still surface, and the edge shapes (empty array, single
+element, sub-block arrays, chunk boundary exactly on a block edge) behave
+identically to the serial path.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.codec import SZxCodec, plan
+
+try:
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    BF16 = None
+
+CHUNK = 1 << 18
+SERIAL = SZxCodec(backend="numpy")
+PAR = SZxCodec(backend="numpy", workers=3)
+
+
+def _walk(n, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (np.cumsum(rng.standard_normal(n)) * 0.01).astype(dtype)
+
+
+_DTYPES = [np.float32, np.float64] + ([BF16] if BF16 is not None else [])
+
+
+@pytest.mark.parametrize("dtype", _DTYPES, ids=lambda d: np.dtype(d).name)
+def test_parallel_stream_is_byte_identical(dtype):
+    x = _walk(600_001, seed=1, dtype=dtype)
+    fs = list(SERIAL.compress_chunked(x, 1e-2, chunk_bytes=CHUNK))
+    fp = list(PAR.compress_chunked(x, 1e-2, chunk_bytes=CHUNK))
+    assert len(fs) > 3, "test must span multiple frames"
+    assert [len(f) for f in fs] == [len(f) for f in fp]
+    assert b"".join(fs) == b"".join(fp)
+    ys = SERIAL.decompress_chunked(fs)
+    yp = PAR.decompress_chunked(fp, n=x.size)
+    assert yp.dtype == np.dtype(dtype)
+    np.testing.assert_array_equal(
+        np.asarray(ys).view(np.uint8), np.asarray(yp).view(np.uint8)
+    )
+
+
+def test_parallel_edge_cases():
+    per = plan.chunk_elements(SERIAL.block_size, CHUNK, 4)
+    cases = {
+        "empty": np.zeros(0, np.float32),
+        "single": np.float32([1.25]),
+        "sub_block": _walk(SERIAL.block_size - 1, seed=2),
+        "chunk_on_block_edge": _walk(2 * per, seed=3),
+        "one_past_chunk": _walk(per + 1, seed=4),
+    }
+    for name, x in cases.items():
+        fs = list(SERIAL.compress_chunked(x, 1e-3, chunk_bytes=CHUNK))
+        fp = list(PAR.compress_chunked(x, 1e-3, chunk_bytes=CHUNK))
+        assert b"".join(fs) == b"".join(fp), name
+        y = PAR.decompress_chunked(fp)
+        assert y.size == x.size, name
+        if x.size:
+            assert np.abs(x - y).max() <= 1e-3, name
+
+
+def test_parallel_file_dump_load_identical(tmp_path):
+    x = _walk(200_000, seed=5)
+    ps, pp = tmp_path / "serial.szxf", tmp_path / "par.szxf"
+    with open(ps, "wb") as f:
+        ws = SERIAL.dump_chunked(x, f, 1e-4, chunk_bytes=CHUNK)
+    with open(pp, "wb") as f:
+        wp = PAR.dump_chunked(x, f, 1e-4, chunk_bytes=CHUNK)
+    assert ws == wp and ps.read_bytes() == pp.read_bytes()
+    with open(pp, "rb") as f:
+        y = PAR.load_chunked(f, n=x.size)
+    assert np.abs(x - y).max() <= 1e-4
+
+
+def test_empty_sequence_raises_empty_error_even_with_n():
+    for codec in (SERIAL, PAR):
+        for frames in ([], b"", iter([]), io.BytesIO(b"")):
+            with pytest.raises(ValueError, match="empty SZx frame sequence"):
+                codec.decompress_chunked(frames, n=100)
+        with pytest.raises(ValueError, match="empty SZx frame sequence"):
+            codec.decompress_chunked([])
+
+
+def test_parallel_corruption_still_rejected():
+    frames = list(PAR.compress_chunked(_walk(150_000, seed=6), 1e-3, chunk_bytes=CHUNK))
+    with pytest.raises(ValueError):   # out of order
+        PAR.decompress_chunked([frames[1], frames[0]] + frames[2:])
+    with pytest.raises(ValueError):   # missing LAST
+        PAR.decompress_chunked(frames[:-1])
+    with pytest.raises(ValueError):   # wrong n
+        PAR.decompress_chunked(frames, n=7)
+    blob = b"".join(frames)
+    with pytest.raises(ValueError):   # truncated payload
+        PAR.decompress_chunked(blob[:-3])
+
+
+def test_checkpoint_workers_bytes_identical(tmp_path):
+    tree = {"big": _walk(120_000, seed=7), "small": np.arange(7, dtype=np.int32)}
+    outs = {}
+    for workers in (1, 3):
+        m = CheckpointManager(
+            str(tmp_path / f"w{workers}"), compress=True, error_bound=1e-4,
+            mode="rel", chunk_bytes=1 << 17, workers=workers,
+        )
+        m.save(0, tree)
+        leaf = tmp_path / f"w{workers}" / "step_000000000" / "00000.bin"
+        outs[workers] = leaf.read_bytes()
+        restored, _ = m.restore(tree)
+        e = 1e-4 * float(tree["big"].max() - tree["big"].min())
+        assert np.abs(tree["big"] - np.asarray(restored["big"])).max() <= e
+    assert outs[1] == outs[3], "checkpoint bytes depend on worker count"

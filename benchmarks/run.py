@@ -331,11 +331,21 @@ def beyond_planes_codec() -> dict:
 _CHUNKED_CHILD = r"""
 import json, os, resource, sys, time
 import numpy as np
+import ml_dtypes
 from repro.core.codec import SZxCodec
 
 mode, path = sys.argv[1], sys.argv[2]
 kind, phase = mode.rsplit("_", 1)
-n = int(os.environ.get("SZX_BENCH_N", 1 << 26))   # default: 256 MiB f32 field
+n = int(os.environ.get("SZX_BENCH_N", 1 << 26))   # f32-equivalent elem count
+# the dtype legs keep the BYTE volume constant (n * 4) so throughputs are
+# comparable across rows: n_elems = n * 4 / itemsize
+if kind.endswith("-f64"):
+    dtype = np.dtype(np.float64)
+elif kind.endswith("-bf16"):
+    dtype = np.dtype(ml_dtypes.bfloat16)
+else:
+    dtype = np.dtype(np.float32)
+n_elems = n * 4 // dtype.itemsize
 workers = (os.cpu_count() or 1) if kind == "chunked-par" else 1
 codec = SZxCodec(backend="numpy", workers=workers)
 rel = 1e-3
@@ -343,9 +353,9 @@ rel = 1e-3
 reps = int(os.environ.get("SZX_BENCH_REPS", 3))   # best-of-N vs host noise
 if phase == "dump":
     rng = np.random.default_rng(0)
-    x = np.cumsum(rng.standard_normal(n, dtype=np.float32) * 0.01)
-    x = x.astype(np.float32)
-    e = rel * float(x.max() - x.min())
+    x = np.cumsum(rng.standard_normal(n_elems, dtype=np.float32) * 0.01)
+    x = x.astype(dtype)
+    e = rel * float(x.astype(np.float32).max() - x.astype(np.float32).min())
     dt = float("inf")
     for _ in range(reps):
         t0 = time.time()
@@ -370,11 +380,11 @@ else:
                 y = codec.load_chunked(f)
         dt = min(dt, time.time() - t0)
     stored = os.path.getsize(path)
-    assert y.size == n
+    assert y.size == n_elems and y.dtype == dtype
 
 rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": stored, "n": n,
-                  "workers": workers}))
+                  "dtype": dtype.name, "workers": workers}))
 """
 
 
@@ -383,16 +393,20 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
 
     Each phase runs in a fresh subprocess so ru_maxrss isolates that phase's
     peak memory.  'chunked-par' runs the frame pipeline with one worker
-    thread per core (byte output identical to 'chunked').  Results also land
-    in BENCH_codec.json at the repo root (override the path with
-    SZX_BENCH_JSON, the input element count with SZX_BENCH_N) to anchor the
-    codec perf trajectory; benchmarks/check_regression.py gates CI on them.
+    thread per core (byte output identical to 'chunked').  The
+    'chunked-f64' / 'chunked-bf16' legs run the SAME byte volume
+    (SZX_BENCH_N * 4 bytes) through the width-generic kernel layer in those
+    dtypes, gating the per-dtype fast paths.  Results also land in
+    BENCH_codec.json at the repo root (override the path with
+    SZX_BENCH_JSON, the f32-equivalent element count with SZX_BENCH_N) to
+    anchor the codec perf trajectory; benchmarks/check_regression.py gates
+    CI on them.
     """
     os.makedirs(tmpdir, exist_ok=True)
     n = int(os.environ.get("SZX_BENCH_N", 1 << 26))
     out: dict = {"n": n}
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
-    for kind in ("mono", "chunked", "chunked-par"):
+    for kind in ("mono", "chunked", "chunked-par", "chunked-f64", "chunked-bf16"):
         path = os.path.join(tmpdir, f"{kind}.szx")
         res = {}
         for phase in ("dump", "load"):
@@ -410,6 +424,7 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
             load_peak_rss_mb=res["load"]["rss_mb"],
             stored_mb=res["dump"]["stored"] / 1e6,
             cr=n * 4 / res["dump"]["stored"],
+            dtype=res["dump"]["dtype"],
             workers=res["dump"]["workers"],
         )
         _emit(

@@ -9,54 +9,24 @@ upcasting every input to float32.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import numpy as np
 
-try:  # bfloat16 is a numpy extension dtype shipped by ml_dtypes (a jax dep)
-    import ml_dtypes
-
-    _BFLOAT16 = np.dtype(ml_dtypes.bfloat16)
-except ImportError:  # pragma: no cover - ml_dtypes ships with jax
-    _BFLOAT16 = None
+# The dtype geometry lives in the kernel layer (repro.kernels.specs) so the
+# width-generic kernels need nothing from repro.core; the plan re-exports it
+# because the spec doubles as the stream's dtype-code table.
+from repro.kernels.specs import (  # noqa: F401  (re-exports)
+    BY_CODE,
+    BY_DTYPE,
+    SPECS as _SPECS,
+    DtypeSpec,
+    exact_exponent_of,
+    spec_for,
+    spec_for_code,
+)
 
 DEFAULT_BLOCK_SIZE = 128  # paper Fig. 8: best compression-ratio/PSNR tradeoff
-
-
-@dataclass(frozen=True)
-class DtypeSpec:
-    """IEEE-754 geometry of one supported input dtype.
-
-    ``code`` is the on-stream dtype id (container header byte); the remaining
-    fields parameterize the transform: required-bit computation uses
-    ``exp_bits``/``mant_bits``, the byte-plane split uses ``itemsize``.
-    """
-
-    code: int
-    name: str
-    np_dtype: np.dtype
-    uint_dtype: np.dtype
-    itemsize: int
-    exp_bits: int
-    mant_bits: int
-    exp_bias: int
-
-    @property
-    def word_bits(self) -> int:
-        return 8 * self.itemsize
-
-
-_SPECS = [
-    DtypeSpec(0, "float32", np.dtype(np.float32), np.dtype(np.uint32), 4, 8, 23, 127),
-    DtypeSpec(1, "float64", np.dtype(np.float64), np.dtype(np.uint64), 8, 11, 52, 1023),
-    DtypeSpec(2, "float16", np.dtype(np.float16), np.dtype(np.uint16), 2, 5, 10, 15),
-]
-if _BFLOAT16 is not None:
-    _SPECS.append(DtypeSpec(3, "bfloat16", _BFLOAT16, np.dtype(np.uint16), 2, 8, 7, 127))
-
-BY_CODE = {s.code: s for s in _SPECS}
-BY_DTYPE = {s.np_dtype: s for s in _SPECS}
 
 
 def finfo(dtype):
@@ -69,23 +39,6 @@ def finfo(dtype):
         return ml_dtypes.finfo(dtype)
 
 
-def spec_for(dtype) -> DtypeSpec:
-    spec = BY_DTYPE.get(np.dtype(dtype))
-    if spec is None:
-        raise TypeError(
-            f"unsupported dtype {np.dtype(dtype)}; supported: "
-            + ", ".join(s.name for s in _SPECS)
-        )
-    return spec
-
-
-def spec_for_code(code: int) -> DtypeSpec:
-    spec = BY_CODE.get(int(code))
-    if spec is None:
-        raise ValueError(f"unknown dtype code {code} in SZx stream")
-    return spec
-
-
 @dataclass(frozen=True)
 class Plan:
     """Resolved compression parameters for one array (or one chunk of it)."""
@@ -95,7 +48,7 @@ class Plan:
     block_size: int
     nblocks: int
     error_bound: float     # resolved ABSOLUTE bound (rel already applied)
-    backend: str           # kernels.ops backend for the f32 fast path
+    backend: str           # kernels.ops backend (width-generic, all dtypes)
 
     @property
     def raw_bytes(self) -> int:
@@ -164,8 +117,7 @@ def to_blocks(x: np.ndarray, plan: Plan) -> np.ndarray:
 
 def float_exponent_of(e: float) -> int:
     """Exact floor(log2 e) of a positive python float (Formula 4's p(e))."""
-    m, ex = math.frexp(e)  # e = m * 2**ex with 0.5 <= m < 1
-    return ex - 1
+    return exact_exponent_of(e)
 
 
 def chunk_elements(plan_block_size: int, chunk_bytes: int, itemsize: int) -> int:

@@ -8,8 +8,11 @@ per-value XOR leading-byte elision for a static plane count P in {1,2,3}.
 
 All block math dispatches through ``repro.kernels.ops`` so in-graph callers
 (under jit / shard_map / scan) and host callers share one implementation.
-Consumers (``repro.core.grad_compress``, ``repro.serve.engine``) go through
-this class instead of reaching into ``repro.kernels.ref`` directly.
+The 'jax' backend stages the oracle straight into the caller's program (one
+fused program under jit / shard_map); 'kernel' dispatches the real Pallas
+kernels in ``repro.kernels.planes``.  Consumers
+(``repro.core.grad_compress``, ``repro.serve.engine``) go through this class
+instead of reaching into ``repro.kernels.ref`` directly.
 """
 from __future__ import annotations
 

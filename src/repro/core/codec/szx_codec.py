@@ -61,13 +61,18 @@ class CompressionStats:
 class SZxCodec:
     """Configured byte-stream codec; instances are cheap and immutable.
 
-    ``workers > 1`` runs the chunked paths' frame bodies on a thread pool
-    (frames are independent and order-tagged); the byte output is identical
-    to the serial path and memory stays O(workers * chunk).
+    ``backend`` picks the width-generic kernel implementation for EVERY
+    stream dtype (f32/f64/f16/bf16): 'jax' jitted oracle, 'kernel' Pallas,
+    'numpy' mirror, or 'auto'; all are bit-identical per dtype.  Each frame
+    body stages ONE fused encode program (stats + pack, a single
+    host<->device round trip) -- including under ``workers > 1``, where the
+    chunked paths' frame bodies run on a thread pool (frames are independent
+    and order-tagged); the byte output is identical to the serial path and
+    memory stays O(workers * chunk).
     """
 
     block_size: int = DEFAULT_BLOCK_SIZE
-    backend: str = "auto"          # kernels.ops backend for the f32 path
+    backend: str = "auto"          # kernels.ops backend (all dtypes)
     workers: int = 1               # threads for compress_chunked/decompress_chunked
 
     # ------------------------------------------------------------- monolithic

@@ -3,17 +3,14 @@
 Stage two of the pipeline (paper Algorithm 1 lines 3-9).  Everything here is
 fixed-shape; the variable-length compaction happens in the container layer.
 
-Two execution paths:
-  * float32 -- dispatched through ``repro.kernels.ops`` (Pallas kernel, jnp
-    oracle, or numpy mirror), bit-identical to the original monolith and able
-    to run device-resident on TPU.
-  * float64 / float16 / bfloat16 -- a width-parameterized numpy
-    implementation driven by the :class:`~repro.core.codec.plan.DtypeSpec`
-    exponent/mantissa geometry.  Stats run in float64 so the 16-bit formats
-    don't lose the bound to intermediate rounding; the normalized residual is
-    rounded to the *input* dtype before the bit-level split, so the stored
-    word is exactly the dtype's IEEE-754 word (verbatim blocks stay
-    bit-exact).
+ONE execution path for every dtype (f32/f64/f16/bf16): the width-generic
+kernel layer in ``repro.kernels`` -- the plan's
+:class:`~repro.core.codec.plan.DtypeSpec` parameterizes the word geometry and
+the ``backend`` field picks the implementation ('jax' jitted oracle, 'kernel'
+Pallas, 'numpy' mirror; all bit-identical per spec).  Encode uses the FUSED
+``ops.encode`` (stats + pack staged as one program -- one host<->device round
+trip per chunk instead of two); decode dispatches the all-``L==0`` dense fast
+path whenever a frame has no XOR-lead elision, for every dtype.
 """
 from __future__ import annotations
 
@@ -21,7 +18,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.codec import plan as plan_mod
 from repro.core.codec.plan import DtypeSpec, Plan
 
 
@@ -46,17 +42,18 @@ def derive_layout(reqlen: np.ndarray, const: np.ndarray, spec: DtypeSpec):
     return shift, nbytes
 
 
-# ---------------------------------------------------------------------------
-# float32 fast path: kernels.ops dispatch (jax / pallas / numpy)
-# ---------------------------------------------------------------------------
+def encode_blocks(xb: np.ndarray, p: Plan) -> BlockEncoding:
+    """(nb, bs) blocks -> fixed-shape encoding per the plan's dtype.
 
-def _encode_f32(xb: np.ndarray, p: Plan) -> BlockEncoding:
+    One fused ``ops.encode`` dispatch: on device backends the whole
+    stats+pack pipeline is a single staged program.
+    """
     from repro.kernels import ops
 
-    mu, _radius, const, reqlen, shift, nbytes = ops.block_stats(
-        xb, p.error_bound, backend=p.backend
+    xb = np.ascontiguousarray(np.asarray(xb), dtype=p.dtype.np_dtype)
+    mu, const, reqlen, shift, nbytes, planes, L = ops.encode(
+        xb, p.error_bound, spec=p.dtype, backend=p.backend
     )
-    planes, L, _mid = ops.pack(xb, mu, shift, nbytes, backend=p.backend)
     mu, const, reqlen, shift, nbytes, planes, L = (
         np.asarray(a) for a in (mu, const, reqlen, shift, nbytes, planes, L)
     )
@@ -65,125 +62,25 @@ def _encode_f32(xb: np.ndarray, p: Plan) -> BlockEncoding:
                          planes, L.astype(np.int32))
 
 
-def _decode_f32(enc: BlockEncoding, p: Plan) -> np.ndarray:
-    from repro.kernels import ops
-
-    return np.asarray(
-        ops.unpack(enc.planes, enc.mu, enc.shift, enc.nbytes, enc.L, backend=p.backend)
-    )
-
-
-# ---------------------------------------------------------------------------
-# generic width-parameterized path (f64 / f16 / bf16)
-# ---------------------------------------------------------------------------
-
-def _exponent_exact(x64: np.ndarray) -> np.ndarray:
-    """Exact floor(log2 |x|) per element (frexp); garbage for x == 0."""
-    return (np.frexp(x64)[1] - 1).astype(np.int32)
-
-
-def _encode_generic(xb: np.ndarray, p: Plan) -> BlockEncoding:
-    spec = p.dtype
-    xb = np.ascontiguousarray(xb, dtype=spec.np_dtype)
-    nb, bs = xb.shape
-    x64 = xb.astype(np.float64)
-    mn = x64.min(axis=1)
-    mx = x64.max(axis=1)
-    mu = (0.5 * (mn + mx)).astype(spec.np_dtype)       # storage-rounded mu
-    mu64 = mu.astype(np.float64)
-    # radius vs the ROUNDED mu: the constant-block test then already covers
-    # the mu storage rounding of the narrow dtypes
-    radius = np.maximum(mx - mu64, mu64 - mn)
-    const = radius <= p.error_bound
-    p_e = plan_mod.float_exponent_of(p.error_bound)
-    req_m_raw = np.where(radius > 0, _exponent_exact(radius), np.int32(0)) - p_e + 1
-    req_m = np.clip(req_m_raw, 0, spec.mant_bits)
-    # Verbatim blocks: bound below the values' ulp -- store words bit-exactly
-    # by normalizing against mu = 0 (same beyond-paper rule as the f32 path)
-    verbatim = ~const & (req_m_raw > spec.mant_bits)
-    mu = np.where(verbatim, np.zeros_like(mu), mu)
-    mu64 = mu.astype(np.float64)
-    reqlen = (1 + spec.exp_bits + req_m).astype(np.int32)
-    reqlen = np.where(const, np.int32(0), reqlen)
-    shift, nbytes = derive_layout(reqlen, const, spec)   # Formula 5, shared
-                                                         # with the decode side
-
-    v = (x64 - mu64[:, None]).astype(spec.np_dtype)    # exact for verbatim
-    w = v.view(spec.uint_dtype)
-    ws = w >> shift[:, None].astype(spec.uint_dtype)
-    prev = np.concatenate(
-        [np.zeros((nb, 1), spec.uint_dtype), ws[:, :-1]], axis=1
-    )
-    xw = ws ^ prev
-    # leading identical bytes vs predecessor, capped by the 2-bit code at 3
-    itemsize = spec.itemsize
-    lz = np.zeros((nb, bs), np.int32)
-    run = np.ones((nb, bs), bool)
-    for j in range(min(3, itemsize)):
-        run = run & ((xw >> np.array(8 * (itemsize - 1 - j), spec.uint_dtype)) == 0)
-        lz += run
-    L = np.minimum(lz, nbytes[:, None])
-    # little-endian host: plane j (MSB-first) is byte itemsize-1-j
-    planes = np.ascontiguousarray(
-        ws.view(np.uint8).reshape(nb, bs, itemsize)[:, :, ::-1].transpose(0, 2, 1)
-    )
-    return BlockEncoding(mu, const, reqlen, shift, nbytes, planes, L)
-
-
-def _decode_generic(enc: BlockEncoding, p: Plan) -> np.ndarray:
-    spec = p.dtype
-    nb, itemsize, bs = enc.planes.shape
-    idxs = np.arange(bs, dtype=np.int32)[None, :]
-    ws = np.zeros((nb, bs), spec.uint_dtype)
-    # little-endian host: plane j (MSB-first) is byte itemsize-1-j of the word
-    wsb = ws.view(np.uint8).reshape(nb, bs, itemsize)
-    for j in range(min(itemsize, int(enc.nbytes.max(initial=0)))):
-        live = enc.nbytes > j
-        act = slice(None) if live.all() else np.flatnonzero(live)
-        pj = enc.planes[act, j, :]
-        Lj = enc.L[act]
-        # L <= 3, so planes past 2 (or with no L > j value) are stored verbatim
-        # for every live value -- the propagation scan is skipped
-        if j >= 3 or not (Lj > j).any():
-            wsb[act, :, itemsize - 1 - j] = pj
-            continue
-        src = np.where(Lj <= j, idxs, np.int32(-1))
-        np.maximum.accumulate(src, axis=1, out=src)    # index propagation
-        byte = np.take_along_axis(pj, np.maximum(src, 0), axis=1)
-        byte[src < 0] = 0
-        wsb[act, :, itemsize - 1 - j] = byte
-    w = ws << enc.shift[:, None].astype(spec.uint_dtype)
-    v = w.view(spec.np_dtype)
-    mu64 = enc.mu.astype(np.float64)
-    x = (v.astype(np.float64) + mu64[:, None]).astype(spec.np_dtype)
-    return np.where((enc.nbytes == 0)[:, None], enc.mu[:, None], x)
-
-
-# ---------------------------------------------------------------------------
-# public dispatch
-# ---------------------------------------------------------------------------
-
-def encode_blocks(xb: np.ndarray, p: Plan) -> BlockEncoding:
-    """(nb, bs) blocks -> fixed-shape encoding per the plan's dtype."""
-    if p.dtype.code == 0:
-        return _encode_f32(np.asarray(xb, np.float32), p)
-    return _encode_generic(xb, p)
-
-
 def decode_blocks(enc: BlockEncoding, p: Plan) -> np.ndarray:
     """Inverse of :func:`encode_blocks` -> (nb, bs) in the plan dtype.
 
     Frames whose L codes are all zero (no XOR-lead elision anywhere) take the
-    batched dense f32 path, which skips the per-byte index-propagation scan.
+    batched dense path -- for EVERY dtype -- which skips the per-byte
+    index-propagation scan.
     """
-    if p.dtype.code == 0:
-        if not enc.L.any():
-            from repro.kernels import ops
+    from repro.kernels import ops
 
-            return np.asarray(
-                ops.unpack_dense(
-                    enc.planes, enc.mu, enc.shift, enc.nbytes, backend=p.backend
-                )
+    if not enc.L.any():
+        return np.asarray(
+            ops.unpack_dense(
+                enc.planes, enc.mu, enc.shift, enc.nbytes,
+                spec=p.dtype, backend=p.backend,
             )
-        return _decode_f32(enc, p)
-    return _decode_generic(enc, p)
+        )
+    return np.asarray(
+        ops.unpack(
+            enc.planes, enc.mu, enc.shift, enc.nbytes, enc.L,
+            spec=p.dtype, backend=p.backend,
+        )
+    )

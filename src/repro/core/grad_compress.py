@@ -26,24 +26,30 @@ from repro.core.codec import PlanesCodec
 DEFAULT_BLOCK = 64
 
 
-def _encode_leaf(g, num_planes, block):
+def _encode_leaf(g, num_planes, block, backend="jax"):
     """Blocks run along the LAST axis, leading dims untouched.
 
     Flattening the leaf would destroy its TP/FSDP sharding and make GSPMD
     all-gather the full-precision gradient before encoding (measured +11 GB
     of intra-pod collectives per step on llama -- EXPERIMENTS section Perf);
-    keeping the leaf shape keeps every encode op local to its shard."""
-    enc = PlanesCodec(num_planes).encode_last_axis(g, block)
+    keeping the leaf shape keeps every encode op local to its shard.  The
+    default 'jax' backend stages the whole encode into the caller's
+    shard_map program (one fused program per leaf); 'kernel' dispatches the
+    Pallas planes kernels instead."""
+    enc = PlanesCodec(num_planes, backend=backend).encode_last_axis(g, block)
     enc["sexp"] = enc["sexp"].astype(jnp.int16)   # wire dtype: halve sexp bytes
     return enc
 
 
-def _decode_leaf(enc, shape, dtype, block):
+def _decode_leaf(enc, shape, dtype, block, backend="jax"):
     enc = dict(enc, sexp=enc["sexp"].astype(jnp.int32))
-    return PlanesCodec(enc["planes"].shape[0]).decode_last_axis(enc, shape, dtype)
+    return PlanesCodec(enc["planes"].shape[0], backend=backend).decode_last_axis(
+        enc, shape, dtype
+    )
 
 
-def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1, block: int = DEFAULT_BLOCK):
+def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1,
+                         block: int = DEFAULT_BLOCK, backend: str = "jax"):
     """Inside shard_map: compressed all-reduce-mean over `axis_name`.
 
     Returns the mean of the decoded per-member gradients plus this member's
@@ -51,14 +57,14 @@ def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1, block: i
     n = compat.axis_size(axis_name)
 
     def leaf(g):
-        enc = _encode_leaf(g, num_planes, block)
-        dec_local = _decode_leaf(enc, g.shape, jnp.float32, block)
+        enc = _encode_leaf(g, num_planes, block, backend)
+        dec_local = _decode_leaf(enc, g.shape, jnp.float32, block, backend)
         residual = g.astype(jnp.float32) - dec_local
         gathered = jax.lax.all_gather(enc, axis_name)     # leading axis n
         total = jnp.zeros(g.shape, jnp.float32)
         for i in range(n):                                # n == 2 pods: unrolled
             member = jax.tree.map(lambda a: a[i], gathered)
-            total = total + _decode_leaf(member, g.shape, jnp.float32, block)
+            total = total + _decode_leaf(member, g.shape, jnp.float32, block, backend)
         return (total / n).astype(g.dtype), residual
 
     pairs = jax.tree.map(leaf, grads)

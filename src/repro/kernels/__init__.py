@@ -1,9 +1,19 @@
 """Pallas TPU kernels for the SZx hot loops + pure-jnp oracles.
 
+All transform kernels are width-generic: parameterized by a
+:class:`repro.kernels.specs.DtypeSpec` so one implementation covers
+float32/float64/float16/bfloat16 (f64 needs 64-bit words; the dispatch layer
+runs it under ``jax.experimental.enable_x64`` and falls back to the jitted
+oracle on real TPUs, which have no 64-bit words).
+
 Modules:
+  specs.py       -- DtypeSpec: storage + compute IEEE-754 geometry
   ref.py         -- pure-jnp oracles (ground truth)
   block_stats.py -- per-block min/max/mu/radius/reqlen (Alg. 1 lines 3-7)
   pack.py        -- normalize + Solution-C shift + XOR-lead + byte planes
+  encode.py      -- FUSED stats+pack (one kernel, one round trip per chunk)
   unpack.py      -- decompression with log-time index propagation (Fig. 9)
+                    + the all-L==0 dense fast path
+  planes.py      -- szx-planes fixed-plane encode/decode (in-graph mode)
   ops.py         -- jit'd wrappers + backend dispatch
 """

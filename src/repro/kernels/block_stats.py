@@ -1,12 +1,20 @@
 """Pallas TPU kernel: per-block SZx statistics (paper Alg. 1 lines 3-7).
 
-Tiling: TILE_BLOCKS=8 SZx blocks per grid step so a tile is an (8, 128) f32
+Width-generic: the kernel is parameterized by a
+:class:`repro.kernels.specs.DtypeSpec` -- stats run in the spec's compute
+dtype (f32 for words up to 4 bytes, f64 for float64), the exponent is read
+from the compute dtype's bit field, and ``mu`` is rounded to the storage
+dtype inside the kernel.
+
+Tiling: TILE_BLOCKS=8 SZx blocks per grid step so a tile is an (8, 128)
 VPU-shaped array in VMEM (sublane x lane).  All math is add/sub/shift/compare
 (the paper's "super-lightweight" constraint); min/max are VPU lane reductions
 (the TPU analogue of the paper's warp-level reductions).
 
 Validated against ``ref.block_stats_ref`` in interpret mode (CPU container);
-on a real TPU the same ``pl.pallas_call`` compiles natively.
+on a real TPU the same ``pl.pallas_call`` compiles natively for 16/32-bit
+words (float64 has no 64-bit TPU words -- ``repro.kernels.ops`` falls back to
+the jitted oracle there).
 """
 from __future__ import annotations
 
@@ -16,44 +24,81 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+
 TILE_BLOCKS = 8
 
 
-def _kernel(e_ref, x_ref, mu_ref, rad_ref, const_ref, reqlen_ref, shift_ref, nbytes_ref):
-    x = x_ref[...]                      # (TB, bs) f32
-    e = e_ref[0]
+def stats_body(spec: DtypeSpec, x_storage, e, p_e):
+    """Trace-time stats body (paper Alg. 1 lines 3-7), shared between this
+    kernel and the fused encode kernel -- a future semantics change lands in
+    both by construction.  Returns (mu, radius, const, reqlen, shift, nbytes)
+    with reqlen/shift/nbytes already zeroed for constant blocks."""
+    cdt = spec.compute_np_dtype
+    cexp_mask = (1 << spec.compute_exp_bits) - 1
+    x = x_storage.astype(cdt)               # (TB, bs) compute dtype
     mn = jnp.min(x, axis=1)
     mx = jnp.max(x, axis=1)
-    mu = 0.5 * (mn + mx)
-    r = jnp.maximum(mx - mu, mu - mn)
-    const = r <= e
+    mu = (0.5 * (mn + mx)).astype(spec.np_dtype)   # storage-rounded mu
+    mu_w = mu.astype(cdt)
+    r = jnp.maximum(mx - mu_w, mu_w - mn)
+    r_test = r
+    if spec.stats_rounding_guard:
+        # 16-bit formats: next-up radius keeps the constant-block bound
+        # strict against the f32 subtraction rounding (see DtypeSpec)
+        bits = jax.lax.bitcast_convert_type(r, spec.compute_uint_dtype) + 1
+        r_test = jax.lax.bitcast_convert_type(bits, cdt)
+    const = r_test <= e
     rexp = (
-        (jax.lax.bitcast_convert_type(r, jnp.uint32) >> 23) & jnp.uint32(0xFF)
-    ).astype(jnp.int32) - 127
-    eexp = (
-        (jax.lax.bitcast_convert_type(e, jnp.uint32) >> 23) & jnp.uint32(0xFF)
-    ).astype(jnp.int32) - 127
-    req_m_raw = rexp - eexp + 1
-    req_m = jnp.clip(req_m_raw, 0, 23)
-    mu = jnp.where(req_m_raw > 23, jnp.float32(0), mu)  # verbatim blocks
-    reqlen = 9 + req_m
+        (jax.lax.bitcast_convert_type(r, spec.compute_uint_dtype)
+         >> spec.compute_mant_bits) & cexp_mask
+    ).astype(jnp.int32) - spec.compute_exp_bias
+    req_m_raw = rexp - p_e + 1
+    req_m = jnp.clip(req_m_raw, 0, spec.mant_bits)
+    mu = jnp.where(req_m_raw > spec.mant_bits, jnp.zeros_like(mu), mu)
+    reqlen = 1 + spec.exp_bits + req_m
     shift = (8 - reqlen % 8) % 8
     nbytes = (reqlen + shift) // 8
     zero = jnp.zeros_like(reqlen)
-    mu_ref[...] = mu
-    rad_ref[...] = r
-    const_ref[...] = const.astype(jnp.int32)
-    reqlen_ref[...] = jnp.where(const, zero, reqlen)
-    shift_ref[...] = jnp.where(const, zero, shift)
-    nbytes_ref[...] = jnp.where(const, zero, nbytes)
+    return (
+        mu,
+        r,
+        const,
+        jnp.where(const, zero, reqlen),
+        jnp.where(const, zero, shift),
+        jnp.where(const, zero, nbytes),
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def block_stats(xb: jax.Array, e: jax.Array, *, interpret: bool | None = None):
-    """xb: (nb, bs) f32, e: scalar f32 -> same tuple as ref.block_stats_ref."""
+def _make_kernel(spec: DtypeSpec):
+    def _kernel(e_ref, pe_ref, x_ref, mu_ref, rad_ref, const_ref, reqlen_ref,
+                shift_ref, nbytes_ref):
+        mu, r, const, reqlen, shift, nbytes = stats_body(
+            spec, x_ref[...], e_ref[0], pe_ref[0]
+        )
+        mu_ref[...] = mu
+        rad_ref[...] = r
+        const_ref[...] = const.astype(jnp.int32)
+        reqlen_ref[...] = reqlen
+        shift_ref[...] = shift
+        nbytes_ref[...] = nbytes
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def block_stats(xb: jax.Array, e: jax.Array, p_e: jax.Array, *,
+                spec: DtypeSpec = specs.F32, interpret: bool | None = None):
+    """xb: (nb, bs) spec dtype, e: scalar compute dtype, p_e: scalar int32
+    (exact floor(log2 e)) -> same tuple as ref.block_stats_ref."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     nb, bs = xb.shape
+    if nb == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return (jnp.zeros((0,), spec.np_dtype), jnp.zeros((0,), spec.compute_np_dtype),
+                jnp.zeros((0,), bool), z, z, z)
     pad = (-nb) % TILE_BLOCKS
     if pad:
         xb = jnp.pad(xb, ((0, pad), (0, 0)))
@@ -61,23 +106,28 @@ def block_stats(xb: jax.Array, e: jax.Array, *, interpret: bool | None = None):
     grid = (nbp // TILE_BLOCKS,)
     vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
     out_shapes = (
-        jax.ShapeDtypeStruct((nbp,), jnp.float32),   # mu
-        jax.ShapeDtypeStruct((nbp,), jnp.float32),   # radius
-        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # const flag
-        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # reqlen
-        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # shift
-        jax.ShapeDtypeStruct((nbp,), jnp.int32),     # nbytes
+        jax.ShapeDtypeStruct((nbp,), spec.np_dtype),          # mu
+        jax.ShapeDtypeStruct((nbp,), spec.compute_np_dtype),  # radius
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),              # const flag
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),              # reqlen
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),              # shift
+        jax.ShapeDtypeStruct((nbp,), jnp.int32),              # nbytes
     )
     mu, rad, const, reqlen, shift, nbytes = pl.pallas_call(
-        _kernel,
+        _make_kernel(spec),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),                  # e (broadcast)
+            pl.BlockSpec((1,), lambda i: (0,)),                  # p_e (broadcast)
             pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0)),   # x tile in VMEM
         ],
         out_specs=(vec,) * 6,
         out_shape=out_shapes,
         interpret=interpret,
-    )(jnp.reshape(e.astype(jnp.float32), (1,)), xb)
+    )(
+        jnp.reshape(e.astype(spec.compute_np_dtype), (1,)),
+        jnp.reshape(p_e.astype(jnp.int32), (1,)),
+        xb,
+    )
     sl = slice(0, nb)
     return mu[sl], rad[sl], const[sl].astype(bool), reqlen[sl], shift[sl], nbytes[sl]

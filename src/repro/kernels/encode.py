@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused SZx encode (block stats + pack in ONE kernel).
+
+The two-call pipeline (``block_stats`` then ``pack``) reads the input tile
+from VMEM twice and, driven from the host, costs two program dispatches and
+two host<->device round trips per chunk.  This kernel fuses paper Algorithm 1
+lines 3-9: each (TILE_BLOCKS, bs) tile is loaded once, the per-block stats
+(min/max/mu/radius/reqlen/shift/nbytes) are computed on the VPU lane
+reductions, and the SAME resident tile is immediately normalized, shifted
+(Solution C), XOR-lead counted, and split into byte planes.  Width-generic
+via :class:`repro.kernels.specs.DtypeSpec`, like the unfused kernels.
+
+Outputs are exactly the fields the container serializes:
+(mu, const, reqlen, shift, nbytes, planes, L) -- bit-identical to the
+two-call sequence (``ref.encode_ref`` is the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+
+TILE_BLOCKS = 8
+
+
+def _make_kernel(spec: DtypeSpec):
+    from repro.kernels.block_stats import stats_body
+    from repro.kernels.pack import pack_body, plane_byte
+
+    def _kernel(e_ref, pe_ref, x_ref, mu_ref, const_ref, reqlen_ref, shift_ref,
+                nbytes_ref, planes_ref, L_ref):
+        x = x_ref[...]                                   # (TB, bs) storage dtype
+        # stats (Alg. 1 lines 3-7) then pack (lines 8-9) on the SAME resident
+        # tile -- both bodies are the exact trace-time functions the unfused
+        # kernels run, so fused == two-call bit-identity holds by construction
+        mu, _r, const, reqlen, shift, nbytes = stats_body(
+            spec, x, e_ref[0], pe_ref[0]
+        )
+        ws, L, _mid = pack_body(spec, x, mu, shift, nbytes)
+        for j in range(spec.itemsize):
+            planes_ref[:, j, :] = plane_byte(spec, ws, j)
+        mu_ref[...] = mu
+        const_ref[...] = const.astype(jnp.int32)
+        reqlen_ref[...] = reqlen
+        shift_ref[...] = shift
+        nbytes_ref[...] = nbytes
+        L_ref[...] = L
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def encode(xb: jax.Array, e: jax.Array, p_e: jax.Array, *,
+           spec: DtypeSpec = specs.F32, interpret: bool | None = None):
+    """Fused stats+pack -> (mu, const, reqlen, shift, nbytes, planes, L).
+
+    Bit-identical to ``block_stats`` followed by ``pack`` (oracle:
+    ``ref.encode_ref``); one kernel launch, one read of the input tile.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, bs = xb.shape
+    if nb == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return (jnp.zeros((0,), spec.np_dtype), jnp.zeros((0,), bool), z, z, z,
+                jnp.zeros((0, spec.itemsize, bs), jnp.uint8),
+                jnp.zeros((0, bs), jnp.int32))
+    pad = (-nb) % TILE_BLOCKS
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    grid = (nbp // TILE_BLOCKS,)
+    vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
+    tile = pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0))
+    mu, const, reqlen, shift, nbytes, planes, L = pl.pallas_call(
+        _make_kernel(spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                  # e (broadcast)
+            pl.BlockSpec((1,), lambda i: (0,)),                  # p_e (broadcast)
+            tile,                                                # x tile in VMEM
+        ],
+        out_specs=(
+            vec, vec, vec, vec, vec,
+            pl.BlockSpec((TILE_BLOCKS, spec.itemsize, bs), lambda i: (i, 0, 0)),
+            tile,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nbp,), spec.np_dtype),         # mu
+            jax.ShapeDtypeStruct((nbp,), jnp.int32),             # const flag
+            jax.ShapeDtypeStruct((nbp,), jnp.int32),             # reqlen
+            jax.ShapeDtypeStruct((nbp,), jnp.int32),             # shift
+            jax.ShapeDtypeStruct((nbp,), jnp.int32),             # nbytes
+            jax.ShapeDtypeStruct((nbp, spec.itemsize, bs), jnp.uint8),
+            jax.ShapeDtypeStruct((nbp, bs), jnp.int32),          # L
+        ),
+        interpret=interpret,
+    )(
+        jnp.reshape(e.astype(spec.compute_np_dtype), (1,)),
+        jnp.reshape(p_e.astype(jnp.int32), (1,)),
+        xb,
+    )
+    sl = slice(0, nb)
+    return (mu[sl], const[sl].astype(bool), reqlen[sl], shift[sl], nbytes[sl],
+            planes[sl], L[sl])

@@ -1,72 +1,162 @@
-"""jit'd wrappers + backend dispatch for the SZx kernels.
+"""jit'd wrappers + backend dispatch for the width-generic SZx kernels.
 
 Backends:
   'jax'    -- jnp oracle from ``ref.py`` under ``jax.jit`` (CPU default)
   'kernel' -- Pallas TPU kernels (``interpret=True`` automatically off-TPU)
   'numpy'  -- pure-numpy mirror (no jit/dispatch overhead; host-side use)
-  'auto'   -- 'kernel' on TPU, 'jax' elsewhere
+  'auto'   -- 'kernel' on TPU, 'jax' elsewhere (override with the
+              ``SZX_OPS_BACKEND`` env var, e.g. to force the Pallas
+              interpret path on CPU CI runners)
+
+Every transform op takes a ``spec`` (:class:`repro.kernels.specs.DtypeSpec`,
+default float32) and all three backends are bit-identical per spec.  float64
+needs 64-bit words, which jax disables by default, so the jax/kernel routes
+wrap those calls in ``jax.experimental.enable_x64``; on a real TPU (no 64-bit
+words in hardware) the f64 'kernel' route falls through to the jitted oracle
+with a one-time warning.
+
+``encode`` is the fused stats+pack op: one traced program and a single
+host<->device round trip instead of two, which is what the chunked codec hot
+path stages per frame.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ref, specs
+from repro.kernels.specs import DtypeSpec
+
+_WARNED: set = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def _resolve(backend: str) -> str:
     if backend == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "jax"
+        backend = os.environ.get("SZX_OPS_BACKEND") or (
+            "kernel" if jax.default_backend() == "tpu" else "jax"
+        )
+    if backend not in ("jax", "kernel", "numpy"):
+        raise ValueError(
+            f"unknown SZx ops backend {backend!r}; "
+            "expected 'jax', 'kernel', 'numpy', or 'auto'"
+        )
     return backend
 
 
+def _x64_scope(spec: DtypeSpec):
+    """Context enabling 64-bit words for specs that need them (float64)."""
+    if spec.needs_x64:
+        from jax.experimental import enable_x64
+
+        return enable_x64()
+    return contextlib.nullcontext()
+
+
+def _kernel_route(spec: DtypeSpec, op: str) -> bool:
+    """True if the Pallas route can run this spec here; warn + False if not.
+
+    TPUs have no 64-bit words, so native (non-interpret) f64 kernels cannot
+    compile; everywhere else the kernels run (natively or interpreted).
+    """
+    if spec.needs_x64 and jax.default_backend() == "tpu":
+        _warn_once(
+            f"kernel-f64-{op}",
+            f"SZx '{op}' has no 64-bit Pallas kernel on TPU; "
+            "falling back to the jitted jnp oracle for float64",
+        )
+        return False
+    return True
+
+
 # --------------------------------------------------------------------------
-# jit'd oracle paths
+# jit'd oracle paths (spec is static: one program per dtype geometry)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=())
-def _block_stats_jax(xb, e):
-    return ref.block_stats_ref(xb, e)
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _block_stats_jax(xb, e, p_e, spec):
+    return ref.block_stats_ref(xb, e, spec, p_e)
 
 
-@jax.jit
-def _pack_jax(xb, mu, shift, nbytes):
-    return ref.pack_ref(xb, mu, shift, nbytes)
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _pack_jax(xb, mu, shift, nbytes, spec):
+    return ref.pack_ref(xb, mu, shift, nbytes, spec)
 
 
-@jax.jit
-def _unpack_jax(planes, mu, shift, nbytes, L):
-    return ref.unpack_ref(planes, mu, shift, nbytes, L)
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _encode_jax(xb, e, p_e, spec):
+    return ref.encode_ref(xb, e, spec, p_e)
 
 
-@jax.jit
-def _unpack_dense_jax(planes, mu, shift, nbytes):
-    return ref.unpack_dense_ref(planes, mu, shift, nbytes)
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _unpack_jax(planes, mu, shift, nbytes, L, spec):
+    return ref.unpack_ref(planes, mu, shift, nbytes, L, spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _unpack_dense_jax(planes, mu, shift, nbytes, spec):
+    return ref.unpack_dense_ref(planes, mu, shift, nbytes, spec)
 
 
 # --------------------------------------------------------------------------
-# numpy mirrors (bit-identical to ref.py)
+# numpy mirrors (bit-identical to ref.py, width-generic)
 # --------------------------------------------------------------------------
 
-def _np_exponent(x):
-    bits = np.asarray(x, np.float32).view(np.uint32)
-    return ((bits >> 23) & 0xFF).astype(np.int32) - 127
+def _np_exponent(x, spec: DtypeSpec = specs.F32):
+    """Exponent field of |x| in the spec's COMPUTE dtype, bias removed."""
+    cdt = spec.compute_np_dtype
+    bits = np.asarray(x, cdt).view(spec.compute_uint_dtype)
+    field = (bits >> np.asarray(spec.compute_mant_bits, spec.compute_uint_dtype)) & (
+        (1 << spec.compute_exp_bits) - 1
+    )
+    return field.astype(np.int32) - spec.compute_exp_bias
 
 
-def _block_stats_np(xb, e):
-    xb = np.asarray(xb, np.float32)
-    mn = xb.min(axis=1)
-    mx = xb.max(axis=1)
-    mu = np.float32(0.5) * (mn + mx)
-    radius = np.maximum(mx - mu, mu - mn)
-    const = radius <= np.float32(e)
-    req_m_raw = _np_exponent(radius) - _np_exponent(np.float32(e)) + 1
-    req_m = np.clip(req_m_raw, 0, 23)
-    mu = np.where(req_m_raw > 23, np.float32(0), mu)  # verbatim blocks
-    reqlen = 9 + req_m
+def _to_compute(xb, spec: DtypeSpec):
+    """Input -> storage-rounded -> compute dtype (no-copy when already there)."""
+    return (
+        np.asarray(xb)
+        .astype(spec.np_dtype, copy=False)
+        .astype(spec.compute_np_dtype, copy=False)
+    )
+
+
+def _block_stats_np(xb, e, spec: DtypeSpec, p_e: int | None = None):
+    return _block_stats_np_c(_to_compute(xb, spec), e, spec, p_e)
+
+
+def _block_stats_np_c(x, e, spec: DtypeSpec, p_e: int | None = None):
+    cdt = spec.compute_np_dtype
+    mn = x.min(axis=1)
+    mx = x.max(axis=1)
+    mu = (cdt.type(0.5) * (mn + mx)).astype(spec.np_dtype)
+    mu_w = mu.astype(cdt)
+    radius = np.maximum(mx - mu_w, mu_w - mn)
+    r_test = radius
+    if spec.stats_rounding_guard:
+        # 16-bit formats: next-up radius keeps the constant-block bound
+        # strict against the f32 subtraction rounding (see DtypeSpec)
+        r_test = (
+            radius.view(spec.compute_uint_dtype) + spec.compute_uint_dtype.type(1)
+        ).view(cdt)
+    const = r_test <= cdt.type(e)
+    if p_e is None:
+        p_e = specs.exact_exponent_of(float(e))
+    req_m_raw = _np_exponent(radius, spec) - np.int32(p_e) + 1
+    req_m = np.clip(req_m_raw, 0, spec.mant_bits)
+    mu = np.where(req_m_raw > spec.mant_bits, np.zeros_like(mu), mu)  # verbatim
+    reqlen = 1 + spec.exp_bits + req_m
     shift = (8 - reqlen % 8) % 8
     nbytes = (reqlen + shift) // 8
     z = np.zeros_like(reqlen)
@@ -80,24 +170,33 @@ def _block_stats_np(xb, e):
     )
 
 
-def _pack_np(xb, mu, shift, nbytes):
+def _pack_np(xb, mu, shift, nbytes, spec: DtypeSpec):
+    return _pack_np_c(_to_compute(xb, spec), mu, shift, nbytes, spec)
+
+
+def _pack_np_c(x, mu, shift, nbytes, spec: DtypeSpec):
     """Bit-identical to ``ref.pack_ref`` but allocation-lean: the shift runs
     in place on the normalized words and the XOR-lead run length is computed
     by byte-view equality against the predecessor (no xor word, no shifts)."""
-    xb = np.asarray(xb, np.float32)
-    nb, bs = xb.shape
-    v = xb - mu[:, None]
-    ws = v.view(np.uint32)
-    np.right_shift(ws, shift[:, None].astype(np.uint32), out=ws)
-    # little-endian byte view: plane j (MSB-first) is byte 3-j -- no shifts.
-    # L counts how many leading bytes equal the predecessor's (the first
-    # value compares against the zero word), capped at 3 by the 2-bit code.
-    wsb = ws.view(np.uint8).reshape(nb, bs, 4)
+    cdt = spec.compute_np_dtype
+    udt = spec.uint_dtype
+    itemsize = spec.itemsize
+    nb, bs = x.shape
+    mu_w = np.asarray(mu).astype(cdt, copy=False)
+    v = x - mu_w[:, None]                  # fresh, contiguous
+    if v.dtype != spec.np_dtype:
+        v = v.astype(spec.np_dtype)        # storage-rounded residual
+    ws = v.view(udt)
+    np.right_shift(ws, shift[:, None].astype(udt), out=ws)
+    # little-endian byte view: plane j (MSB-first) is byte itemsize-1-j -- no
+    # shifts.  L counts how many leading bytes equal the predecessor's (the
+    # first value compares against the zero word), capped at lead_cap.
+    wsb = ws.view(np.uint8).reshape(nb, bs, itemsize)
     L = np.zeros((nb, bs), np.int32)
     run = np.empty((nb, bs), bool)
     eq = np.empty((nb, bs), bool)
-    for j in range(3):
-        pj = wsb[:, :, 3 - j]
+    for j in range(spec.lead_cap):
+        pj = wsb[:, :, itemsize - 1 - j]
         eq[:, 0] = pj[:, 0] == 0
         np.equal(pj[:, 1:], pj[:, :-1], out=eq[:, 1:])
         if j == 0:
@@ -111,43 +210,59 @@ def _pack_np(xb, mu, shift, nbytes):
     return planes, L, mid
 
 
-def _unpack_np(planes, mu, shift, nbytes, L):
+def _encode_np(xb, e, spec: DtypeSpec, p_e: int | None = None):
+    """Fused mirror: the storage->compute upcast runs ONCE and feeds both
+    stats and pack (the 16-bit dtypes otherwise pay the widening twice)."""
+    x = _to_compute(xb, spec)
+    mu, _radius, const, reqlen, shift, nbytes = _block_stats_np_c(x, e, spec, p_e)
+    planes, L, _mid = _pack_np_c(x, mu, shift, nbytes, spec)
+    return mu, const, reqlen, shift, nbytes, planes, L
+
+
+def _unpack_np(planes, mu, shift, nbytes, L, spec: DtypeSpec):
     """Bit-identical to ``ref.unpack_ref`` but byte-oriented: planes are written
-    straight into a little-endian uint32 byte view, index propagation runs only
+    straight into a little-endian word byte view, index propagation runs only
     on planes that actually need it (some value has ``L > j``) and only over
-    blocks where the plane is live (``nbytes > j``)."""
+    blocks where the plane is live (``nbytes > j``).  The propagation itself
+    is the fused-key trick of the Pallas kernel: one cumulative max over
+    ``idx*256 + byte`` (idx dominates, so the surviving key carries the byte
+    of the nearest preceding stored position) -- no gather pass."""
+    udt = spec.uint_dtype
+    itemsize = spec.itemsize
     nb, _, bs = planes.shape
-    ws = np.zeros((nb, bs), np.uint32)
-    wsb = ws.view(np.uint8).reshape(nb, bs, 4)         # little-endian host:
-    idxs = np.arange(bs, dtype=np.int32)[None, :]      # plane j is byte 3-j
-    for j in range(min(4, int(nbytes.max(initial=0)))):
+    ws = np.zeros((nb, bs), udt)
+    wsb = ws.view(np.uint8).reshape(nb, bs, itemsize)  # little-endian host:
+    idxs256 = (np.arange(bs, dtype=np.int32) << 8)[None, :]  # plane j is byte
+    for j in range(min(itemsize, int(nbytes.max(initial=0)))):   # W-1-j
         live = nbytes > j
         act = slice(None) if live.all() else np.flatnonzero(live)
         pj = planes[act, j, :]
         Lj = L[act]
-        # L <= 3, so plane 3 (and any plane with no L > j value) is stored
-        # verbatim for every live value -- no propagation pass needed
-        if j >= 3 or not (Lj > j).any():
-            wsb[act, :, 3 - j] = pj
+        # L <= lead_cap, so planes past it (and any plane with no L > j value)
+        # are stored verbatim for every live value -- no propagation pass
+        if j >= spec.lead_cap or not (Lj > j).any():
+            wsb[act, :, itemsize - 1 - j] = pj
             continue
-        src = np.where(Lj <= j, idxs, np.int32(-1))
-        np.maximum.accumulate(src, axis=1, out=src)    # index propagation
-        byte = np.take_along_axis(pj, np.maximum(src, 0), axis=1)
-        byte[src < 0] = 0
-        wsb[act, :, 3 - j] = byte
-    w = ws << shift[:, None].astype(np.uint32)
-    v = w.view(np.float32)
-    x = v + mu[:, None]
-    return np.where((nbytes == 0)[:, None], mu[:, None], x)
+        key = np.where(Lj <= j, idxs256 | pj, np.int32(-1))
+        np.maximum.accumulate(key, axis=1, out=key)    # index propagation
+        byte = (key & 0xFF).astype(np.uint8)
+        byte[key < 0] = 0
+        wsb[act, :, itemsize - 1 - j] = byte
+    w = ws << shift[:, None].astype(udt)
+    v = w.view(spec.np_dtype)
+    cdt = spec.compute_np_dtype
+    mu_w = np.asarray(mu).astype(cdt, copy=False)
+    x = (v.astype(cdt, copy=False) + mu_w[:, None]).astype(spec.np_dtype, copy=False)
+    return np.where((nbytes == 0)[:, None], np.asarray(mu)[:, None], x)
 
 
-def _unpack_dense_np(planes, mu, shift, nbytes):
+def _unpack_dense_np(planes, mu, shift, nbytes, spec: DtypeSpec):
     """All-``L==0`` fast path.  ``_unpack_np`` already degenerates to verbatim
     byte composition on every plane when no value has ``L > j``, so delegate
     with a broadcastable all-zero L instead of duplicating the loop (the real
     dense-path win is the jitted oracle, which drops the propagation scan)."""
     return _unpack_np(
-        planes, mu, shift, nbytes, np.zeros((planes.shape[0], 1), np.int32)
+        planes, mu, shift, nbytes, np.zeros((planes.shape[0], 1), np.int32), spec
     )
 
 
@@ -193,63 +308,80 @@ def _planes_decode_np(mu, sexp, planes):
 # public API
 # --------------------------------------------------------------------------
 
-def block_stats(xb, e, *, backend: str = "auto"):
+def _as_words(xb, spec: DtypeSpec):
+    return jnp.asarray(xb, spec.np_dtype)
+
+
+def block_stats(xb, e, *, spec: DtypeSpec = specs.F32, backend: str = "auto"):
     backend = _resolve(backend)
     if backend == "numpy":
-        return _block_stats_np(xb, e)
-    if backend == "kernel":
-        from repro.kernels import block_stats as k
+        return _block_stats_np(xb, e, spec)
+    p_e = specs.exact_exponent_of(float(e))
+    with _x64_scope(spec):
+        if backend == "kernel" and _kernel_route(spec, "block_stats"):
+            from repro.kernels import block_stats as k
 
-        return k.block_stats(jnp.asarray(xb, jnp.float32), jnp.float32(e))
-    return _block_stats_jax(jnp.asarray(xb, jnp.float32), jnp.float32(e))
+            return k.block_stats(
+                _as_words(xb, spec),
+                jnp.asarray(float(e), spec.compute_np_dtype),
+                jnp.int32(p_e),
+                spec=spec,
+            )
+        return _block_stats_jax(
+            _as_words(xb, spec),
+            jnp.asarray(float(e), spec.compute_np_dtype),
+            jnp.int32(p_e),
+            spec,
+        )
 
 
-def pack(xb, mu, shift, nbytes, *, backend: str = "auto"):
+def pack(xb, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32, backend: str = "auto"):
     backend = _resolve(backend)
     if backend == "numpy":
         return _pack_np(
-            np.asarray(xb), np.asarray(mu), np.asarray(shift), np.asarray(nbytes)
+            np.asarray(xb), np.asarray(mu), np.asarray(shift), np.asarray(nbytes),
+            spec,
         )
-    if backend == "kernel":
-        from repro.kernels import pack as k
-
-        return k.pack(
-            jnp.asarray(xb, jnp.float32),
-            jnp.asarray(mu, jnp.float32),
+    with _x64_scope(spec):
+        args = (
+            _as_words(xb, spec),
+            _as_words(mu, spec),
             jnp.asarray(shift, jnp.int32),
             jnp.asarray(nbytes, jnp.int32),
         )
-    return _pack_jax(
-        jnp.asarray(xb, jnp.float32),
-        jnp.asarray(mu, jnp.float32),
-        jnp.asarray(shift, jnp.int32),
-        jnp.asarray(nbytes, jnp.int32),
-    )
+        if backend == "kernel" and _kernel_route(spec, "pack"):
+            from repro.kernels import pack as k
+
+            return k.pack(*args, spec=spec)
+        return _pack_jax(*args, spec)
 
 
-def planes_encode(xb, num_planes: int, *, backend: str = "auto"):
-    """szx-planes fixed-plane encode (see kernels.ref.planes_encode_ref).
+def encode(xb, e, *, spec: DtypeSpec = specs.F32, backend: str = "auto"):
+    """Fused block_stats + pack: (mu, const, reqlen, shift, nbytes, planes, L).
 
-    The jax path calls the oracle untraced -- in-graph callers (jit /
-    shard_map / scan bodies) stage it into their own program; there is no
-    Pallas kernel for planes yet, so 'kernel' also routes to the oracle.
+    One dispatched program (and for the jax/kernel routes a single
+    host<->device round trip) instead of the two-call stats-then-pack
+    sequence; bit-identical to calling :func:`block_stats` + :func:`pack`.
     """
-    if _resolve(backend) == "numpy":
-        return _planes_encode_np(xb, num_planes)
-    return ref.planes_encode_ref(jnp.asarray(xb, jnp.float32), num_planes)
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _encode_np(xb, e, spec)
+    p_e = specs.exact_exponent_of(float(e))
+    with _x64_scope(spec):
+        args = (
+            _as_words(xb, spec),
+            jnp.asarray(float(e), spec.compute_np_dtype),
+            jnp.int32(p_e),
+        )
+        if backend == "kernel" and _kernel_route(spec, "encode"):
+            from repro.kernels import encode as k
+
+            return k.encode(*args, spec=spec)
+        return _encode_jax(*args, spec)
 
 
-def planes_decode(mu, sexp, planes, *, backend: str = "auto"):
-    """Inverse of :func:`planes_encode`."""
-    if _resolve(backend) == "numpy":
-        return _planes_decode_np(mu, sexp, planes)
-    return ref.planes_decode_ref(
-        jnp.asarray(mu, jnp.float32), jnp.asarray(sexp, jnp.int32),
-        jnp.asarray(planes, jnp.uint8),
-    )
-
-
-def unpack(planes, mu, shift, nbytes, L, *, backend: str = "auto"):
+def unpack(planes, mu, shift, nbytes, L, *, spec: DtypeSpec = specs.F32,
+           backend: str = "auto"):
     backend = _resolve(backend)
     if backend == "numpy":
         return _unpack_np(
@@ -258,39 +390,79 @@ def unpack(planes, mu, shift, nbytes, L, *, backend: str = "auto"):
             np.asarray(shift),
             np.asarray(nbytes),
             np.asarray(L),
+            spec,
         )
-    if backend == "kernel":
-        from repro.kernels import unpack as k
-
-        return k.unpack(
-            jnp.asarray(planes, jnp.uint8),
-            jnp.asarray(mu, jnp.float32),
+    with _x64_scope(spec):
+        args = (
+            jnp.asarray(np.asarray(planes), jnp.uint8),
+            _as_words(mu, spec),
             jnp.asarray(shift, jnp.int32),
             jnp.asarray(nbytes, jnp.int32),
             jnp.asarray(L, jnp.int32),
         )
-    return _unpack_jax(
-        jnp.asarray(planes, jnp.uint8),
-        jnp.asarray(mu, jnp.float32),
-        jnp.asarray(shift, jnp.int32),
-        jnp.asarray(nbytes, jnp.int32),
-        jnp.asarray(L, jnp.int32),
-    )
+        if backend == "kernel" and _kernel_route(spec, "unpack"):
+            from repro.kernels import unpack as k
+
+            return k.unpack(*args, spec=spec)
+        return _unpack_jax(*args, spec)
 
 
-def unpack_dense(planes, mu, shift, nbytes, *, backend: str = "auto"):
+def unpack_dense(planes, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
+                 backend: str = "auto"):
     """Batched fast path for frames whose L codes are all zero: every stored
     byte sits at its own value, so decode skips the per-byte index-propagation
-    scan entirely.  Bit-identical to ``unpack(..., L=0)``.  There is no Pallas
-    kernel for this path yet, so 'kernel' routes to the jitted oracle.
+    scan entirely.  Bit-identical to ``unpack(..., L=0)``.
     """
-    if _resolve(backend) == "numpy":
+    backend = _resolve(backend)
+    if backend == "numpy":
         return _unpack_dense_np(
-            np.asarray(planes), np.asarray(mu), np.asarray(shift), np.asarray(nbytes)
+            np.asarray(planes), np.asarray(mu), np.asarray(shift),
+            np.asarray(nbytes), spec,
         )
-    return _unpack_dense_jax(
+    with _x64_scope(spec):
+        args = (
+            jnp.asarray(np.asarray(planes), jnp.uint8),
+            _as_words(mu, spec),
+            jnp.asarray(shift, jnp.int32),
+            jnp.asarray(nbytes, jnp.int32),
+        )
+        if backend == "kernel" and _kernel_route(spec, "unpack_dense"):
+            from repro.kernels import unpack as k
+
+            return k.unpack_dense(*args, spec=spec)
+        return _unpack_dense_jax(*args, spec)
+
+
+def planes_encode(xb, num_planes: int, *, backend: str = "auto"):
+    """szx-planes fixed-plane encode (see kernels.ref.planes_encode_ref).
+
+    The jax path calls the oracle untraced -- in-graph callers (jit /
+    shard_map / scan bodies) stage it into their own program.  'kernel'
+    dispatches the Pallas kernel (``repro.kernels.planes``).
+    """
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _planes_encode_np(xb, num_planes)
+    if backend == "kernel":
+        from repro.kernels import planes as k
+
+        return k.planes_encode(jnp.asarray(xb, jnp.float32), num_planes)
+    return ref.planes_encode_ref(jnp.asarray(xb, jnp.float32), num_planes)
+
+
+def planes_decode(mu, sexp, planes, *, backend: str = "auto"):
+    """Inverse of :func:`planes_encode`."""
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _planes_decode_np(mu, sexp, planes)
+    if backend == "kernel":
+        from repro.kernels import planes as k
+
+        return k.planes_decode(
+            jnp.asarray(mu, jnp.float32), jnp.asarray(sexp, jnp.int32),
+            jnp.asarray(planes, jnp.uint8),
+        )
+    return ref.planes_decode_ref(
+        jnp.asarray(mu, jnp.float32), jnp.asarray(sexp, jnp.int32),
         jnp.asarray(planes, jnp.uint8),
-        jnp.asarray(mu, jnp.float32),
-        jnp.asarray(shift, jnp.int32),
-        jnp.asarray(nbytes, jnp.int32),
     )

@@ -1,11 +1,14 @@
 """Pallas TPU kernel: SZx normalize + Solution-C shift + XOR-lead + byte planes.
 
-One grid step processes TILE_BLOCKS=8 SZx blocks -> an (8, 128) tile.  The
+Width-generic: parameterized by a :class:`repro.kernels.specs.DtypeSpec`; the
+normalized residual is rounded to the storage dtype, bitcast to the spec's
+word, and split into ``itemsize`` MSB-first byte planes.  One grid step
+processes TILE_BLOCKS=8 SZx blocks -> an (8, 128) tile.  The
 XOR-with-predecessor is a lane shift (pad+slice), the paper's per-value
-leading-byte count becomes three vectorized compares, and the byte planes are
-lane-aligned slices (Solution C is *structural* here: byte alignment is what
-makes the plane layout legal).  Output planes stay fixed-shape; compaction is
-host-side (see repro.core.szx).
+leading-byte count becomes ``lead_cap`` vectorized compares, and the byte
+planes are lane-aligned slices (Solution C is *structural* here: byte
+alignment is what makes the plane layout legal).  Output planes stay
+fixed-shape; compaction is host-side (see repro.core.codec.container).
 """
 from __future__ import annotations
 
@@ -15,37 +18,67 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+
 TILE_BLOCKS = 8
 
 
-def _kernel(x_ref, mu_ref, shift_ref, nbytes_ref, planes_ref, L_ref, mid_ref):
-    x = x_ref[...]                                   # (TB, bs) f32
-    mu = mu_ref[...]
-    shift = shift_ref[...]
-    nbytes = nbytes_ref[...]
-    v = x - mu[:, None]
-    w = jax.lax.bitcast_convert_type(v, jnp.uint32)
-    ws = w >> shift[:, None].astype(jnp.uint32)
+def pack_body(spec: DtypeSpec, x_storage, mu, shift, nbytes):
+    """Trace-time pack body (paper Alg. 1 lines 8-9), shared between this
+    kernel and the fused encode kernel.  Returns (ws, L, mid): the shifted
+    words plus the XOR-lead counts; the caller splits ``ws`` into planes
+    with :func:`plane_byte` (plane writes go straight to output refs)."""
+    cdt = spec.compute_np_dtype
+    udt = spec.uint_dtype
+    x = x_storage.astype(cdt)                        # (TB, bs)
+    mu_w = mu.astype(cdt)
+    v = (x - mu_w[:, None]).astype(spec.np_dtype)    # storage-rounded
+    w = jax.lax.bitcast_convert_type(v, udt)
+    ws = w >> shift[:, None].astype(udt)
     prev = jnp.pad(ws, ((0, 0), (1, 0)))[:, :-1]     # lane shift by 1
     xw = ws ^ prev
-    b0 = ((xw >> 24) == 0).astype(jnp.int32)
-    b1 = ((xw >> 16) == 0).astype(jnp.int32)
-    b2 = ((xw >> 8) == 0).astype(jnp.int32)
-    L = jnp.minimum(b0 + b0 * b1 + b0 * b1 * b2, nbytes[:, None])
-    for j in range(4):
-        planes_ref[:, j, :] = ((ws >> (24 - 8 * j)) & jnp.uint32(0xFF)).astype(
-            jnp.uint8
+    L = jnp.zeros(ws.shape, jnp.int32)
+    run = jnp.ones(ws.shape, bool)
+    for j in range(spec.lead_cap):
+        run = run & ((xw >> jnp.asarray(8 * (spec.itemsize - 1 - j), udt)) == 0)
+        L = L + run.astype(jnp.int32)
+    L = jnp.minimum(L, nbytes[:, None])
+    return ws, L, nbytes[:, None] - L
+
+
+def plane_byte(spec: DtypeSpec, ws, j: int):
+    """MSB-first byte plane j of the shifted words."""
+    udt = spec.uint_dtype
+    return (
+        (ws >> jnp.asarray(8 * (spec.itemsize - 1 - j), udt))
+        & jnp.asarray(0xFF, udt)
+    ).astype(jnp.uint8)
+
+
+def _make_kernel(spec: DtypeSpec):
+    def _kernel(x_ref, mu_ref, shift_ref, nbytes_ref, planes_ref, L_ref, mid_ref):
+        ws, L, mid = pack_body(
+            spec, x_ref[...], mu_ref[...], shift_ref[...], nbytes_ref[...]
         )
-    L_ref[...] = L
-    mid_ref[...] = nbytes[:, None] - L
+        for j in range(spec.itemsize):
+            planes_ref[:, j, :] = plane_byte(spec, ws, j)
+        L_ref[...] = L
+        mid_ref[...] = mid
+
+    return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def pack(xb, mu, shift, nbytes, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def pack(xb, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
+         interpret: bool | None = None):
     """Same contract as ref.pack_ref."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     nb, bs = xb.shape
+    if nb == 0:
+        return (jnp.zeros((0, spec.itemsize, bs), jnp.uint8),
+                jnp.zeros((0, bs), jnp.int32), jnp.zeros((0, bs), jnp.int32))
     pad = (-nb) % TILE_BLOCKS
     if pad:
         xb = jnp.pad(xb, ((0, pad), (0, 0)))
@@ -57,16 +90,16 @@ def pack(xb, mu, shift, nbytes, *, interpret: bool | None = None):
     vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
     tile = pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0))
     planes, L, mid = pl.pallas_call(
-        _kernel,
+        _make_kernel(spec),
         grid=grid,
         in_specs=[tile, vec, vec, vec],
         out_specs=(
-            pl.BlockSpec((TILE_BLOCKS, 4, bs), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE_BLOCKS, spec.itemsize, bs), lambda i: (i, 0, 0)),
             tile,
             tile,
         ),
         out_shape=(
-            jax.ShapeDtypeStruct((nbp, 4, bs), jnp.uint8),
+            jax.ShapeDtypeStruct((nbp, spec.itemsize, bs), jnp.uint8),
             jax.ShapeDtypeStruct((nbp, bs), jnp.int32),
             jax.ShapeDtypeStruct((nbp, bs), jnp.int32),
         ),

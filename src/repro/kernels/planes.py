@@ -1,0 +1,145 @@
+"""Pallas TPU kernels: szx-planes fixed-plane encode/decode.
+
+The in-graph (static-shape) SZx variant used for gradient/KV compression:
+per-block mu + radius-exponent-derived scale + P uint8 quantization planes.
+Previously the 'kernel' backend silently routed to the jitted jnp oracle;
+these kernels give it a real Pallas route (oracle:
+``ref.planes_encode_ref`` / ``ref.planes_decode_ref``, bit-identical).
+
+Shapes: the ops layer flattens leading dims to (nb, bs) before the call and
+restores them after, so the kernels only ever see 2-D tiles
+(TILE_BLOCKS=8 blocks x bs lanes, float32 -- szx-planes is an f32-only mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCKS = 8
+
+
+def _make_encode_kernel(num_planes: int):
+    nbits = 8 * num_planes
+    lim = float(2.0 ** (nbits - 1))   # python literal: closure-safe in pallas
+
+    def _kernel(x_ref, mu_ref, sexp_ref, planes_ref):
+        x = x_ref[...]                                   # (TB, bs) f32
+        mn = jnp.min(x, axis=1)
+        mx = jnp.max(x, axis=1)
+        mu = 0.5 * (mn + mx)
+        radius = jnp.maximum(mx - mu, mu - mn)
+        E = (
+            (jax.lax.bitcast_convert_type(radius, jnp.uint32) >> 23)
+            & jnp.uint32(0xFF)
+        ).astype(jnp.int32) - 127
+        sexp = (nbits - 2) - E
+        v = x - mu[:, None]
+        scale = jnp.exp2(sexp.astype(jnp.float32))[:, None]
+        q = jnp.clip(jnp.round(v * scale), -lim, lim - 1).astype(jnp.int32)
+        uq = q.astype(jnp.uint32)
+        for p in range(num_planes):
+            planes_ref[p, :, :] = ((uq >> (8 * p)) & jnp.uint32(0xFF)).astype(jnp.uint8)
+        mu_ref[...] = mu
+        sexp_ref[...] = sexp
+
+    return _kernel
+
+
+def _make_decode_kernel(num_planes: int):
+    nbits = 8 * num_planes
+
+    def _kernel(planes_ref, mu_ref, sexp_ref, out_ref):
+        planes = planes_ref[...]                         # (P, TB, bs) u8
+        mu = mu_ref[...]
+        sexp = sexp_ref[...]
+        uq = jnp.zeros(planes.shape[1:], jnp.int32)
+        for p in range(num_planes):
+            uq = uq | (planes[p].astype(jnp.int32) << (8 * p))
+        # sign-extend a width-`nbits` two's-complement integer (fits in int32)
+        q = jnp.where(uq >= (1 << (nbits - 1)), uq - (1 << nbits), uq).astype(
+            jnp.float32
+        )
+        out_ref[...] = q * jnp.exp2(-sexp.astype(jnp.float32))[:, None] + mu[:, None]
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("num_planes", "interpret"))
+def planes_encode(xb, num_planes: int, *, interpret: bool | None = None):
+    """Same contract as ref.planes_encode_ref; xb may have leading dims."""
+    assert 1 <= num_planes <= 3, "szx-planes supports 1..3 byte planes"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    xb = jnp.asarray(xb, jnp.float32)
+    lead = xb.shape[:-1]
+    bs = xb.shape[-1]
+    x2 = xb.reshape(-1, bs)
+    nb = x2.shape[0]
+    if nb == 0:
+        return (jnp.zeros(lead, jnp.float32), jnp.zeros(lead, jnp.int32),
+                jnp.zeros((num_planes,) + lead + (bs,), jnp.uint8))
+    pad = (-nb) % TILE_BLOCKS
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    grid = (nbp // TILE_BLOCKS,)
+    vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
+    mu, sexp, planes = pl.pallas_call(
+        _make_encode_kernel(num_planes),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0))],
+        out_specs=(
+            vec,
+            vec,
+            pl.BlockSpec((num_planes, TILE_BLOCKS, bs), lambda i: (0, i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nbp,), jnp.float32),
+            jax.ShapeDtypeStruct((nbp,), jnp.int32),
+            jax.ShapeDtypeStruct((num_planes, nbp, bs), jnp.uint8),
+        ),
+        interpret=interpret,
+    )(x2)
+    return (mu[:nb].reshape(lead), sexp[:nb].reshape(lead),
+            planes[:, :nb].reshape((num_planes,) + lead + (bs,)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def planes_decode(mu, sexp, planes, *, interpret: bool | None = None):
+    """Same contract as ref.planes_decode_ref -> (..., bs) f32."""
+    num_planes = planes.shape[0]
+    assert num_planes <= 3, "szx-planes supports 1..3 byte planes"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = planes.shape[1:-1]
+    bs = planes.shape[-1]
+    p2 = planes.reshape(num_planes, -1, bs)
+    nb = p2.shape[1]
+    if nb == 0:
+        return jnp.zeros(lead + (bs,), jnp.float32)
+    mu2 = jnp.asarray(mu, jnp.float32).reshape(-1)
+    sexp2 = jnp.asarray(sexp, jnp.int32).reshape(-1)
+    pad = (-nb) % TILE_BLOCKS
+    if pad:
+        p2 = jnp.pad(p2, ((0, 0), (0, pad), (0, 0)))
+        mu2 = jnp.pad(mu2, (0, pad))
+        sexp2 = jnp.pad(sexp2, (0, pad))
+    nbp = nb + pad
+    grid = (nbp // TILE_BLOCKS,)
+    vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
+    out = pl.pallas_call(
+        _make_decode_kernel(num_planes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((num_planes, TILE_BLOCKS, bs), lambda i: (0, i, 0)),
+            vec,
+            vec,
+        ],
+        out_specs=pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, bs), jnp.float32),
+        interpret=interpret,
+    )(p2, mu2, sexp2)
+    return out[:nb].reshape(lead + (bs,))

@@ -1,64 +1,102 @@
-"""Pure-jnp oracles for the SZx block-compression kernels.
+"""Pure-jnp oracles for the width-generic SZx block-compression kernels.
 
 These functions are the ground-truth semantics for the Pallas kernels in
-``block_stats.py`` / ``pack.py`` / ``unpack.py``.  Everything here is fixed-shape
-(the variable-length byte compaction happens at the host/serialization boundary
-in ``repro.core.szx``), which is what makes the algorithm expressible on TPU.
+``block_stats.py`` / ``pack.py`` / ``unpack.py`` / ``encode.py``.  Everything
+here is fixed-shape (the variable-length byte compaction happens at the
+host/serialization boundary in ``repro.core.codec.container``), which is what
+makes the algorithm expressible on TPU.
+
+Every transform op is parameterized by a :class:`repro.kernels.specs.DtypeSpec`
+-- ONE implementation covers float32/float64/float16/bfloat16.  Per-block
+statistics run in the spec's *compute dtype* (f32 for words up to 4 bytes,
+f64 for float64; the 16-bit formats are exact subsets of f32), the bit-level
+split runs on the *storage* word after rounding the normalized residual to the
+input dtype.  With ``spec=specs.F32`` the results are bit-identical to the
+original float32-only oracles.
 
 Notation follows the paper (Algorithm 1 / Formulas 4-5):
   mu      -- mean of min and max of a block ("mean of min/max", mu_k)
   radius  -- variation radius r_k = max(|max-mu|, |mu-min|)
-  reqlen  -- required number of leading IEEE-754 bits: 1 sign + 8 exponent +
-             R_k mantissa bits, R_k = clip(p(r_k) - p(e) + 1, 0, 23).
-             (+1 is a guard bit so the mu-subtraction rounding keeps the bound
-             strict; see DESIGN.md section 2.)
+  reqlen  -- required number of leading IEEE-754 bits: 1 sign + exp_bits
+             exponent + R_k mantissa bits, R_k = clip(p(r_k) - p(e) + 1, 0,
+             mant_bits).  (+1 is a guard bit so the mu-subtraction rounding
+             keeps the bound strict; see DESIGN.md section 2.)
   shift   -- Solution-C right shift s = (8 - reqlen % 8) % 8 (Formula 5)
-  nbytes  -- bytes kept per value = (reqlen + shift) / 8, in {2,3,4}; 0 marks a
-             constant block.
-  L       -- identical-leading-byte count vs. the predecessor (2-bit code),
-             predecessor of the first value in a block is the zero word (blocks
-             are independently decodable, as in the GPU design).
+  nbytes  -- bytes kept per value = (reqlen + shift) / 8; 0 marks a constant
+             block.
+  L       -- identical-leading-byte count vs. the predecessor (2-bit code,
+             capped at min(3, itemsize)); predecessor of the first value in a
+             block is the zero word (blocks are independently decodable, as in
+             the GPU design).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+
 F32_EXP_BIAS = 127
 
 
+def float_exponent(x, spec: DtypeSpec):
+    """Biased-removed binary exponent field of |x| in the spec's COMPUTE dtype.
+
+    floor(log2|x|) for compute-dtype normals; ``-compute_exp_bias`` for
+    zero/subnormals (conservative: a too-large exponent keeps more bits).
+    """
+    c = jnp.asarray(x, spec.compute_np_dtype)
+    bits = jax.lax.bitcast_convert_type(c, spec.compute_uint_dtype)
+    field = (bits >> spec.compute_mant_bits) & ((1 << spec.compute_exp_bits) - 1)
+    return field.astype(jnp.int32) - spec.compute_exp_bias
+
+
 def f32_exponent(x):
-    """Biased-removed binary exponent field of float32 |x|.
+    """Back-compat alias: exponent field of float32 |x|."""
+    return float_exponent(x, specs.F32)
 
-    floor(log2|x|) for normal values; -127 for zero/subnormals (conservative).
+
+def block_stats_ref(xb: jax.Array, e, spec: DtypeSpec = specs.F32, p_e=None) -> tuple:
+    """Per-block statistics (paper Alg. 1 lines 3-7), width-generic.
+
+    xb: (nb, bs) in the spec's dtype (or castable).  e: scalar absolute error
+    bound (> 0).  p_e: optional exact floor(log2 e) (int32 scalar); computed
+    from the compute-dtype exponent field of e when absent.
+    Returns (mu, radius, const, reqlen, shift, nbytes); mu is (nb,) in the
+    spec's dtype, radius in the compute dtype, the rest int32/bool (nb,)-shaped
+    with reqlen/shift/nbytes 0 for constant blocks.
     """
-    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
-    return ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - F32_EXP_BIAS
-
-
-def block_stats_ref(xb: jax.Array, e) -> tuple:
-    """Per-block statistics (paper Alg. 1 lines 3-7).
-
-    xb: (nb, bs) float32.  e: scalar absolute error bound (> 0).
-    Returns (mu, radius, const, reqlen, shift, nbytes) each (nb,)-shaped;
-    reqlen/shift/nbytes are 0 for constant blocks.
-    """
-    xb = jnp.asarray(xb, jnp.float32)
-    mn = jnp.min(xb, axis=-1)
-    mx = jnp.max(xb, axis=-1)
-    mu = 0.5 * (mn + mx)
-    radius = jnp.maximum(mx - mu, mu - mn)
-    const = radius <= e
-    req_m_raw = f32_exponent(radius) - f32_exponent(jnp.float32(e)) + 1
-    req_m = jnp.clip(req_m_raw, 0, 23)
+    cdt = spec.compute_np_dtype
+    x = jnp.asarray(xb, spec.np_dtype).astype(cdt)
+    e = jnp.asarray(e, cdt)
+    mn = jnp.min(x, axis=-1)
+    mx = jnp.max(x, axis=-1)
+    mu = (0.5 * (mn + mx)).astype(spec.np_dtype)   # storage-rounded mu
+    mu_w = mu.astype(cdt)                          # exact widening
+    # radius vs the ROUNDED mu: the constant-block test then already covers
+    # the mu storage rounding of the narrow dtypes
+    radius = jnp.maximum(mx - mu_w, mu_w - mn)
+    r_test = radius
+    if spec.stats_rounding_guard:
+        # 16-bit formats: the f32 subtraction can round BELOW the true block
+        # deviation (<= 0.5 ulp); testing the next-up radius keeps the bound
+        # strict (see DtypeSpec.stats_rounding_guard)
+        bits = jax.lax.bitcast_convert_type(radius, spec.compute_uint_dtype) + 1
+        r_test = jax.lax.bitcast_convert_type(bits, cdt)
+    const = r_test <= e
+    if p_e is None:
+        p_e = float_exponent(e, spec)
+    req_m_raw = float_exponent(radius, spec) - jnp.asarray(p_e, jnp.int32) + 1
+    req_m = jnp.clip(req_m_raw, 0, spec.mant_bits)
     # Verbatim blocks (beyond-paper robustness): if the bound is below the
-    # ulp of the normalized values (req_m_raw > 23), the mu-subtraction
+    # ulp of the normalized values (req_m_raw > mant_bits), the mu-subtraction
     # rounding alone can break the bound, so store the block bit-exactly by
     # normalizing against mu = 0.  Real SZx silently violates the bound here.
-    mu = jnp.where(req_m_raw > 23, jnp.float32(0), mu)
-    reqlen = 9 + req_m                      # 1 sign + 8 exponent + R_k mantissa
+    mu = jnp.where(req_m_raw > spec.mant_bits, jnp.zeros_like(mu), mu)
+    reqlen = 1 + spec.exp_bits + req_m      # 1 sign + exponent + R_k mantissa
     shift = (8 - reqlen % 8) % 8            # Formula (5), Solution C
-    nbytes = (reqlen + shift) // 8          # in {2, 3, 4}
+    nbytes = (reqlen + shift) // 8
     zero = jnp.zeros_like(reqlen)
     return (
         mu,
@@ -70,67 +108,107 @@ def block_stats_ref(xb: jax.Array, e) -> tuple:
     )
 
 
-def pack_ref(xb: jax.Array, mu: jax.Array, shift: jax.Array, nbytes: jax.Array):
+def pack_ref(xb: jax.Array, mu: jax.Array, shift: jax.Array, nbytes: jax.Array,
+             spec: DtypeSpec = specs.F32):
     """Normalize, right-shift (Solution C), XOR-lead, and byte-plane split.
 
-    xb: (nb, bs) f32; mu/shift/nbytes: (nb,).
+    xb: (nb, bs) spec dtype; mu: (nb,) spec dtype; shift/nbytes: (nb,) int32.
     Returns:
-      planes: (nb, 4, bs) uint8 -- byte j of the shifted word (0 = most
+      planes: (nb, itemsize, bs) uint8 -- byte j of the shifted word (0 = most
               significant).  Fixed shape; the serializer keeps only bytes with
               L <= j < nbytes.
       L:      (nb, bs) int32 -- identical leading bytes vs. predecessor,
-              clipped to [0, min(3, nbytes)].
+              clipped to [0, min(lead_cap, nbytes)].
       mid:    (nb, bs) int32 -- mid-bytes to store per value (nbytes - L).
     """
-    xb = jnp.asarray(xb, jnp.float32)
-    v = xb - mu[:, None]
-    w = jax.lax.bitcast_convert_type(v, jnp.uint32)
-    ws = w >> shift[:, None].astype(jnp.uint32)
+    cdt = spec.compute_np_dtype
+    udt = spec.uint_dtype
+    x = jnp.asarray(xb, spec.np_dtype).astype(cdt)
+    mu_w = jnp.asarray(mu, spec.np_dtype).astype(cdt)
+    v = (x - mu_w[:, None]).astype(spec.np_dtype)  # storage-rounded residual
+    w = jax.lax.bitcast_convert_type(v, udt)
+    ws = w >> shift[:, None].astype(udt)
     prev = jnp.concatenate(
-        [jnp.zeros((ws.shape[0], 1), jnp.uint32), ws[:, :-1]], axis=1
+        [jnp.zeros((ws.shape[0], 1), udt), ws[:, :-1]], axis=1
     )
     xw = ws ^ prev
-    b0 = ((xw >> 24) == 0).astype(jnp.int32)
-    b1 = ((xw >> 16) == 0).astype(jnp.int32)
-    b2 = ((xw >> 8) == 0).astype(jnp.int32)
-    L = b0 + b0 * b1 + b0 * b1 * b2                    # leading zero bytes, <= 3
+    # leading identical bytes vs predecessor (cumulative AND over MSB-first
+    # byte equality), capped by the 2-bit code / word width at lead_cap
+    L = jnp.zeros(ws.shape, jnp.int32)
+    run = jnp.ones(ws.shape, bool)
+    for j in range(spec.lead_cap):
+        run = run & ((xw >> jnp.asarray(8 * (spec.itemsize - 1 - j), udt)) == 0)
+        L = L + run.astype(jnp.int32)
     L = jnp.minimum(L, nbytes[:, None])
     planes = jnp.stack(
-        [((ws >> (24 - 8 * j)) & jnp.uint32(0xFF)).astype(jnp.uint8) for j in range(4)],
+        [
+            ((ws >> jnp.asarray(8 * (spec.itemsize - 1 - j), udt))
+             & jnp.asarray(0xFF, udt)).astype(jnp.uint8)
+            for j in range(spec.itemsize)
+        ],
         axis=1,
     )
     mid = nbytes[:, None] - L
     return planes, L, mid
 
 
-def unpack_ref(planes, mu, shift, nbytes, L):
+def encode_ref(xb: jax.Array, e, spec: DtypeSpec = specs.F32, p_e=None):
+    """Fused block_stats + pack: one traced program, one device round trip.
+
+    Returns (mu, const, reqlen, shift, nbytes, planes, L) -- exactly the
+    fields the container layer serializes.  Bit-identical to calling
+    :func:`block_stats_ref` then :func:`pack_ref`.
+    """
+    mu, _radius, const, reqlen, shift, nbytes = block_stats_ref(xb, e, spec, p_e)
+    planes, L, _mid = pack_ref(xb, mu, shift, nbytes, spec)
+    return mu, const, reqlen, shift, nbytes, planes, L
+
+
+def _compose_word(ws, mu, shift, nbytes, spec: DtypeSpec):
+    """Shift the reassembled word back, bitcast, and re-add mu (in the
+    compute dtype, rounded to storage); constant blocks decode to mu."""
+    w = ws << shift[:, None].astype(spec.uint_dtype)
+    v = jax.lax.bitcast_convert_type(w, spec.np_dtype)
+    mu_w = jnp.asarray(mu, spec.np_dtype).astype(spec.compute_np_dtype)
+    x = (v.astype(spec.compute_np_dtype) + mu_w[:, None]).astype(spec.np_dtype)
+    return jnp.where((nbytes == 0)[:, None], jnp.asarray(mu, spec.np_dtype)[:, None], x)
+
+
+def unpack_ref(planes, mu, shift, nbytes, L, spec: DtypeSpec = specs.F32):
     """Inverse of pack_ref.
 
     Reconstructs each byte either from the stored plane entry or, for the L
     leading bytes, from the most recent predecessor that stored that plane --
     the paper's GPU "index propagation" realized as a cumulative max
-    (associative scan) along the block.
-    Returns (nb, bs) float32 reconstruction (mu for constant blocks).
+    (associative scan) along the block.  Planes past the lead cap (L <= 3)
+    are always stored for live blocks, so they skip the scan entirely.
+    Returns (nb, bs) reconstruction in the spec's dtype (mu for constant
+    blocks).
     """
     nb, _, bs = planes.shape
+    udt = spec.uint_dtype
     idxs = jnp.broadcast_to(jnp.arange(bs, dtype=jnp.int32)[None, :], (nb, bs))
-    ws = jnp.zeros((nb, bs), jnp.uint32)
-    for j in range(4):
-        stored = (L <= j) & (j < nbytes[:, None])
+    ws = jnp.zeros((nb, bs), udt)
+    for j in range(spec.itemsize):
+        sh = jnp.asarray(8 * (spec.itemsize - 1 - j), udt)
+        live = j < nbytes[:, None]
+        if j >= spec.lead_cap:
+            # L <= lead_cap <= j: every live value stores this plane itself
+            byte = jnp.where(live, planes[:, j, :].astype(udt), jnp.asarray(0, udt))
+            ws = ws | (byte << sh)
+            continue
+        stored = (L <= j) & live
         src = jnp.where(stored, idxs, -1)
         src = jax.lax.cummax(src, axis=1)              # index propagation
         byte = jnp.take_along_axis(
-            planes[:, j, :].astype(jnp.uint32), jnp.maximum(src, 0), axis=1
+            planes[:, j, :].astype(udt), jnp.maximum(src, 0), axis=1
         )
-        byte = jnp.where(src >= 0, byte, jnp.uint32(0))
-        ws = ws | (byte << (24 - 8 * j))
-    w = ws << shift[:, None].astype(jnp.uint32)
-    v = jax.lax.bitcast_convert_type(w, jnp.float32)
-    x = v + mu[:, None]
-    return jnp.where((nbytes == 0)[:, None], mu[:, None], x)
+        byte = jnp.where(src >= 0, byte, jnp.asarray(0, udt))
+        ws = ws | (byte << sh)
+    return _compose_word(ws, mu, shift, nbytes, spec)
 
 
-def unpack_dense_ref(planes, mu, shift, nbytes):
+def unpack_dense_ref(planes, mu, shift, nbytes, spec: DtypeSpec = specs.F32):
     """``unpack_ref`` specialized to all-zero L codes (no XOR-lead elision).
 
     With L == 0 every live plane byte (j < nbytes) is stored at its own value,
@@ -138,15 +216,13 @@ def unpack_dense_ref(planes, mu, shift, nbytes):
     Bit-identical to ``unpack_ref(planes, mu, shift, nbytes, L=0)``.
     """
     nb, _, bs = planes.shape
-    ws = jnp.zeros((nb, bs), jnp.uint32)
-    for j in range(4):
+    udt = spec.uint_dtype
+    ws = jnp.zeros((nb, bs), udt)
+    for j in range(spec.itemsize):
         live = (nbytes > j)[:, None]
-        byte = jnp.where(live, planes[:, j, :].astype(jnp.uint32), jnp.uint32(0))
-        ws = ws | (byte << (24 - 8 * j))
-    w = ws << shift[:, None].astype(jnp.uint32)
-    v = jax.lax.bitcast_convert_type(w, jnp.float32)
-    x = v + mu[:, None]
-    return jnp.where((nbytes == 0)[:, None], mu[:, None], x)
+        byte = jnp.where(live, planes[:, j, :].astype(udt), jnp.asarray(0, udt))
+        ws = ws | (byte << jnp.asarray(8 * (spec.itemsize - 1 - j), udt))
+    return _compose_word(ws, mu, shift, nbytes, spec)
 
 
 # ---------------------------------------------------------------------------

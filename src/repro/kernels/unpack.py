@@ -1,11 +1,16 @@
-"""Pallas TPU kernel: SZx decompression (leading-byte retrieval + reassembly).
+"""Pallas TPU kernels: SZx decompression (leading-byte retrieval + reassembly).
 
-The paper's GPU "index propagation" (Fig. 9: O(log n) interleaved-addressing
-max propagation) maps 1:1 onto a log2(bs) sequence of lane shifts + maxima.
-To avoid an in-kernel gather we propagate a fused key ``idx*256 + byte`` --
-idx dominates the max, so the surviving key carries the byte of the nearest
-preceding stored position; ``key & 0xFF`` recovers it.  This is the TPU
-analogue of the paper's warp-shuffle propagation.
+Width-generic: parameterized by a :class:`repro.kernels.specs.DtypeSpec` --
+the loop runs over ``itemsize`` MSB-first byte planes and reassembles the
+spec's word.  The paper's GPU "index propagation" (Fig. 9: O(log n)
+interleaved-addressing max propagation) maps 1:1 onto a log2(bs) sequence of
+lane shifts + maxima.  To avoid an in-kernel gather we propagate a fused key
+``idx*256 + byte`` -- idx dominates the max, so the surviving key carries the
+byte of the nearest preceding stored position; ``key & 0xFF`` recovers it.
+This is the TPU analogue of the paper's warp-shuffle propagation.  Planes past
+the lead cap (the 2-bit L code tops out at 3) are always stored for live
+blocks, so they skip the propagation entirely -- which is also what makes
+``unpack_dense`` (all-``L==0`` frames) a plain masked byte composition.
 """
 from __future__ import annotations
 
@@ -15,39 +20,77 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+
 TILE_BLOCKS = 8
 
 
-def _kernel(planes_ref, mu_ref, shift_ref, nbytes_ref, L_ref, out_ref):
-    planes = planes_ref[...]                        # (TB, 4, bs) uint8
-    mu = mu_ref[...]
-    shift = shift_ref[...]
-    nbytes = nbytes_ref[...]
-    L = L_ref[...]
-    tb, _, bs = planes.shape
-    idx = jax.lax.broadcasted_iota(jnp.int32, (tb, bs), 1)
-    ws = jnp.zeros((tb, bs), jnp.uint32)
-    for j in range(4):
-        stored = (L <= j) & (j < nbytes[:, None])
-        byte = planes[:, j, :].astype(jnp.int32)
-        key = jnp.where(stored, idx * 256 + byte, -1)
-        step = 1
-        while step < bs:                             # interleaved propagation
-            shifted = jnp.pad(key, ((0, 0), (step, 0)), constant_values=-1)[:, :bs]
-            key = jnp.maximum(key, shifted)
-            step *= 2
-        b = jnp.where(key >= 0, (key & 0xFF).astype(jnp.uint32), jnp.uint32(0))
-        ws = ws | (b << (24 - 8 * j))
-    w = ws << shift[:, None].astype(jnp.uint32)
-    v = jax.lax.bitcast_convert_type(w, jnp.float32)
-    out_ref[...] = jnp.where((nbytes == 0)[:, None], mu[:, None], v + mu[:, None])
+def _compose(ws, mu, shift, nbytes, spec: DtypeSpec):
+    udt = spec.uint_dtype
+    cdt = spec.compute_np_dtype
+    w = ws << shift[:, None].astype(udt)
+    v = jax.lax.bitcast_convert_type(w, spec.np_dtype)
+    x = (v.astype(cdt) + mu[:, None].astype(cdt)).astype(spec.np_dtype)
+    return jnp.where((nbytes == 0)[:, None], mu[:, None], x)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def unpack(planes, mu, shift, nbytes, L, *, interpret: bool | None = None):
-    """Same contract as ref.unpack_ref -> (nb, bs) f32."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _make_kernel(spec: DtypeSpec):
+    udt = spec.uint_dtype
+
+    def _kernel(planes_ref, mu_ref, shift_ref, nbytes_ref, L_ref, out_ref):
+        planes = planes_ref[...]                        # (TB, itemsize, bs) u8
+        mu = mu_ref[...]
+        shift = shift_ref[...]
+        nbytes = nbytes_ref[...]
+        L = L_ref[...]
+        tb, _, bs = planes.shape
+        idx = jax.lax.broadcasted_iota(jnp.int32, (tb, bs), 1)
+        ws = jnp.zeros((tb, bs), udt)
+        for j in range(spec.itemsize):
+            sh = jnp.asarray(8 * (spec.itemsize - 1 - j), udt)
+            live = j < nbytes[:, None]
+            if j >= spec.lead_cap:
+                # L <= lead_cap <= j: every live value stored this plane
+                b = jnp.where(live, planes[:, j, :].astype(udt), jnp.asarray(0, udt))
+                ws = ws | (b << sh)
+                continue
+            stored = (L <= j) & live
+            byte = planes[:, j, :].astype(jnp.int32)
+            key = jnp.where(stored, idx * 256 + byte, -1)
+            step = 1
+            while step < bs:                             # interleaved propagation
+                shifted = jnp.pad(key, ((0, 0), (step, 0)), constant_values=-1)[:, :bs]
+                key = jnp.maximum(key, shifted)
+                step *= 2
+            b = jnp.where(key >= 0, (key & 0xFF).astype(udt), jnp.asarray(0, udt))
+            ws = ws | (b << sh)
+        out_ref[...] = _compose(ws, mu, shift, nbytes, spec)
+
+    return _kernel
+
+
+def _make_dense_kernel(spec: DtypeSpec):
+    udt = spec.uint_dtype
+
+    def _kernel(planes_ref, mu_ref, shift_ref, nbytes_ref, out_ref):
+        planes = planes_ref[...]
+        mu = mu_ref[...]
+        shift = shift_ref[...]
+        nbytes = nbytes_ref[...]
+        tb, _, bs = planes.shape
+        ws = jnp.zeros((tb, bs), udt)
+        for j in range(spec.itemsize):
+            live = (nbytes > j)[:, None]
+            b = jnp.where(live, planes[:, j, :].astype(udt), jnp.asarray(0, udt))
+            ws = ws | (b << jnp.asarray(8 * (spec.itemsize - 1 - j), udt))
+        out_ref[...] = _compose(ws, mu, shift, nbytes, spec)
+
+    return _kernel
+
+
+def _padded_call(kernel, planes, mu, shift, nbytes, extra_tiles, spec: DtypeSpec,
+                 interpret: bool):
     nb, _, bs = planes.shape
     pad = (-nb) % TILE_BLOCKS
     if pad:
@@ -55,23 +98,48 @@ def unpack(planes, mu, shift, nbytes, L, *, interpret: bool | None = None):
         mu = jnp.pad(mu, (0, pad))
         shift = jnp.pad(shift, (0, pad))
         nbytes = jnp.pad(nbytes, (0, pad))
-        L = jnp.pad(L, ((0, pad), (0, 0)))
+        extra_tiles = [jnp.pad(t, ((0, pad), (0, 0))) for t in extra_tiles]
     nbp = nb + pad
     grid = (nbp // TILE_BLOCKS,)
     vec = pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))
     tile = pl.BlockSpec((TILE_BLOCKS, bs), lambda i: (i, 0))
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_BLOCKS, 4, bs), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE_BLOCKS, spec.itemsize, bs), lambda i: (i, 0, 0)),
             vec,
             vec,
             vec,
-            tile,
-        ],
+        ] + [tile] * len(extra_tiles),
         out_specs=tile,
-        out_shape=jax.ShapeDtypeStruct((nbp, bs), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((nbp, bs), spec.np_dtype),
         interpret=interpret,
-    )(planes, mu, shift, nbytes, L)
+    )(planes, mu, shift, nbytes, *extra_tiles)
     return out[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def unpack(planes, mu, shift, nbytes, L, *, spec: DtypeSpec = specs.F32,
+           interpret: bool | None = None):
+    """Same contract as ref.unpack_ref -> (nb, bs) in the spec's dtype."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, _, bs = planes.shape
+    if nb == 0:
+        return jnp.zeros((0, bs), spec.np_dtype)
+    return _padded_call(_make_kernel(spec), planes, mu, shift, nbytes, [L],
+                        spec, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def unpack_dense(planes, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
+                 interpret: bool | None = None):
+    """All-``L==0`` fast path; bit-identical to ``unpack(..., L=0)``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, _, bs = planes.shape
+    if nb == 0:
+        return jnp.zeros((0, bs), spec.np_dtype)
+    return _padded_call(_make_dense_kernel(spec), planes, mu, shift, nbytes, [],
+                        spec, interpret)

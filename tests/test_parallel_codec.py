@@ -69,6 +69,40 @@ def test_parallel_edge_cases():
             assert np.abs(x - y).max() <= 1e-3, name
 
 
+def test_edge_shapes_exercise_fused_encode(monkeypatch):
+    """Empty-input and sub-block-shaped arrays go through the FUSED
+    ``ops.encode`` path (stats + pack in one dispatch) on both the numpy and
+    jitted-jax backends -- there is no separate two-call fallback anymore."""
+    from repro.kernels import ops
+
+    calls = []
+    real_encode = ops.encode
+    monkeypatch.setattr(
+        ops, "encode",
+        lambda xb, e, **k: calls.append(np.asarray(xb).shape) or real_encode(xb, e, **k),
+    )
+    for pf in (ops.block_stats, ops.pack):
+        name = pf.__name__
+        monkeypatch.setattr(
+            ops, name,
+            lambda *a, _n=name, **k: pytest.fail(f"edge shape used two-call {_n}"),
+        )
+    for backend in ("numpy", "jax"):
+        codec = SZxCodec(backend=backend)
+        for x in (
+            np.zeros(0, np.float32),              # empty: nb == 0
+            np.float32([1.25]),                   # single value, padded block
+            _walk(codec.block_size - 1, seed=2),  # sub-block shape
+        ):
+            frames = list(codec.compress_chunked(x, 1e-3, chunk_bytes=CHUNK))
+            y = codec.decompress_chunked(frames)
+            assert y.size == x.size
+            if x.size:
+                assert np.abs(x - y).max() <= 1e-3
+    # 2 backends x 3 shapes, all fused, all 2-D (nblocks, block_size)
+    assert len(calls) == 6 and all(len(s) == 2 for s in calls)
+
+
 def test_parallel_file_dump_load_identical(tmp_path):
     x = _walk(200_000, seed=5)
     ps, pp = tmp_path / "serial.szxf", tmp_path / "par.szxf"

@@ -1,0 +1,286 @@
+"""Width-generic kernel layer: one DtypeSpec-parameterized transform.
+
+The contracts under test:
+  * cross-backend bit-identity -- for every dtype x backend ('jax'/'numpy',
+    plus 'kernel', which runs the Pallas kernels under interpret=True on CPU)
+    the encode/decode BYTE STREAMS and the reconstructions are identical;
+  * the fused ``ops.encode`` is bit-identical to block_stats followed by pack;
+  * the all-``L==0`` dense unpack fast path dispatches for EVERY dtype, not
+    just float32;
+  * the szx-planes 'kernel' route (Pallas) matches the jnp oracle;
+  * (hypothesis, optional) the error bound |x - decode(encode(x))| <= e holds
+    for all four dtypes on arbitrary inputs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.codec import SZxCodec, plan as plan_mod, transform
+from repro.kernels import ops, specs
+
+try:  # property tests need hypothesis (dev extra); skip them if absent
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+    def _identity_deco(f):
+        return f
+
+    def given(*a, **k):  # noqa: D103
+        return _identity_deco
+
+    def settings(*a, **k):  # noqa: D103
+        return _identity_deco
+
+    class _St:  # placeholder so strategy expressions still evaluate at import
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed (pip install .[dev])"
+)
+
+BACKENDS = ["jax", "numpy", "kernel"]
+DTYPES = [s.np_dtype for s in specs.SPECS]
+_ids = [s.name for s in specs.SPECS]
+
+
+def _field(n, dtype, seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return (np.cumsum(rng.standard_normal(n)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend bit-identity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
+def test_stream_bytes_identical_across_backends(dtype):
+    x = _field(20000, dtype, seed=1)
+    e = 1e-2
+    bufs = {b: SZxCodec(backend=b).compress(x, e) for b in BACKENDS}
+    ys = {b: SZxCodec(backend=b).decompress(bufs[b]) for b in BACKENDS}
+    for b in BACKENDS[1:]:
+        assert bufs[b] == bufs["jax"], f"{np.dtype(dtype).name}: {b} bytes differ"
+        np.testing.assert_array_equal(
+            ys["jax"].view(np.uint8), ys[b].view(np.uint8),
+            err_msg=f"{np.dtype(dtype).name}: {b} reconstruction differs",
+        )
+    err = np.abs(x.astype(np.float64) - ys["jax"].astype(np.float64)).max()
+    assert err <= e
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
+def test_ops_backends_agree(dtype):
+    """Op-level matrix: block_stats / pack / unpack / unpack_dense."""
+    spec = specs.spec_for(dtype)
+    x = _field(17 * 64, dtype, seed=2, scale=0.01).reshape(17, 64)
+    e = 1e-3
+    outs = {
+        b: [np.asarray(a) for a in ops.block_stats(x, e, spec=spec, backend=b)]
+        for b in BACKENDS
+    }
+    for b in BACKENDS[1:]:
+        for a_ref, a_b in zip(outs["jax"], outs[b]):
+            np.testing.assert_array_equal(a_ref, a_b, err_msg=f"stats {b}")
+    mu, _rad, _const, _reqlen, shift, nbytes = outs["jax"]
+    packs = {
+        b: [np.asarray(a) for a in ops.pack(x, mu, shift, nbytes, spec=spec, backend=b)]
+        for b in BACKENDS
+    }
+    for b in BACKENDS[1:]:
+        for a_ref, a_b in zip(packs["jax"], packs[b]):
+            np.testing.assert_array_equal(a_ref, a_b, err_msg=f"pack {b}")
+    planes, L, _mid = packs["jax"]
+    for b in BACKENDS:
+        y = np.asarray(ops.unpack(planes, mu, shift, nbytes, L, spec=spec, backend=b))
+        np.testing.assert_array_equal(
+            y.view(np.uint8),
+            np.asarray(ops.unpack(planes, mu, shift, nbytes, L,
+                                  spec=spec, backend="jax")).view(np.uint8),
+            err_msg=f"unpack {b}",
+        )
+        d = np.asarray(
+            ops.unpack_dense(planes, mu, shift, nbytes, spec=spec, backend=b)
+        )
+        ref_d = np.asarray(
+            ops.unpack(planes, mu, shift, nbytes, np.zeros_like(L),
+                       spec=spec, backend="jax")
+        )
+        np.testing.assert_array_equal(
+            d.view(np.uint8), ref_d.view(np.uint8), err_msg=f"unpack_dense {b}"
+        )
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_encode_matches_two_call(dtype, backend):
+    spec = specs.spec_for(dtype)
+    x = _field(9 * 128, dtype, seed=3).reshape(9, 128)
+    e = 1e-2
+    mu, _rad, const, reqlen, shift, nbytes = [
+        np.asarray(a) for a in ops.block_stats(x, e, spec=spec, backend=backend)
+    ]
+    planes, L, _mid = [
+        np.asarray(a) for a in ops.pack(x, mu, shift, nbytes, spec=spec, backend=backend)
+    ]
+    fused = [np.asarray(a) for a in ops.encode(x, e, spec=spec, backend=backend)]
+    two_call = [mu, const, reqlen, shift, nbytes, planes, L]
+    names = ["mu", "const", "reqlen", "shift", "nbytes", "planes", "L"]
+    for name, a_f, a_t in zip(names, fused, two_call):
+        np.testing.assert_array_equal(a_f, a_t, err_msg=f"{backend} fused {name}")
+
+
+def test_empty_and_subblock_shapes_all_backends():
+    """The fused encode path handles nb == 0 and padded sub-block inputs."""
+    for backend in BACKENDS:
+        codec = SZxCodec(backend=backend)
+        for n in (0, 1, 127):
+            x = _field(n, np.float32, seed=4)
+            frames = list(codec.compress_chunked(x, 1e-3))
+            y = codec.decompress_chunked(frames)
+            assert y.size == n
+            if n:
+                assert np.abs(x - y).max() <= 1e-3
+
+
+# ---------------------------------------------------------------------------
+# dense (all-L==0) fast path dispatches for every dtype
+# ---------------------------------------------------------------------------
+
+def _alternating(n, dtype):
+    """Sign-alternating data: every shifted word's MSB byte differs from its
+    predecessor's (and the first value's from the zero word), so L == 0."""
+    x = np.linspace(1.0, 2.0, n)
+    x[1::2] *= -1.0
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
+def test_dense_unpack_dispatches_for_every_dtype(dtype, monkeypatch):
+    x = _alternating(1024, dtype)
+    p, xt = plan_mod.make_plan(x, 1e-3, backend="numpy")
+    enc = transform.encode_blocks(plan_mod.to_blocks(xt, p), p)
+    assert not enc.L.any(), "fixture must produce an all-L==0 frame"
+    calls = []
+    real_dense = ops.unpack_dense
+    monkeypatch.setattr(
+        ops, "unpack_dense",
+        lambda *a, **k: calls.append("dense") or real_dense(*a, **k),
+    )
+    monkeypatch.setattr(
+        ops, "unpack", lambda *a, **k: pytest.fail("dense frame used slow unpack")
+    )
+    y = transform.decode_blocks(enc, p)
+    assert calls == ["dense"]
+    assert np.abs(x.astype(np.float64) - y.reshape(-1)[: x.size].astype(np.float64)).max() <= 1e-3
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
+def test_dense_and_sparse_unpack_bit_identical(dtype):
+    """unpack_dense(planes, ...) == unpack(planes, ..., L=0) for every dtype."""
+    spec = specs.spec_for(dtype)
+    x = _field(8 * 128, dtype, seed=5).reshape(8, 128)
+    mu, _r, _c, _q, shift, nbytes = ops.block_stats(x, 1e-2, spec=spec, backend="numpy")
+    planes, L, _m = ops.pack(x, mu, shift, nbytes, spec=spec, backend="numpy")
+    dense = ops.unpack_dense(planes, mu, shift, nbytes, spec=spec, backend="numpy")
+    sparse = ops.unpack(planes, mu, shift, nbytes, np.zeros_like(L),
+                        spec=spec, backend="numpy")
+    np.testing.assert_array_equal(
+        np.asarray(dense).view(np.uint8), np.asarray(sparse).view(np.uint8)
+    )
+
+
+def test_f16_const_test_guards_subtraction_rounding():
+    """float32 holds every f16 VALUE exactly but not every DIFFERENCE of two
+    of them: the radius subtraction can round up to half an ulp below the
+    true deviation, so a block could be declared constant with a real error
+    just above e.  The 16-bit specs therefore test the next-up radius
+    against e (DtypeSpec.stats_rounding_guard); this fixture sets e exactly
+    AT the f32-rounded radius, which is BELOW the true deviation."""
+    x = np.array([-1.751e-03, 2554.0], np.float16)
+    mn, mx = (float(v) for v in x.astype(np.float64))
+    mu = float(np.float16(np.float32(0.5) * (np.float32(mn) + np.float32(mx))))
+    true_radius = max(mx - mu, mu - mn)                 # exact: f64 covers f16
+    r32 = max(np.float32(mx) - np.float32(mu), np.float32(mu) - np.float32(mn))
+    e = float(r32)
+    assert e < true_radius, "fixture must round the radius below the truth"
+    for backend in BACKENDS:
+        codec = SZxCodec(block_size=2, backend=backend)
+        y = codec.decompress(codec.compress(x, e))
+        err = np.abs(x.astype(np.float64) - y.astype(np.float64)).max()
+        assert err <= e, f"{backend}: {err} > {e}"
+
+
+def test_backend_typo_rejected():
+    """A misspelled backend (including via SZX_OPS_BACKEND) fails loudly
+    instead of silently routing to the jax oracle."""
+    with pytest.raises(ValueError, match="unknown SZx ops backend"):
+        ops.block_stats(np.zeros((1, 8), np.float32), 1e-3, backend="kernels")
+    with pytest.raises(ValueError, match="unknown SZx ops backend"):
+        SZxCodec(backend="Kernel").compress(np.zeros(8, np.float32), 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# szx-planes 'kernel' route (Pallas) matches the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_planes", [1, 2, 3])
+def test_planes_kernel_backend_matches_jax(num_planes):
+    xb = np.random.default_rng(7).standard_normal((9, 64)).astype(np.float32)
+    mu_j, sexp_j, pl_j = (np.asarray(a) for a in
+                          ops.planes_encode(xb, num_planes, backend="jax"))
+    mu_k, sexp_k, pl_k = (np.asarray(a) for a in
+                          ops.planes_encode(xb, num_planes, backend="kernel"))
+    np.testing.assert_array_equal(mu_j, mu_k)
+    np.testing.assert_array_equal(sexp_j, sexp_k)
+    np.testing.assert_array_equal(pl_j, pl_k)
+    dec_j = np.asarray(ops.planes_decode(mu_j, sexp_j, pl_j, backend="jax"))
+    dec_k = np.asarray(ops.planes_decode(mu_j, sexp_j, pl_j, backend="kernel"))
+    # the staged kernel may contract q*scale+mu into an FMA (single rounding)
+    # where the eager oracle rounds twice -- integer planes above are exact,
+    # the float reconstruction is compared to 1 ulp at the data's magnitude
+    # (v + mu cancels, so the relative error of tiny results is larger)
+    atol = float(np.abs(dec_j).max()) * 2e-7
+    np.testing.assert_allclose(dec_j, dec_k, rtol=0, atol=atol)
+
+
+def test_planes_kernel_leading_dims():
+    """The ops layer flattens leading dims for the Pallas planes kernels."""
+    x = np.random.default_rng(8).standard_normal((3, 5, 2, 32)).astype(np.float32)
+    for b in ("jax", "kernel", "numpy"):
+        mu, sexp, planes = (np.asarray(a) for a in ops.planes_encode(x, 2, backend=b))
+        assert mu.shape == (3, 5, 2) and planes.shape == (2, 3, 5, 2, 32)
+        y = np.asarray(ops.planes_decode(mu, sexp, planes, backend=b))
+        assert y.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# (optional) property-based round trip across all dtypes
+# ---------------------------------------------------------------------------
+
+@needs_hypothesis
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(min_value=1, max_value=600),
+    e_exp=st.integers(min_value=-6, max_value=0),
+    dtype_i=st.integers(min_value=0, max_value=len(specs.SPECS) - 1),
+)
+def test_property_error_bound_all_dtypes(data, n, e_exp, dtype_i):
+    spec = specs.SPECS[dtype_i]
+    e = 10.0 ** e_exp
+    raw = data.draw(
+        st.lists(
+            st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, width=32),
+            min_size=n, max_size=n,
+        )
+    )
+    x = np.asarray(raw, np.float64).astype(spec.np_dtype)
+    codec = SZxCodec(backend="numpy")
+    y = codec.decompress(codec.compress(x, e))
+    assert y.dtype == spec.np_dtype
+    assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= e

@@ -50,10 +50,29 @@ def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float
     kinds = [k for k, v in base.items() if isinstance(v, dict)]
     if not kinds:
         return ["baseline chunked_dump_load section has no benchmark kinds"]
+    # a fresh row with no committed counterpart means the baseline predates
+    # the benchmark: a silent pass here would let the new row drift unchecked
+    for kind in (k for k, v in new.items() if isinstance(v, dict)):
+        if kind not in base:
+            errors.append(
+                f"baseline missing row {kind} -- regenerate "
+                "BENCH_codec_smoke.json (SZX_BENCH_N-matched "
+                "`python -m benchmarks.run chunked_dump_load`) so the new "
+                "row is gated too"
+            )
     for kind in kinds:
         got = new.get(kind)
         if not isinstance(got, dict):
             errors.append(f"{kind}: missing from fresh results")
+            continue
+        for key in THROUGHPUT_KEYS + ("cr",):
+            missing = [side for side, row in (("baseline", base[kind]), ("fresh", got))
+                       if key not in row]
+            if missing:
+                errors.append(
+                    f"{kind}.{key}: missing from {' and '.join(missing)} results"
+                )
+        if any(e.startswith(f"{kind}.") and "missing" in e for e in errors):
             continue
         for key in THROUGHPUT_KEYS:
             b, f = float(base[kind][key]), float(got[key])

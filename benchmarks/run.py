@@ -350,6 +350,25 @@ workers = (os.cpu_count() or 1) if kind == "chunked-par" else 1
 codec = SZxCodec(backend="numpy", workers=workers)
 rel = 1e-3
 
+
+def make_tree(x):
+    # checkpoint-shaped pytree over the same bytes: 4 big float leaves plus
+    # small integer leaves that ride in the shared raw pack frame
+    q = x.size // 4
+    return {
+        "layers": {f"w{i}": x[i * q : (i + 1) * q] for i in range(4)},
+        "step": np.int64(7),
+        "opt": {"count": np.arange(64, dtype=np.int32)},
+    }
+
+
+if kind == "tree_checkpoint":
+    from repro.core.codec import TreeCodec
+
+    tree_codec = TreeCodec(
+        codec=codec, error_bound=rel, mode="rel", chunk_bytes=8 << 20
+    )
+
 reps = int(os.environ.get("SZX_BENCH_REPS", 3))   # best-of-N vs host noise
 if phase == "dump":
     rng = np.random.default_rng(0)
@@ -364,6 +383,11 @@ if phase == "dump":
             with open(path, "wb") as f:
                 f.write(buf)
             stored = len(buf)
+        elif kind == "tree_checkpoint":
+            tree = make_tree(x)
+            with open(path, "wb") as f:
+                tree_codec.compress_tree(tree, f)
+            stored = os.path.getsize(path)
         else:
             with open(path, "wb") as f:
                 stored = codec.dump_chunked(x, f, e, chunk_bytes=8 << 20)
@@ -375,12 +399,19 @@ else:
         if kind == "mono":
             with open(path, "rb") as f:
                 y = codec.decompress(f.read())
+        elif kind == "tree_checkpoint":
+            with open(path, "rb") as f:
+                out = tree_codec.decompress_tree(f)
+            y = np.concatenate([out[f"layers/w{i}"] for i in range(4)])
         else:
             with open(path, "rb") as f:
                 y = codec.load_chunked(f)
         dt = min(dt, time.time() - t0)
     stored = os.path.getsize(path)
-    assert y.size == n_elems and y.dtype == dtype
+    if kind == "tree_checkpoint":
+        assert y.size == 4 * (n_elems // 4) and y.dtype == dtype
+    else:
+        assert y.size == n_elems and y.dtype == dtype
 
 rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": stored, "n": n,
@@ -396,7 +427,9 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     thread per core (byte output identical to 'chunked').  The
     'chunked-f64' / 'chunked-bf16' legs run the SAME byte volume
     (SZX_BENCH_N * 4 bytes) through the width-generic kernel layer in those
-    dtypes, gating the per-dtype fast paths.  Results also land in
+    dtypes, gating the per-dtype fast paths.  'tree_checkpoint' pushes the
+    same bytes through the pytree front-end (TreeCodec: multi-leaf
+    container-v3 stream with index footer), gating the checkpoint path.  Results also land in
     BENCH_codec.json at the repo root (override the path with
     SZX_BENCH_JSON, the f32-equivalent element count with SZX_BENCH_N) to
     anchor the codec perf trajectory; benchmarks/check_regression.py gates
@@ -406,7 +439,8 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     n = int(os.environ.get("SZX_BENCH_N", 1 << 26))
     out: dict = {"n": n}
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
-    for kind in ("mono", "chunked", "chunked-par", "chunked-f64", "chunked-bf16"):
+    for kind in ("mono", "chunked", "chunked-par", "chunked-f64", "chunked-bf16",
+                 "tree_checkpoint"):
         path = os.path.join(tmpdir, f"{kind}.szx")
         res = {}
         for phase in ("dump", "load"):

@@ -1,26 +1,36 @@
 """Fault-tolerant checkpoint manager with optional SZx compression.
 
-Layout (one directory per step):
+Layout (one directory per step, MANIFEST v2):
     <root>/step_000123/
-        MANIFEST.json      -- tree structure, shapes, dtypes, codec, step
-        <leaf-id>.bin      -- raw .npy bytes or SZx stream per leaf
+        MANIFEST.json      -- {"manifest_version": 2, "step", "time",
+                               "file": "tree.szt", "leaves": [...]}
+        tree.szt           -- ONE container-v3 multi-leaf TreeCodec stream
+                              (small/integer leaves in the shared raw pack,
+                              large float leaves as chunked SZx frames,
+                              seekable index footer)
         _COMMITTED         -- atomic commit marker (written last)
+
+v1 checkpoints (one ``<leaf-id>.bin`` file per leaf, written by earlier
+revisions) remain restorable; ``manifest_version`` is absent there.
 
 Features required at 1000-node scale and implemented here:
   * atomic commit (tmp dir + rename + marker file): a crashed writer never
-    corrupts the latest checkpoint
-  * keep-last-k garbage collection
+    corrupts the latest checkpoint; the previous _COMMITTED step stays
+    restorable through any mid-save crash
+  * keep-last-k garbage collection over COMMITTED steps only
   * background (async) save thread so the train loop is not blocked
   * error-bounded SZx compression of float leaves (the paper's Fig. 13
-    dump/load use case: compression above PFS bandwidth = faster I/O wall),
-    native per-dtype streams (f32/f64/f16/bf16) via repro.core.codec
-  * chunked frame streams for large leaves: bounded-memory compression and
-    restore of arbitrarily big arrays (codec 'szx-chunked'); ``workers > 1``
-    runs the frame bodies on a thread pool with byte-identical output
+    dump/load use case: compression above PFS bandwidth = faster I/O wall)
+    through ``TreeCodec`` -- one stream file per step instead of per leaf,
+    chunked frame bodies on ``workers`` threads, bounded save/restore memory
+  * partial restore: ``restore_leaves(names)`` reads ONLY the selected
+    leaves' byte ranges via the v3 index footer (elastic single-shard
+    restore); full ``restore`` also reads leaf-by-leaf through the index
   * cross-topology restore: leaves are stored as full logical arrays, so any
     mesh can load any checkpoint (elastic scaling); device placement is the
     caller's (jax.device_put with the new sharding)
-  * integer leaves that SZx would mangle (ints, step counters) are stored raw
+  * integer leaves that SZx would mangle (ints, step counters) are stored
+    raw in the shared pack frame and round-trip bit-exactly
 """
 from __future__ import annotations
 
@@ -29,23 +39,17 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Optional
+from typing import Iterable, Optional
 
 import jax
 import numpy as np
 
-from repro.core.codec import SZxCodec, plan as codec_plan
+from repro.core.codec import SZxCodec, TreeCodec
+from repro.core.codec.tree import leaf_name, np_dtype_for
 
 _MARKER = "_COMMITTED"
-
-
-def _leaf_paths(tree) -> list[tuple[str, Any]]:
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for kp, leaf in flat:
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
-        out.append((name, leaf))
-    return out
+_STREAM = "tree.szt"
+MANIFEST_VERSION = 2
 
 
 class CheckpointManager:
@@ -60,6 +64,7 @@ class CheckpointManager:
         async_save: bool = False,
         chunk_bytes: int = 64 << 20,
         workers: int = 1,
+        backend: str = "numpy",
     ):
         self.root = root
         self.keep = keep
@@ -67,11 +72,20 @@ class CheckpointManager:
         self.error_bound = error_bound
         self.mode = mode
         self.async_save = async_save
-        # leaves larger than chunk_bytes are written as self-delimiting SZx
-        # frame sequences so save/restore memory stays bounded per leaf;
-        # workers > 1 runs those frames on a thread pool (identical bytes)
         self.chunk_bytes = chunk_bytes
-        self._codec = SZxCodec(workers=workers)
+        # leaves are device_get'd to host before they reach the codec, so the
+        # numpy host mirror is the default; pass backend='auto' to route the
+        # frame bodies through the device-resident encode instead
+        self._codec = SZxCodec(workers=workers, backend=backend)
+        # compress=False stores EVERY leaf raw: min_compress_elems above any
+        # real leaf size routes all of them into the shared pack frame
+        self._tree_codec = TreeCodec(
+            codec=self._codec,
+            error_bound=error_bound,
+            mode=mode,
+            chunk_bytes=chunk_bytes,
+            min_compress_elems=1024 if compress else (1 << 62),
+        )
         self._thread: Optional[threading.Thread] = None
         self._last_error: Optional[BaseException] = None
         os.makedirs(root, exist_ok=True)
@@ -107,45 +121,17 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "time": time.time(), "leaves": []}
-        for i, (name, leaf) in enumerate(_leaf_paths(host_tree)):
-            arr = np.asarray(leaf)
-            fn = f"{i:05d}.bin"
-            codec = "raw"
-            compressible = (
-                self.compress
-                and arr.dtype in codec_plan.BY_DTYPE
-                and arr.size >= 1024
-            )
-            path = os.path.join(tmp, fn)
-            if compressible and arr.nbytes > self.chunk_bytes:
-                # large leaf: stream self-delimiting frames, O(chunk) memory
-                with open(path, "wb") as f:
-                    stored = self._codec.dump_chunked(
-                        arr, f, self.error_bound, mode=self.mode,
-                        chunk_bytes=self.chunk_bytes,
-                    )
-                codec = "szx-chunked"
-            else:
-                if compressible:
-                    data = self._codec.compress(arr, self.error_bound, mode=self.mode)
-                    codec = "szx"
-                else:
-                    data = arr.tobytes()
-                with open(path, "wb") as f:
-                    f.write(data)
-                stored = len(data)
-            manifest["leaves"].append(
-                {
-                    "name": name,
-                    "file": fn,
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "codec": codec,
-                    "raw_bytes": arr.nbytes,
-                    "stored_bytes": stored,
-                }
-            )
+        with open(os.path.join(tmp, _STREAM), "wb") as f:
+            stream_manifest = self._tree_codec.compress_tree(host_tree, f)
+        manifest = {
+            "manifest_version": MANIFEST_VERSION,
+            "step": step,
+            "time": time.time(),
+            "file": _STREAM,
+            "leaves": stream_manifest["leaves"],
+            "raw_bytes": stream_manifest["raw_bytes"],
+            "stored_bytes": stream_manifest["stored_bytes"],
+        }
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(manifest, f)
         with open(os.path.join(tmp, _MARKER), "w") as f:
@@ -156,7 +142,7 @@ class CheckpointManager:
         self._gc()
 
     def _gc(self) -> None:
-        steps = self.all_steps()
+        steps = self.all_steps()   # committed steps only, by construction
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"), ignore_errors=True)
 
@@ -173,11 +159,7 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template, step: Optional[int] = None, *, shardings=None):
-        """Restore into the structure of `template` (arrays or ShapeDtypeStructs).
-
-        `shardings`: optional matching pytree of Shardings -- enables elastic
-        restore onto any mesh topology."""
+    def _step_dir(self, step: Optional[int]) -> tuple[str, dict]:
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -185,44 +167,71 @@ class CheckpointManager:
         d = os.path.join(self.root, f"step_{step:09d}")
         with open(os.path.join(d, "MANIFEST.json")) as f:
             manifest = json.load(f)
+        return d, manifest
+
+    def restore(self, template, step: Optional[int] = None, *, shardings=None):
+        """Restore into the structure of `template` (arrays or ShapeDtypeStructs).
+
+        `shardings`: optional matching pytree of Shardings -- enables elastic
+        restore onto any mesh topology."""
+        d, manifest = self._step_dir(step)
         by_name = {m["name"]: m for m in manifest["leaves"]}
 
         leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
         shard_leaves = (
             jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
         )
+        names = [leaf_name(kp) for kp, _ in leaves_t]
+        for name in names:
+            if name not in by_name:
+                raise KeyError(f"leaf {name} not in checkpoint step {manifest['step']}")
+        if manifest.get("manifest_version", 1) >= 2:
+            with open(os.path.join(d, manifest["file"]), "rb") as f:
+                arrays = self._tree_codec.decompress_tree(f, select=names)
+        else:
+            arrays = {n: self._restore_leaf_v1(d, by_name[n]) for n in names}
         out = []
-        for idx, (kp, leaf) in enumerate(leaves_t):
-            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
-            meta = by_name.get(name)
-            if meta is None:
-                raise KeyError(f"leaf {name} not in checkpoint step {step}")
-            dtype = np.dtype(meta["dtype"]) if meta["dtype"] != "bfloat16" else jax.numpy.bfloat16
-            if meta["codec"] == "szx-chunked":
-                n = int(np.prod(meta["shape"], dtype=np.int64)) if meta["shape"] else 1
-                with open(os.path.join(d, meta["file"]), "rb") as f:
-                    arr = self._codec.load_chunked(f, n=n)   # O(leaf+chunk) peak
-                arr = arr.reshape(meta["shape"]).astype(dtype)
-            elif meta["codec"] == "szx":
-                with open(os.path.join(d, meta["file"]), "rb") as f:
-                    data = f.read()
-                arr = self._codec.decompress(data).reshape(meta["shape"]).astype(dtype)
-            else:
-                with open(os.path.join(d, meta["file"]), "rb") as f:
-                    data = f.read()
-                arr = np.frombuffer(data, dtype=dtype).reshape(meta["shape"])
+        for idx, name in enumerate(names):
+            arr = arrays[name]
             if shard_leaves is not None:
                 arr = jax.device_put(arr, shard_leaves[idx])
             out.append(arr)
         return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
 
+    def restore_leaves(
+        self, names: Iterable[str], step: Optional[int] = None
+    ) -> dict[str, np.ndarray]:
+        """Partial restore: read ONLY the named leaves' byte ranges (v3 index
+        seek) -- the elastic single-shard restore path."""
+        d, manifest = self._step_dir(step)
+        if manifest.get("manifest_version", 1) >= 2:
+            with open(os.path.join(d, manifest["file"]), "rb") as f:
+                return self._tree_codec.decompress_tree(f, select=list(names))
+        by_name = {m["name"]: m for m in manifest["leaves"]}
+        out = {}
+        for n in names:
+            if n not in by_name:
+                raise KeyError(f"leaf {n} not in checkpoint step {manifest['step']}")
+            out[n] = self._restore_leaf_v1(d, by_name[n])
+        return out
+
+    def _restore_leaf_v1(self, d: str, meta: dict) -> np.ndarray:
+        """Per-leaf-file layout of pre-TreeCodec checkpoints."""
+        dtype = np_dtype_for(meta["dtype"])
+        if meta["codec"] == "szx-chunked":
+            n = int(np.prod(meta["shape"], dtype=np.int64)) if meta["shape"] else 1
+            with open(os.path.join(d, meta["file"]), "rb") as f:
+                arr = self._codec.load_chunked(f, n=n)
+            return arr.reshape(meta["shape"]).astype(dtype)
+        with open(os.path.join(d, meta["file"]), "rb") as f:
+            data = f.read()
+        if meta["codec"] == "szx":
+            return self._codec.decompress(data).reshape(meta["shape"]).astype(dtype)
+        return np.frombuffer(data, dtype=dtype).reshape(meta["shape"])
+
     def stats(self, step: Optional[int] = None) -> dict:
-        if step is None:
-            step = self.latest_step()
-        d = os.path.join(self.root, f"step_{step:09d}")
-        with open(os.path.join(d, "MANIFEST.json")) as f:
-            manifest = json.load(f)
+        _, manifest = self._step_dir(step)
         raw = sum(m["raw_bytes"] for m in manifest["leaves"])
         stored = sum(m["stored_bytes"] for m in manifest["leaves"])
-        return {"step": step, "raw_bytes": raw, "stored_bytes": stored,
+        return {"step": manifest["step"], "raw_bytes": raw, "stored_bytes": stored,
                 "ratio": raw / max(stored, 1)}

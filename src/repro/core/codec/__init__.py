@@ -8,14 +8,23 @@ Layers:
   container  -- versioned header + section serialization, self-delimiting
                 chunk frames (Alg. 1 l. 10, the host compaction boundary)
 
+  device     -- device-resident stream assembly: the fused encode AND the
+                byte-layout derivation run on device; a chunk reaches the
+                host as ONE device_get (DeviceEncoding, the record shared by
+                every consumer)
+
 Front-ends over the same core:
   SZxCodec    -- byte-stream codec (monolithic + chunked streaming,
                  multi-dtype: f32/f64/f16/bf16)
   PlanesCodec -- fixed-shape in-graph codec (gradient / KV-cache compression)
+  TreeCodec   -- pytree codec: one multi-leaf container-v3 stream per tree,
+                 seekable index footer, select= partial restore
 """
-from repro.core.codec import container, plan, transform  # noqa: F401
+from repro.core.codec import container, device, plan, transform  # noqa: F401
+from repro.core.codec.device import DeviceEncoding  # noqa: F401
 from repro.core.codec.plan import DEFAULT_BLOCK_SIZE  # noqa: F401
 from repro.core.codec.planes_codec import PlanesCodec  # noqa: F401
+from repro.core.codec.tree import TreeCodec  # noqa: F401
 from repro.core.codec.szx_codec import (  # noqa: F401
     DEFAULT_CHUNK_BYTES,
     CompressionStats,

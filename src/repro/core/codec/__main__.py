@@ -1,0 +1,166 @@
+"""File CLI for the SZx codec (parity with the reference ``szx`` tool).
+
+    python -m repro.core.codec compress   IN.bin OUT.szx --dtype float32 \
+        --error-bound 1e-3 --mode rel
+    python -m repro.core.codec decompress IN.szx OUT.bin
+    python -m repro.core.codec info       IN.szx
+
+``compress`` reads a raw binary array (``--dtype`` elements), writes a
+chunked container-v3 stream (self-delimiting frames + seekable index
+footer; ``--no-index`` emits a footer-less v2 frame sequence).
+``decompress`` restores the raw binary; ``info`` prints the stream header
+and index without decoding.  Exit code is non-zero on any error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def _dtype(name: str) -> np.dtype:
+    from repro.core.codec.tree import np_dtype_for
+
+    return np_dtype_for(name)
+
+
+def _cmd_compress(args) -> int:
+    from repro.core.codec import SZxCodec
+
+    dtype = _dtype(args.dtype)
+    data = np.fromfile(args.input, dtype=dtype)
+    codec = SZxCodec(
+        block_size=args.block_size, backend=args.backend, workers=args.workers
+    )
+    with open(args.output, "wb") as f:
+        written = codec.dump_chunked(
+            data, f, args.error_bound, mode=args.mode,
+            chunk_bytes=args.chunk_bytes, index=not args.no_index,
+        )
+    raw = data.nbytes
+    print(
+        f"{args.input}: {raw} -> {written} bytes "
+        f"(CR {raw / max(written, 1):.2f}, n={data.size} {dtype.name}, "
+        f"{args.mode} {args.error_bound:g})"
+    )
+    return 0
+
+
+def _cmd_decompress(args) -> int:
+    from repro.core.codec import SZxCodec
+
+    codec = SZxCodec(backend=args.backend, workers=args.workers)
+    with open(args.input, "rb") as f:
+        arr = codec.load_chunked(f)
+    arr.tofile(args.output)
+    print(f"{args.input}: restored {arr.size} {arr.dtype} -> {args.output}")
+    return 0
+
+
+def _scan_frames(f, container):
+    """Sequential frame walk for footer-less v2 streams, through the
+    container's validating iterator (magic/version/seq-order/LAST checks):
+    (nframes, nraw, total elements, dtype code, e)."""
+    nframes = nraw = 0
+    total_n = 0
+    dtype_code = None
+    e = None
+    for payload, flags in container.iter_frames(f, with_flags=True):
+        nframes += 1
+        if flags & container.FLAG_RAW:
+            nraw += 1                          # raw pack: no v2 header inside
+        else:
+            dtype_code, n, e = container.peek_stream_meta(payload)
+            total_n += n
+    return nframes, nraw, total_n, dtype_code, e
+
+
+def _cmd_info(args) -> int:
+    from repro.core.codec import container, plan
+
+    with open(args.input, "rb") as f:
+        idx = container.read_index_footer(f)
+        if idx is None:
+            f.seek(0)
+            nframes, nraw, total_n, dtype_code, e = _scan_frames(f, container)
+        else:
+            # answer from the index: no full-file walk.  Read at most one
+            # frame header (the first non-raw frame) for dtype/e.
+            kind = idx.get("kind")
+            nframes = len(idx["frames"])
+            nraw = 1 if kind == "szx-tree" else 0
+            dtype_code = e = None
+            if kind == "szx-tree":
+                total_n = sum(
+                    m["n"] for m in idx["leaves"] if m["codec"] == "szx"
+                )
+                szx_leaves = [m for m in idx["leaves"] if m["codec"] == "szx"]
+                first = szx_leaves[0]["frames"][0] if szx_leaves else None
+            else:
+                total_n = idx.get("n", 0)
+                dtype_code = idx.get("dtype")
+                first = 0 if idx["frames"] else None
+            if first is not None and (dtype_code is None or e is None):
+                off, length = idx["frames"][first][:2]
+                payload, _flags = container.read_frame_at(f, off, length, first)
+                dtype_code, _n, e = container.peek_stream_meta(payload)
+    dtype = plan.spec_for_code(dtype_code).name if dtype_code is not None else "n/a"
+    bound = f"{e:g}" if e is not None else "n/a"
+    print(f"frames: {nframes} ({nraw} raw), elements: {total_n}, "
+          f"dtype: {dtype}, e: {bound}")
+    print(f"index footer: {'v' + str(idx['v']) if idx else 'absent (v2 stream)'}")
+    if idx:
+        print(f"indexed frames: {len(idx['frames'])}, kind: {idx.get('kind')}")
+        if idx.get("kind") == "szx-tree":
+            print(f"leaves: {len(idx['leaves'])} "
+                  f"(raw {idx['raw_bytes']} -> stored {idx['stored_bytes']} bytes)")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.codec", description=__doc__.splitlines()[0]
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("compress", help="raw binary -> chunked SZx stream")
+    c.add_argument("input")
+    c.add_argument("output")
+    c.add_argument("--error-bound", type=float, required=True,
+                   help="ABS bound, or REL factor with --mode rel")
+    c.add_argument("--mode", choices=("abs", "rel"), default="abs")
+    c.add_argument("--dtype", default="float32",
+                   help="element dtype of the raw input (float32/float64/"
+                        "float16/bfloat16)")
+    c.add_argument("--block-size", type=int, default=128)
+    c.add_argument("--chunk-bytes", type=int, default=64 << 20)
+    c.add_argument("--workers", type=int, default=1)
+    c.add_argument("--backend", default="auto")
+    c.add_argument("--no-index", action="store_true",
+                   help="omit the container-v3 index footer")
+    c.set_defaults(fn=_cmd_compress)
+
+    d = sub.add_parser("decompress", help="SZx stream -> raw binary")
+    d.add_argument("input")
+    d.add_argument("output")
+    d.add_argument("--workers", type=int, default=1)
+    d.add_argument("--backend", default="auto")
+    d.set_defaults(fn=_cmd_decompress)
+
+    i = sub.add_parser("info", help="print stream header/index summary")
+    i.add_argument("input")
+    i.set_defaults(fn=_cmd_info)
+
+    args = ap.parse_args(argv)
+    import struct
+
+    try:
+        return args.fn(args)
+    except (OSError, ValueError, TypeError, struct.error) as err:
+        print(f"error: {err}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,6 +39,16 @@ FRAME_MAGIC = b"SZXF"
 FRAME_VERSION = 1
 FRAME_HEADER = struct.Struct("<4sBBIQ")
 FLAG_LAST = 0x01
+FLAG_RAW = 0x02        # payload is raw bytes, not a v2 SZx stream (v3 packs)
+
+# container v3: a frame sequence MAY be followed by a seekable index footer
+# (JSON index payload + fixed trailer at the very end of the stream), which
+# gives per-frame/per-leaf random access.  v2 streams (no footer) still
+# decode; v2 readers predating the footer reject v3 files on the trailing
+# bytes, which is the intended forward-compat failure mode.
+INDEX_MAGIC = b"SZXI"
+INDEX_VERSION = 1
+INDEX_TRAILER = struct.Struct("<4sBBHQI")   # magic|ver|flags|reserved|len|crc32
 
 
 # ---------------------------------------------------------------------------
@@ -225,10 +235,84 @@ def parse_stream(buf: bytes, *, backend: str = "auto") -> tuple[Plan, BlockEncod
 # self-delimiting frames (chunked streaming)
 # ---------------------------------------------------------------------------
 
-def build_frame(payload: bytes, seq: int, last: bool) -> bytes:
-    """Wrap one v2 stream as a self-delimiting frame."""
-    flags = FLAG_LAST if last else 0
+def build_frame(payload: bytes, seq: int, last: bool, *, raw: bool = False) -> bytes:
+    """Wrap one payload (v2 stream, or raw bytes with ``raw=True``) as a
+    self-delimiting frame."""
+    flags = (FLAG_LAST if last else 0) | (FLAG_RAW if raw else 0)
     return FRAME_HEADER.pack(FRAME_MAGIC, FRAME_VERSION, flags, seq, len(payload)) + payload
+
+
+# ---------------------------------------------------------------------------
+# container v3: seekable index footer
+# ---------------------------------------------------------------------------
+
+def build_index_footer(index: dict) -> bytes:
+    """Serialize an index dict as the v3 footer: JSON payload + trailer.
+
+    Appended AFTER the LAST-flagged frame; the trailer sits at the very end
+    of the stream so a reader can find the index with two seeks.
+    """
+    import json
+    import zlib
+
+    payload = json.dumps(index, separators=(",", ":"), default=float).encode()
+    # leading sentinel magic: lets a sequential frame reader recognize "the
+    # rest of this stream is the index footer" from the first 4 bytes
+    return INDEX_MAGIC + payload + INDEX_TRAILER.pack(
+        INDEX_MAGIC, INDEX_VERSION, 0, 0, len(payload), zlib.crc32(payload)
+    )
+
+
+def read_index_footer(f) -> dict | None:
+    """Read the v3 index footer of a seekable stream; None if absent (v2).
+
+    Corrupt footers (bad CRC, truncated index, unsupported version) raise --
+    a stream that CLAIMS to have an index must have a valid one.  The file
+    position is left at the start of the index payload's JSON on success.
+    """
+    import json
+    import zlib
+
+    end = f.seek(0, 2)
+    if end < INDEX_TRAILER.size:
+        return None
+    f.seek(end - INDEX_TRAILER.size)
+    magic, version, _flags, _res, ilen, crc = INDEX_TRAILER.unpack(
+        _read_exact(f, INDEX_TRAILER.size)
+    )
+    if magic != INDEX_MAGIC:
+        return None
+    if version != INDEX_VERSION:
+        raise ValueError(f"unsupported SZx index footer version {version}")
+    if ilen > end - INDEX_TRAILER.size:
+        raise ValueError("corrupt SZx index footer (index longer than stream)")
+    f.seek(end - INDEX_TRAILER.size - ilen)
+    payload = _read_exact(f, ilen)
+    if zlib.crc32(payload) != crc:
+        raise ValueError("corrupt SZx index footer (CRC mismatch)")
+    return json.loads(payload)
+
+
+def read_frame_at(f, offset: int, length: int, seq: int) -> tuple[bytes, int]:
+    """Random-access read of one frame via its index entry.
+
+    Seeks to ``offset``, reads exactly ``length`` bytes, validates the frame
+    header against the expected ``seq``, and returns ``(payload, flags)``.
+    """
+    f.seek(offset)
+    frame = _read_exact(f, length)
+    if len(frame) < FRAME_HEADER.size:
+        raise ValueError("truncated SZx frame (shorter than frame header)")
+    magic, version, flags, fseq, plen = FRAME_HEADER.unpack_from(frame, 0)
+    if magic != FRAME_MAGIC:
+        raise ValueError("bad SZx frame (magic mismatch)")
+    if version != FRAME_VERSION:
+        raise ValueError(f"unsupported SZx frame version {version}")
+    if fseq != seq:
+        raise ValueError(f"SZx index/frame seq mismatch (frame {fseq}, index {seq})")
+    if len(frame) != FRAME_HEADER.size + plen:
+        raise ValueError("truncated SZx frame (payload length mismatch)")
+    return frame[FRAME_HEADER.size:], flags
 
 
 def _read_exact(f, size: int) -> bytes:
@@ -240,34 +324,50 @@ def _read_exact(f, size: int) -> bytes:
     return data
 
 
-def iter_frames(source) -> Iterator[bytes]:
+def peek_stream_meta(payload: bytes) -> tuple[int, int, float]:
+    """(dtype code, element count, absolute bound) of one v2 payload's
+    header -- the layout-aware peek for index builders and `info` tools."""
+    if len(payload) < HEADER.size:
+        raise ValueError("truncated SZx stream (shorter than header)")
+    _m, _v, dtype_code, _bs, n, e, _nb, _nnc, _nmid = HEADER.unpack_from(payload, 0)
+    return dtype_code, n, e
+
+
+def iter_frames(source, *, with_flags: bool = False) -> Iterator:
     """Yield frame payloads from bytes, a binary file object, or an iterable
     of frame byte strings.  Validates magic, version, sequence numbers, and
-    that the sequence terminates with a LAST-flagged frame."""
+    that the sequence terminates with a LAST-flagged frame.  With
+    ``with_flags=True`` yields ``(payload, flags)`` pairs instead."""
     if isinstance(source, (bytes, bytearray, memoryview)):
         import io
 
         source = io.BytesIO(source)
     if hasattr(source, "read"):
-        yield from _iter_frames_file(source)
-        return
+        it = _iter_frames_file(source)
+    else:
+        it = _iter_frames_iterable(source)
+    for payload, flags in it:
+        yield (payload, flags) if with_flags else payload
+
+
+def _iter_frames_iterable(source) -> Iterator[tuple[bytes, int]]:
     # iterable of per-frame byte strings (e.g. straight from compress_chunked)
     seq_expected = 0
     saw_last = False
     for frame in source:
         if saw_last:
             raise ValueError("SZx frame after the LAST-flagged frame")
-        payload, last = _parse_one_frame(frame, seq_expected)
-        saw_last = last
+        payload, flags = _parse_one_frame(frame, seq_expected)
+        saw_last = bool(flags & FLAG_LAST)
         seq_expected += 1
-        yield payload
+        yield payload, flags
     if seq_expected == 0:
         raise ValueError("empty SZx frame sequence")
     if not saw_last:
         raise ValueError("SZx frame sequence ended without a LAST frame")
 
 
-def _parse_one_frame(frame: bytes, seq_expected: int) -> tuple[bytes, bool]:
+def _parse_one_frame(frame: bytes, seq_expected: int) -> tuple[bytes, int]:
     if len(frame) < FRAME_HEADER.size:
         raise ValueError("truncated SZx frame (shorter than frame header)")
     magic, version, flags, seq, plen = FRAME_HEADER.unpack_from(frame, 0)
@@ -279,10 +379,10 @@ def _parse_one_frame(frame: bytes, seq_expected: int) -> tuple[bytes, bool]:
         raise ValueError(f"SZx frame out of order (seq {seq}, expected {seq_expected})")
     if len(frame) != FRAME_HEADER.size + plen:
         raise ValueError("truncated SZx frame (payload length mismatch)")
-    return frame[FRAME_HEADER.size:], bool(flags & FLAG_LAST)
+    return frame[FRAME_HEADER.size:], flags
 
 
-def _iter_frames_file(f) -> Iterator[bytes]:
+def _iter_frames_file(f) -> Iterator[tuple[bytes, int]]:
     seq_expected = 0
     while True:
         if seq_expected == 0:
@@ -305,9 +405,12 @@ def _iter_frames_file(f) -> Iterator[bytes]:
             raise ValueError(
                 f"SZx frame out of order (seq {seq}, expected {seq_expected})"
             )
-        yield _read_exact(f, plen)
+        yield _read_exact(f, plen), flags
         seq_expected += 1
         if flags & FLAG_LAST:
-            if f.read(1):
+            # v3 streams carry an index footer after the LAST frame; anything
+            # else trailing is an error (frame after LAST, garbage, ...)
+            tail = f.read(len(INDEX_MAGIC))
+            if tail and tail != INDEX_MAGIC:
                 raise ValueError("SZx frame after the LAST-flagged frame")
             return

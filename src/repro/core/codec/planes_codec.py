@@ -47,6 +47,54 @@ class PlanesCodec:
 
         return ops.planes_decode(mu, sexp, planes, backend=self.backend)
 
+    # -------------------------------------------------- DeviceEncoding views
+    def encode_blocks_device(self, xb) -> "DeviceEncoding":
+        """:meth:`encode_blocks` as the shared device-resident record
+        (kind ``"szx-planes"``, arrays mu/sexp/planes)."""
+        from repro.core.codec.device import DeviceEncoding
+
+        mu, sexp, planes = self.encode_blocks(xb)
+        return DeviceEncoding.make(
+            "szx-planes",
+            {"mu": mu, "sexp": sexp, "planes": planes},
+            num_planes=self.num_planes,
+        )
+
+    def decode_encoding(self, enc: "DeviceEncoding"):
+        """Inverse of :meth:`encode_blocks_device` (accepts any integer sexp
+        storage dtype -- wire/cache casts are the caller's)."""
+        self._check_kind(enc)
+        return self.decode_blocks(
+            enc["mu"], jnp.asarray(enc["sexp"], jnp.int32), enc["planes"]
+        )
+
+    def encode_last_axis_device(self, x, block: int) -> "DeviceEncoding":
+        """:meth:`encode_last_axis` as a ``DeviceEncoding`` (the gradient
+        all-gather payload: a pytree, so it flows through collectives)."""
+        from repro.core.codec.device import DeviceEncoding
+
+        return DeviceEncoding.make(
+            "szx-planes",
+            self.encode_last_axis(x, block),
+            num_planes=self.num_planes,
+            block=block,
+        )
+
+    def decode_last_axis_encoding(self, enc: "DeviceEncoding", shape, dtype):
+        self._check_kind(enc)
+        return self.decode_last_axis(
+            dict(enc.arrays, sexp=jnp.asarray(enc["sexp"], jnp.int32)), shape, dtype
+        )
+
+    def _check_kind(self, enc) -> None:
+        if enc.kind != "szx-planes":
+            raise ValueError(f"PlanesCodec cannot decode encoding kind {enc.kind!r}")
+        got = enc.info.get("num_planes", self.num_planes)
+        if got != self.num_planes:
+            raise ValueError(
+                f"encoding has {got} planes, codec configured for {self.num_planes}"
+            )
+
     # ------------------------------------------------------------ leaf level
     def encode_last_axis(self, x, block: int) -> dict[str, Any]:
         """Block along the LAST axis only, leading dims untouched.

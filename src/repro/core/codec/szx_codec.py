@@ -90,9 +90,19 @@ class SZxCodec:
         return self._compress_planned(xt, p)
 
     def _compress_planned(self, xt: np.ndarray, p: Plan) -> bytes:
+        from repro.kernels import ops
+
         xb = plan_mod.to_blocks(xt, p)
-        enc = transform.encode_blocks(xb, p)
-        return container.build_stream(p, enc)
+        if ops._resolve(p.backend) == "numpy":
+            # host mirror: encode + serialize entirely in numpy (byte-identical
+            # to the device path; this is also the benchmark hot path)
+            enc = transform.encode_blocks(xb, p)
+            return container.build_stream(p, enc)
+        # device backends: fused stats+pack AND layout derivation stay on
+        # device; the frame reaches the host as ONE device_get (device.py)
+        from repro.core.codec import device
+
+        return device.encode_to_stream(xb, p)
 
     def decompress(self, buf: bytes) -> np.ndarray:
         """Decompress one v2 stream -> flat array in the stream's dtype."""
@@ -115,6 +125,47 @@ class SZxCodec:
         )
 
     # ---------------------------------------------------------------- chunked
+    def iter_chunk_payloads(
+        self,
+        x,
+        error_bound: float,
+        *,
+        mode: str = "abs",
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        dtype=None,
+    ) -> Iterator[tuple[bytes, bool]]:
+        """Yield ``(payload, is_last)`` covering ``x`` in chunk order.
+
+        The frame-less core of :meth:`compress_chunked` -- and the ONE place
+        the chunk count is derived, so every wrapper agrees on which payload
+        closes the sequence.  The error bound is resolved over the FULL
+        array first (so 'rel' mode matches the monolithic stream -- every
+        chunk carries the same absolute ``e``), then each block-aligned
+        chunk is compressed independently; each payload is bit-identical to
+        ``compress(chunk, e_abs)``.  With ``workers > 1`` the chunk bodies
+        run concurrently but payloads are yielded strictly in order.
+        Callers that interleave several arrays into one stream
+        (``TreeCodec``) wrap these in their own frames.
+        """
+        x = np.asarray(x)
+        if dtype is not None:
+            x = x.astype(np.dtype(dtype), copy=False)
+        spec = plan_mod.spec_for(x.dtype)
+        e = plan_mod.resolve_error_bound(x, error_bound, mode, spec)
+        flat = x.reshape(-1)
+        per_chunk = plan_mod.chunk_elements(self.block_size, chunk_bytes, spec.itemsize)
+        nchunks = max((flat.size + per_chunk - 1) // per_chunk, 1)
+
+        def payload(i: int) -> bytes:
+            return self.compress(flat[i * per_chunk : (i + 1) * per_chunk], e, mode="abs")
+
+        if self.workers > 1 and nchunks > 1:
+            payloads = _imap_ordered(payload, range(nchunks), self.workers)
+        else:
+            payloads = map(payload, range(nchunks))
+        for i, pl in enumerate(payloads):
+            yield pl, i == nchunks - 1
+
     def compress_chunked(
         self,
         x,
@@ -126,33 +177,17 @@ class SZxCodec:
     ) -> Iterator[bytes]:
         """Yield self-delimiting frames covering ``x`` in order.
 
-        The error bound is resolved over the FULL array first (so 'rel' mode
-        matches the monolithic stream), then each block-aligned chunk is
-        compressed independently: peak memory is O(workers * chunk), and each
-        frame payload is bit-identical to ``compress(chunk, e_abs)``.  With
-        ``workers > 1`` the chunk bodies run concurrently but frames are
-        yielded strictly in order, so the byte stream is identical to the
-        serial one.
+        Frames wrap :meth:`iter_chunk_payloads` payloads: peak memory is
+        O(workers * chunk), each payload bit-identical to the monolithic
+        compression of its slice, the byte stream identical for any worker
+        count.
         """
-        x = np.asarray(x)
-        if dtype is not None:
-            x = x.astype(np.dtype(dtype), copy=False)
-        spec = plan_mod.spec_for(x.dtype)
-        e = plan_mod.resolve_error_bound(x, error_bound, mode, spec)
-        flat = x.reshape(-1)
-        per_chunk = plan_mod.chunk_elements(self.block_size, chunk_bytes, spec.itemsize)
-        nchunks = max((flat.size + per_chunk - 1) // per_chunk, 1)
-
-        def frame(i: int) -> bytes:
-            sl = flat[i * per_chunk : (i + 1) * per_chunk]
-            payload = self.compress(sl, e, mode="abs")
-            return container.build_frame(payload, i, last=(i == nchunks - 1))
-
-        if self.workers > 1 and nchunks > 1:
-            yield from _imap_ordered(frame, range(nchunks), self.workers)
-        else:
-            for i in range(nchunks):
-                yield frame(i)
+        for i, (payload, last) in enumerate(
+            self.iter_chunk_payloads(
+                x, error_bound, mode=mode, chunk_bytes=chunk_bytes, dtype=dtype
+            )
+        ):
+            yield container.build_frame(payload, i, last=last)
 
     def decompress_chunked(self, frames, *, n: int | None = None) -> np.ndarray:
         """Decompress a frame sequence -> flat array.
@@ -210,20 +245,78 @@ class SZxCodec:
             return out
         return np.concatenate(parts) if len(parts) > 1 else parts[0]
 
-    def dump_chunked(self, x, fileobj, error_bound: float, **kw) -> int:
+    def dump_chunked(self, x, fileobj, error_bound: float, *, index: bool = True,
+                     **kw) -> int:
         """Stream ``compress_chunked`` frames straight to a file; returns
-        bytes written.  Peak memory stays O(workers * chunk)."""
+        bytes written.  Peak memory stays O(workers * chunk).
+
+        With ``index=True`` (the default) a container-v3 footer is appended
+        after the LAST frame: per-frame ``[offset, length, elements]`` plus
+        the stream totals, enabling random access (``load_chunked`` with
+        ``select=``).  ``index=False`` reproduces the footer-less v2 stream.
+        """
+        x_arr = np.asarray(x)
         written = 0
-        for frame in self.compress_chunked(x, error_bound, **kw):
+        frames_idx: list[list[int]] = []
+        dtype_code = None
+        for frame in self.compress_chunked(x_arr, error_bound, **kw):
+            if index:
+                dtype_code, payload_n, _e = container.peek_stream_meta(
+                    memoryview(frame)[container.FRAME_HEADER.size:]
+                )
+                frames_idx.append([written, len(frame), int(payload_n)])
             fileobj.write(frame)
             written += len(frame)
+        if index:
+            footer = container.build_index_footer(
+                {
+                    "v": container.INDEX_VERSION,
+                    "kind": "szx-chunked",
+                    "n": int(x_arr.size),
+                    "dtype": dtype_code,
+                    "frames": frames_idx,
+                }
+            )
+            fileobj.write(footer)
+            written += len(footer)
         return written
 
-    def load_chunked(self, fileobj, *, n: int | None = None) -> np.ndarray:
+    def load_chunked(self, fileobj, *, n: int | None = None,
+                     select=None) -> np.ndarray:
         """Read + decompress a frame sequence from a file object.  Pass ``n``
         (total element count) to preallocate: peak memory
-        O(n + workers * chunk)."""
-        return self.decompress_chunked(fileobj, n=n)
+        O(n + workers * chunk).
+
+        ``select``: an iterable of frame indices -- decode ONLY those frames
+        (concatenated in the given order), reading only their byte ranges via
+        the container-v3 index footer (requires a seekable stream written
+        with ``index=True``; raises ValueError on v2 streams).
+        """
+        if select is None:
+            return self.decompress_chunked(fileobj, n=n)
+        idx = container.read_index_footer(fileobj)
+        if idx is None:
+            raise ValueError(
+                "select= needs a container-v3 index footer; this stream has "
+                "none (rewrite it with dump_chunked(..., index=True))"
+            )
+        if idx.get("kind") != "szx-chunked":
+            raise ValueError(
+                f"not a single-array chunked stream (footer kind "
+                f"{idx.get('kind')!r}); tree streams restore via "
+                "TreeCodec.decompress_tree"
+            )
+        frames = idx["frames"]
+        parts = []
+        for i in select:
+            if not 0 <= i < len(frames):
+                raise IndexError(f"frame {i} out of range [0, {len(frames)})")
+            off, length, _elems = frames[i]
+            payload, _flags = container.read_frame_at(fileobj, off, length, i)
+            parts.append(self.decompress(payload))
+        if not parts:
+            raise ValueError("empty SZx frame selection")
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]
 
 
 # functional API (compat shim repro.core.szx re-exports these)

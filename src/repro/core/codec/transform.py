@@ -7,10 +7,15 @@ ONE execution path for every dtype (f32/f64/f16/bf16): the width-generic
 kernel layer in ``repro.kernels`` -- the plan's
 :class:`~repro.core.codec.plan.DtypeSpec` parameterizes the word geometry and
 the ``backend`` field picks the implementation ('jax' jitted oracle, 'kernel'
-Pallas, 'numpy' mirror; all bit-identical per spec).  Encode uses the FUSED
-``ops.encode`` (stats + pack staged as one program -- one host<->device round
-trip per chunk instead of two); decode dispatches the all-``L==0`` dense fast
-path whenever a frame has no XOR-lead elision, for every dtype.
+Pallas, 'numpy' mirror; all bit-identical per spec).
+
+These are thin HOST adapters: the device backends' encode hot path lives in
+``repro.core.codec.device`` (fused stats+pack AND byte-layout derivation in
+one jitted program, one ``device_get`` per chunk); :func:`encode_blocks`
+remains the fixed-shape entry the host ('numpy') serializer and the decode
+side use.  Encode stays the FUSED ``ops.encode`` (stats + pack as one
+program); decode dispatches the all-``L==0`` dense fast path whenever a
+frame has no XOR-lead elision, for every dtype.
 """
 from __future__ import annotations
 

@@ -1,0 +1,278 @@
+"""Pytree front-end: TreeCodec (multi-leaf container-v3 streams).
+
+One codec call per PYTREE instead of per leaf: :meth:`TreeCodec.compress_tree`
+flattens any pytree into one container-v3 stream -- small leaves (integers,
+step counters, tiny floats) are packed back-to-back into a single shared
+raw frame near the start of the file, large float leaves run through the
+existing chunked worker pipeline (``SZxCodec.iter_chunk_payloads``, one
+independent v2 payload per block-aligned chunk) -- and appends the seekable
+index footer mapping every leaf to its frames and byte ranges.
+
+:meth:`TreeCodec.decompress_tree` restores the whole tree into a template,
+or -- with ``select=`` -- reads ONLY the byte ranges of the named leaves
+(elastic single-shard restore: any host can pull just its shard's leaves out
+of a full checkpoint stream without touching the rest of the file).
+
+The error bound is resolved PER LEAF over the leaf's full value range (so
+``mode='rel'`` means the same thing it does for a monolithic compression of
+that leaf, regardless of how the leaf is chunked into frames).  This is the
+tree-level API the checkpoint manager, and any future sharded/async stream
+writer, sit on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Iterator
+
+import numpy as np
+
+from repro.core.codec import container, plan as plan_mod
+from repro.core.codec.szx_codec import (
+    DEFAULT_CHUNK_BYTES,
+    SZxCodec,
+    _imap_ordered,
+)
+
+STREAM_KIND = "szx-tree"
+
+
+def leaf_name(keypath) -> str:
+    """'/'-joined name of one pytree keypath (dict keys, sequence indices,
+    dataclass fields).  The ONE definition shared by save and restore --
+    these strings are the lookup keys joining the two sides."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+
+
+def leaf_paths(tree) -> list[tuple[str, Any]]:
+    """Flatten a pytree into ``(name, leaf)`` pairs (see :func:`leaf_name`)."""
+    import jax
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(leaf_name(kp), leaf) for kp, leaf in flat]
+
+
+def np_dtype_for(name: str) -> np.dtype:
+    """np.dtype from its manifest string, including the ml_dtypes extension
+    floats (bfloat16) that plain ``np.dtype`` does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except (AttributeError, TypeError):
+            raise TypeError(f"unknown dtype name {name!r}") from None
+
+
+@dataclass(frozen=True)
+class TreeCodec:
+    """Configured pytree codec; instances are cheap and immutable.
+
+    ``codec`` supplies the per-chunk byte codec (backend, block size, worker
+    pool); ``error_bound``/``mode`` are resolved per leaf; leaves smaller
+    than ``min_compress_elems`` (or of non-float dtype) are stored raw in
+    the shared pack frame.
+    """
+
+    codec: SZxCodec = field(default_factory=SZxCodec)
+    error_bound: float = 1e-6
+    mode: str = "rel"
+    chunk_bytes: int = DEFAULT_CHUNK_BYTES
+    min_compress_elems: int = 1024
+
+    # ------------------------------------------------------------- compress
+    def _compressible(self, arr: np.ndarray) -> bool:
+        return arr.dtype in plan_mod.BY_DTYPE and arr.size >= self.min_compress_elems
+
+    def compress_tree(self, tree, fileobj) -> dict:
+        """Write ``tree`` as one container-v3 multi-leaf stream; returns the
+        stream manifest (the same dict stored in the index footer).
+
+        Layout: frame 0 is the shared raw pack (all small/integer leaves
+        back-to-back), then each large float leaf's chunk frames in leaf
+        order; the index footer closes the stream.  Peak memory stays
+        O(workers * chunk) for the compressed leaves.
+        """
+        import jax
+
+        leaves = [
+            (name, np.asarray(jax.device_get(leaf)))
+            for name, leaf in leaf_paths(tree)
+        ]
+        raw_leaves = [(n, a) for n, a in leaves if not self._compressible(a)]
+        big_leaves = [(n, a) for n, a in leaves if self._compressible(a)]
+
+        manifest: dict = {
+            "v": container.INDEX_VERSION,
+            "kind": STREAM_KIND,
+            "leaves": [],
+            "frames": [],
+        }
+
+        # frame 0: shared raw pack, STREAMED leaf by leaf (the payload length
+        # is known upfront, so no concatenated in-memory copy is built).
+        # Every stream carries this frame -- possibly empty -- so the frame
+        # sequence is well-formed even for all-raw or empty trees; it is
+        # also the LAST frame when no compressed leaves follow.
+        pack_size = sum(int(a.nbytes) for _, a in raw_leaves)
+        flags = container.FLAG_RAW | (0 if big_leaves else container.FLAG_LAST)
+        header = container.FRAME_HEADER.pack(
+            container.FRAME_MAGIC, container.FRAME_VERSION, flags, 0, pack_size
+        )
+        manifest["frames"].append([0, len(header) + pack_size])
+        fileobj.write(header)
+        written = len(header)
+        inner = 0
+        for name, arr in raw_leaves:
+            data = arr.tobytes()               # O(leaf), not O(total raw)
+            fileobj.write(data)
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "codec": "raw",
+                    "dtype": str(arr.dtype),
+                    "shape": list(arr.shape),
+                    "n": int(arr.size),
+                    "raw_bytes": int(arr.nbytes),
+                    "stored_bytes": len(data),
+                    "frames": [0, 1],
+                    "pack": [inner, len(data)],
+                }
+            )
+            inner += len(data)
+            written += len(data)
+        seq = 1
+
+        # large float leaves: chunked worker pipeline, one frame per chunk;
+        # the codec's counted payload stream is the single source of "is this
+        # the leaf's final chunk", so the file's LAST flag lands on the final
+        # leaf's final frame by construction
+        for li, (name, arr) in enumerate(big_leaves):
+            lo = seq
+            stored = 0
+            final_leaf = li == len(big_leaves) - 1
+            for payload, pl_last in self.codec.iter_chunk_payloads(
+                arr, self.error_bound, mode=self.mode, chunk_bytes=self.chunk_bytes
+            ):
+                frame = container.build_frame(
+                    payload, seq, last=final_leaf and pl_last
+                )
+                manifest["frames"].append([written, len(frame)])
+                fileobj.write(frame)
+                written += len(frame)
+                stored += len(frame)
+                seq += 1
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "codec": "szx",
+                    "dtype": str(arr.dtype),
+                    "shape": list(arr.shape),
+                    "n": int(arr.size),
+                    "raw_bytes": int(arr.nbytes),
+                    "stored_bytes": stored,
+                    "frames": [lo, seq],
+                }
+            )
+
+        manifest["raw_bytes"] = int(sum(m["raw_bytes"] for m in manifest["leaves"]))
+        manifest["stored_bytes"] = written
+        fileobj.write(container.build_index_footer(manifest))
+        return manifest
+
+    # ----------------------------------------------------------- decompress
+    def read_manifest(self, fileobj) -> dict:
+        idx = container.read_index_footer(fileobj)
+        if idx is None:
+            raise ValueError(
+                "not a TreeCodec stream (no container-v3 index footer)"
+            )
+        if idx.get("kind") != STREAM_KIND:
+            raise ValueError(
+                f"not a TreeCodec stream (footer kind {idx.get('kind')!r})"
+            )
+        return idx
+
+    def _restore_leaf(self, fileobj, idx: dict, meta: dict) -> np.ndarray:
+        dtype = np_dtype_for(meta["dtype"])
+        shape = tuple(meta["shape"])
+        if meta["codec"] == "raw":
+            frame_off, _len = idx["frames"][meta["frames"][0]]
+            inner, size = meta["pack"]
+            fileobj.seek(frame_off + container.FRAME_HEADER.size + inner)
+            data = container._read_exact(fileobj, size)
+            return np.frombuffer(data, dtype=dtype).reshape(shape)
+        lo, hi = meta["frames"]
+
+        def payloads() -> Iterator[bytes]:
+            for i in range(lo, hi):
+                off, length = idx["frames"][i]
+                payload, _flags = container.read_frame_at(fileobj, off, length, i)
+                yield payload
+
+        if self.codec.workers > 1 and hi - lo > 1:
+            parts = _imap_ordered(self.codec.decompress, payloads(), self.codec.workers)
+        else:
+            parts = map(self.codec.decompress, payloads())
+        # preallocated fill: peak memory stays O(leaf + workers * chunk),
+        # not 2x the leaf (parts list + concatenate copy)
+        flat = np.empty(meta["n"], dtype=dtype)
+        filled = 0
+        for part in parts:
+            if filled + part.size > flat.size:
+                raise ValueError(
+                    f"leaf {meta['name']}: stream has more than the "
+                    f"manifest's {meta['n']} elements"
+                )
+            flat[filled : filled + part.size] = part
+            filled += part.size
+        if filled != flat.size:
+            raise ValueError(
+                f"leaf {meta['name']}: stream has {filled} elements, "
+                f"manifest says {meta['n']}"
+            )
+        return flat.reshape(shape)
+
+    def decompress_tree(
+        self,
+        fileobj,
+        *,
+        select: Iterable[str] | None = None,
+        template=None,
+    ):
+        """Restore leaves from a TreeCodec stream (seekable file object).
+
+        ``select``: iterable of leaf names -- read ONLY those leaves' byte
+        ranges (plus the fixed-size index footer); returns ``{name: array}``.
+        ``template``: a pytree of arrays/ShapeDtypeStructs -- restore every
+        template leaf (by name) and return the filled tree.  With neither,
+        returns ``{name: array}`` for every leaf in the stream.
+        """
+        if select is not None and template is not None:
+            raise ValueError("pass select= or template=, not both")
+        idx = self.read_manifest(fileobj)
+        by_name = {m["name"]: m for m in idx["leaves"]}
+        if select is not None:
+            out = {}
+            for name in select:
+                meta = by_name.get(name)
+                if meta is None:
+                    raise KeyError(f"leaf {name!r} not in stream")
+                out[name] = self._restore_leaf(fileobj, idx, meta)
+            return out
+        if template is not None:
+            import jax
+
+            flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+            names = [leaf_name(kp) for kp, _ in flat]
+            restored = []
+            for name in names:
+                meta = by_name.get(name)
+                if meta is None:
+                    raise KeyError(f"leaf {name!r} not in stream")
+                restored.append(self._restore_leaf(fileobj, idx, meta))
+            return jax.tree_util.tree_unflatten(treedef, restored)
+        return {
+            m["name"]: self._restore_leaf(fileobj, idx, m) for m in idx["leaves"]
+        }

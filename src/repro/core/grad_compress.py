@@ -35,17 +35,19 @@ def _encode_leaf(g, num_planes, block, backend="jax"):
     keeping the leaf shape keeps every encode op local to its shard.  The
     default 'jax' backend stages the whole encode into the caller's
     shard_map program (one fused program per leaf); 'kernel' dispatches the
-    Pallas planes kernels instead."""
-    enc = PlanesCodec(num_planes, backend=backend).encode_last_axis(g, block)
-    enc["sexp"] = enc["sexp"].astype(jnp.int16)   # wire dtype: halve sexp bytes
-    return enc
+    Pallas planes kernels instead.
+
+    Returns the shared device-resident record (``DeviceEncoding``, kind
+    'szx-planes') -- a registered pytree, so it flows through ``all_gather``
+    and ``tree.map`` like the plain dict it replaced."""
+    enc = PlanesCodec(num_planes, backend=backend).encode_last_axis_device(g, block)
+    return enc.replace(sexp=enc["sexp"].astype(jnp.int16))  # wire: halve sexp bytes
 
 
 def _decode_leaf(enc, shape, dtype, block, backend="jax"):
-    enc = dict(enc, sexp=enc["sexp"].astype(jnp.int32))
-    return PlanesCodec(enc["planes"].shape[0], backend=backend).decode_last_axis(
-        enc, shape, dtype
-    )
+    return PlanesCodec(
+        enc["planes"].shape[0], backend=backend
+    ).decode_last_axis_encoding(enc, shape, dtype)
 
 
 def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1,

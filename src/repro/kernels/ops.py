@@ -356,6 +356,26 @@ def pack(xb, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32, backend: str = "
         return _pack_jax(*args, spec)
 
 
+def encode_staged(xb, e, p_e, *, spec: DtypeSpec = specs.F32, backend: str = "jax"):
+    """Trace-composable fused encode: dispatch WITHOUT host syncs.
+
+    For callers that stage the encode into a larger jitted program (the
+    device-resident stream assembly in ``repro.core.codec.device``): the
+    error-bound exponent ``p_e`` is passed in as a traced value instead of
+    being derived via ``float(e)``, and ``backend`` must already be resolved
+    to 'jax' or 'kernel'.  Same outputs as :func:`encode`.
+    """
+    if backend not in ("jax", "kernel"):
+        raise ValueError(
+            f"encode_staged needs a resolved device backend, got {backend!r}"
+        )
+    if backend == "kernel" and _kernel_route(spec, "encode"):
+        from repro.kernels import encode as k
+
+        return k.encode(xb, e, p_e, spec=spec)
+    return ref.encode_ref(xb, e, spec, p_e)
+
+
 def encode(xb, e, *, spec: DtypeSpec = specs.F32, backend: str = "auto"):
     """Fused block_stats + pack: (mu, const, reqlen, shift, nbytes, planes, L).
 

@@ -52,15 +52,19 @@ def _reduce_scores(s):
 def _kv_encode(x, num_planes: int):
     """x: (..., hd) -> (mu f32, sexp int8, planes uint8 (P, ..., hd)).
 
-    The head_dim axis IS the block, so this is PlanesCodec at block level;
-    sexp is clipped to int8 for the cache slab (HBM bytes are the point)."""
-    mu, sexp, planes = PlanesCodec(num_planes).encode_blocks(x.astype(jnp.float32))
-    return mu, jnp.clip(sexp, -127, 127).astype(jnp.int8), planes
+    The head_dim axis IS the block, so this is PlanesCodec at block level,
+    through the shared device-resident record (``DeviceEncoding``, kind
+    'szx-planes' -- the same representation the checkpoint and gradient
+    paths carry); sexp is clipped to int8 for the cache slab (HBM bytes are
+    the point)."""
+    enc = PlanesCodec(num_planes).encode_blocks_device(x.astype(jnp.float32))
+    enc = enc.replace(sexp=jnp.clip(enc["sexp"], -127, 127).astype(jnp.int8))
+    return enc["mu"], enc["sexp"], enc["planes"]
 
 
 def _kv_decode(mu, sexp, planes, dtype):
     codec = PlanesCodec(planes.shape[0])
-    return codec.decode_blocks(mu, sexp.astype(jnp.int32), planes).astype(dtype)
+    return codec.decode_blocks(mu, jnp.asarray(sexp, jnp.int32), planes).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,26 @@ def test_size_mismatch_fails():
     assert len(errs) == 1 and "size mismatch" in errs[0]
 
 
+def test_fresh_only_row_fails_with_clear_message():
+    """A new bench row with no committed baseline counterpart must produce
+    the regenerate-the-baseline message, not a KeyError / silent pass."""
+    doc = copy.deepcopy(BASE)
+    doc["chunked_dump_load"]["tree_checkpoint"] = {
+        "comp_mbs": 10.0, "decomp_mbs": 10.0, "cr": 5.0,
+    }
+    errs = _cmp(doc)
+    assert len(errs) == 1
+    assert "baseline missing row tree_checkpoint" in errs[0]
+    assert "BENCH_codec_smoke.json" in errs[0]
+
+
+def test_missing_metric_key_reported_not_keyerror():
+    doc = copy.deepcopy(BASE)
+    del doc["chunked_dump_load"]["mono"]["cr"]
+    errs = _cmp(doc)
+    assert errs == ["mono.cr: missing from fresh results"]
+
+
 def test_missing_kind_and_section_fail():
     doc = copy.deepcopy(BASE)
     del doc["chunked_dump_load"]["chunked"]

@@ -1,0 +1,172 @@
+"""Fault-tolerance contract of repro.checkpoint.CheckpointManager.
+
+The three guarantees a 1000-node train loop leans on:
+  * a crash mid-save never corrupts the previous _COMMITTED step (atomic
+    tmp-dir + rename + marker commit);
+  * keep-last-k GC deletes only COMMITTED steps (crashed leftovers are not
+    silently reaped, half-written tmp dirs are not counted as checkpoints);
+  * integer/bool leaves round-trip raw and bit-exact under compress=True.
+Plus the MANIFEST-v2 single-stream layout and its partial-restore path.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.codec.tree import TreeCodec
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": (np.cumsum(rng.standard_normal(50_000)) * 0.01).astype(np.float32),
+        "step": np.int64(seed),
+        "counts": rng.integers(0, 1 << 40, size=300).astype(np.int64),
+        "mask": rng.integers(0, 2, size=200).astype(bool),
+        "bytes8": rng.integers(0, 255, size=100).astype(np.uint8),
+    }
+
+
+def test_crash_mid_save_keeps_previous_step_restorable(tmp_path, monkeypatch):
+    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-4)
+    t0 = _tree(0)
+    m.save(0, t0)
+    assert m.all_steps() == [0]
+
+    # crash while the step-1 stream is being written (before the marker)
+    def boom(self, tree, fileobj):
+        fileobj.write(b"half a stream")
+        raise OSError("disk died mid-save")
+
+    monkeypatch.setattr(TreeCodec, "compress_tree", boom)
+    with pytest.raises(OSError):
+        m.save(1, _tree(1))
+    monkeypatch.undo()
+
+    # the crashed step is not committed, the previous one restores cleanly
+    assert m.all_steps() == [0]
+    assert m.latest_step() == 0
+    restored, step = m.restore(t0)
+    assert step == 0
+    np.testing.assert_array_equal(t0["counts"], restored["counts"])
+    # and a later successful save of the same step replaces the wreckage
+    m.save(1, _tree(1))
+    assert m.all_steps() == [0, 1]
+
+
+def test_uncommitted_dir_is_ignored_and_not_restored(tmp_path):
+    m = CheckpointManager(str(tmp_path), compress=False)
+    m.save(3, _tree(3))
+    # a crashed writer's directory: structure present, marker missing
+    fake = tmp_path / "step_000000009"
+    fake.mkdir()
+    (fake / "MANIFEST.json").write_text(json.dumps({"step": 9, "leaves": []}))
+    assert m.all_steps() == [3]
+    _, step = m.restore(_tree(3))
+    assert step == 3
+
+
+def test_gc_deletes_only_committed_steps(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, compress=False)
+    # an uncommitted leftover must survive GC (it is evidence of a crash,
+    # not a checkpoint) and never count against keep-last-k
+    leftover = tmp_path / "step_000000001"
+    leftover.mkdir()
+    (leftover / "partial.bin").write_bytes(b"x" * 10)
+    for s in (2, 3, 4, 5):
+        m.save(s, _tree(s))
+    assert m.all_steps() == [4, 5]
+    assert leftover.exists(), "GC reaped an uncommitted directory"
+    for s in (2, 3):
+        assert not (tmp_path / f"step_{s:09d}").exists()
+
+
+def test_integer_leaves_roundtrip_raw_bit_exact(tmp_path):
+    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-2)
+    t = _tree(7)
+    m.save(0, t)
+    with open(tmp_path / "step_000000000" / "MANIFEST.json") as f:
+        manifest = json.load(f)
+    codec_by_name = {m_["name"]: m_["codec"] for m_ in manifest["leaves"]}
+    for name in ("step", "counts", "mask", "bytes8"):
+        assert codec_by_name[name] == "raw", name
+    restored, _ = m.restore(t)
+    for name in ("step", "counts", "mask", "bytes8"):
+        got = np.asarray(restored[name])
+        assert got.dtype == np.asarray(t[name]).dtype
+        np.testing.assert_array_equal(np.asarray(t[name]), got)
+
+
+def test_manifest_v2_single_stream_and_partial_restore(tmp_path):
+    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-4)
+    t = _tree(11)
+    m.save(0, t)
+    d = tmp_path / "step_000000000"
+    with open(d / "MANIFEST.json") as f:
+        manifest = json.load(f)
+    assert manifest["manifest_version"] == 2
+    # ONE stream file per step (plus manifest + marker), not one per leaf
+    files = sorted(os.listdir(d))
+    assert files == ["MANIFEST.json", "_COMMITTED", manifest["file"]]
+    part = m.restore_leaves(["step", "w"])
+    assert set(part) == {"step", "w"}
+    assert int(part["step"]) == 11
+    e = 1e-4 * float(t["w"].max() - t["w"].min())
+    assert np.abs(part["w"] - t["w"]).max() <= e
+
+
+def test_v1_checkpoint_layout_still_restores(tmp_path):
+    """Checkpoints written by the pre-TreeCodec manager (one .bin per leaf,
+    no manifest_version) remain restorable."""
+    t = {"w": _tree(5)["w"], "step": np.int64(5)}
+    d = tmp_path / "step_000000005"
+    d.mkdir()
+    from repro.core.codec import SZxCodec
+
+    codec = SZxCodec()
+    leaves = []
+    for i, (name, arr) in enumerate((("step", t["step"]), ("w", t["w"]))):
+        arr = np.asarray(arr)
+        fn = f"{i:05d}.bin"
+        if name == "w":
+            data = codec.compress(arr, 1e-4, mode="rel")
+            leaf_codec = "szx"
+        else:
+            data = arr.tobytes()
+            leaf_codec = "raw"
+        (d / fn).write_bytes(data)
+        leaves.append(
+            {"name": name, "file": fn, "shape": list(arr.shape),
+             "dtype": str(arr.dtype), "codec": leaf_codec,
+             "raw_bytes": arr.nbytes, "stored_bytes": len(data)}
+        )
+    (d / "MANIFEST.json").write_text(
+        json.dumps({"step": 5, "time": 0.0, "leaves": leaves})
+    )
+    (d / "_COMMITTED").write_text("ok")
+    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-4)
+    restored, step = m.restore(t)
+    assert step == 5
+    assert int(restored["step"]) == 5
+    e = 1e-4 * float(t["w"].max() - t["w"].min())
+    assert np.abs(np.asarray(restored["w"]) - t["w"]).max() <= e
+    part = m.restore_leaves(["step"])
+    assert int(part["step"]) == 5
+
+
+def test_async_save_surfaces_errors_on_wait(tmp_path, monkeypatch):
+    m = CheckpointManager(str(tmp_path), compress=True, async_save=True)
+    m.save(0, _tree(0))
+    m.wait()
+    assert m.all_steps() == [0]
+
+    def boom(self, tree, fileobj):
+        raise RuntimeError("async writer died")
+
+    monkeypatch.setattr(TreeCodec, "compress_tree", boom)
+    m.save(1, _tree(1))
+    with pytest.raises(RuntimeError, match="async writer died"):
+        m.wait()
+    assert m.all_steps() == [0]

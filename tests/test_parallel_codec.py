@@ -70,9 +70,11 @@ def test_parallel_edge_cases():
 
 
 def test_edge_shapes_exercise_fused_encode(monkeypatch):
-    """Empty-input and sub-block-shaped arrays go through the FUSED
-    ``ops.encode`` path (stats + pack in one dispatch) on both the numpy and
-    jitted-jax backends -- there is no separate two-call fallback anymore."""
+    """Empty-input and sub-block-shaped arrays go through the FUSED encode:
+    the numpy backend through the ``ops.encode`` host mirror, the jax backend
+    through the one-transfer device-resident path (``device.encode_to_stream``)
+    -- except the empty input, whose nb == 0 takes the host mirror."""
+    from repro.core.codec import device
     from repro.kernels import ops
 
     calls = []
@@ -80,6 +82,12 @@ def test_edge_shapes_exercise_fused_encode(monkeypatch):
     monkeypatch.setattr(
         ops, "encode",
         lambda xb, e, **k: calls.append(np.asarray(xb).shape) or real_encode(xb, e, **k),
+    )
+    dev_calls = []
+    real_dev = device.encode_to_stream
+    monkeypatch.setattr(
+        device, "encode_to_stream",
+        lambda xb, p: dev_calls.append(np.asarray(xb).shape) or real_dev(xb, p),
     )
     for pf in (ops.block_stats, ops.pack):
         name = pf.__name__
@@ -99,8 +107,10 @@ def test_edge_shapes_exercise_fused_encode(monkeypatch):
             assert y.size == x.size
             if x.size:
                 assert np.abs(x - y).max() <= 1e-3
-    # 2 backends x 3 shapes, all fused, all 2-D (nblocks, block_size)
-    assert len(calls) == 6 and all(len(s) == 2 for s in calls)
+    # numpy: all 3 shapes fused host encode; jax: everything enters the
+    # device path, whose nb == 0 case falls back to the fused host mirror
+    assert calls == [(0, 128), (1, 128), (1, 128), (0, 128)]
+    assert dev_calls == [(0, 128), (1, 128), (1, 128)]
 
 
 def test_parallel_file_dump_load_identical(tmp_path):
@@ -147,8 +157,8 @@ def test_checkpoint_workers_bytes_identical(tmp_path):
             mode="rel", chunk_bytes=1 << 17, workers=workers,
         )
         m.save(0, tree)
-        leaf = tmp_path / f"w{workers}" / "step_000000000" / "00000.bin"
-        outs[workers] = leaf.read_bytes()
+        stream = tmp_path / f"w{workers}" / "step_000000000" / "tree.szt"
+        outs[workers] = stream.read_bytes()
         restored, _ = m.restore(tree)
         e = 1e-4 * float(tree["big"].max() - tree["big"].min())
         assert np.abs(tree["big"] - np.asarray(restored["big"])).max() <= e

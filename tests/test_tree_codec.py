@@ -1,0 +1,242 @@
+"""TreeCodec multi-leaf streams + container-v3 random access.
+
+Pins the acceptance contracts: select= partial restore provably reads ONLY
+the selected leaves' byte ranges (seek-tracking file spy), v2 footer-less
+streams still decode, the index footer survives/rejects corruption, and the
+'rel'-mode bound is resolved once per leaf/array -- never per frame.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core.codec import SZxCodec, TreeCodec, container, plan
+from repro.core.codec.tree import leaf_paths
+
+try:
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    BF16 = None
+
+CODEC = SZxCodec(backend="numpy")
+TC = TreeCodec(codec=CODEC, error_bound=1e-4, mode="rel", chunk_bytes=1 << 18)
+
+
+def _walk(n, seed=0, dtype=np.float32, scale=0.01):
+    rng = np.random.default_rng(seed)
+    return (np.cumsum(rng.standard_normal(n)) * scale).astype(dtype)
+
+
+def _tree():
+    t = {
+        "params": {
+            "w": _walk(150_000, seed=1),
+            "b": _walk(80_000, seed=2, dtype=np.float64),
+        },
+        "step": np.int64(42),
+        "tiny": np.float32([1.5, -2.5]),
+        "ids": np.arange(100, dtype=np.int32),
+    }
+    if BF16 is not None:
+        t["params"]["h"] = _walk(60_000, seed=3, dtype=BF16)
+    return t
+
+
+class SpyFile:
+    """Byte-range-recording wrapper over a seekable binary file."""
+
+    def __init__(self, raw):
+        self.raw = raw
+        self.reads: list[tuple[int, int]] = []
+
+    def seek(self, *a):
+        return self.raw.seek(*a)
+
+    def tell(self):
+        return self.raw.tell()
+
+    def read(self, n=-1):
+        off = self.raw.tell()
+        data = self.raw.read(n)
+        if data:
+            self.reads.append((off, len(data)))
+        return data
+
+
+def _covered(reads, ranges):
+    """Every read byte falls inside one of the allowed [lo, hi) ranges."""
+    for off, ln in reads:
+        if not any(lo <= off and off + ln <= hi for lo, hi in ranges):
+            return (off, ln)
+    return None
+
+
+def test_roundtrip_template_select_and_dict():
+    tree = _tree()
+    buf = io.BytesIO()
+    manifest = TC.compress_tree(tree, buf)
+    names = {m["name"] for m in manifest["leaves"]}
+    assert "step" in names and "params/w" in names
+    # template restore: full tree, dtypes preserved, bounds hold per leaf
+    out = TC.decompress_tree(buf, template=tree)
+    for (name, a), (_, b) in zip(leaf_paths(tree), leaf_paths(out)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert b.dtype == a.dtype, name
+        if np.issubdtype(a.dtype, np.integer):
+            np.testing.assert_array_equal(a, b)
+        else:
+            af, bf = a.astype(np.float64), b.astype(np.float64)
+            e = 1e-4 * (af.max() - af.min()) if af.size > 2 else 0.0
+            assert np.abs(af - bf).max() <= e + 1e-12, name
+    # select restore: exactly the requested names
+    sel = TC.decompress_tree(buf, select=["step", "params/b"])
+    assert set(sel) == {"step", "params/b"}
+    assert int(sel["step"]) == 42
+    # dict restore: everything
+    alld = TC.decompress_tree(buf)
+    assert set(alld) == names
+    with pytest.raises(KeyError):
+        TC.decompress_tree(buf, select=["nope"])
+    with pytest.raises(ValueError):
+        TC.decompress_tree(buf, select=["step"], template=tree)
+
+
+def test_select_reads_only_selected_byte_ranges():
+    """The acceptance seek-spy: restoring leaves touches ONLY their frames'
+    byte ranges (plus the fixed index footer at the tail)."""
+    tree = _tree()
+    base = io.BytesIO()
+    manifest = TC.compress_tree(tree, base)
+    end = base.seek(0, 2)
+    frames = manifest["frames"]
+    data_end = manifest["stored_bytes"]
+    footer = (data_end, end)                     # index payload + trailer
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+
+    def allowed_for(name):
+        meta = by_name[name]
+        if meta["codec"] == "raw":
+            off, _len = frames[meta["frames"][0]]
+            inner, size = meta["pack"]
+            lo = off + container.FRAME_HEADER.size + inner
+            return [(lo, lo + size)]
+        lo_f, hi_f = meta["frames"]
+        return [(frames[i][0], frames[i][0] + frames[i][1]) for i in range(lo_f, hi_f)]
+
+    # big szx leaf: only its frames + footer are touched
+    spy = SpyFile(base)
+    out = TC.decompress_tree(spy, select=["params/w"])
+    bad = _covered(spy.reads, allowed_for("params/w") + [footer])
+    assert bad is None, f"read outside params/w ranges: {bad}"
+    np.testing.assert_array_equal(out["params/w"], TC.decompress_tree(base)["params/w"])
+    # raw leaf inside the shared pack frame: only ITS bytes, not the whole pack
+    spy = SpyFile(base)
+    out = TC.decompress_tree(spy, select=["step"])
+    assert int(out["step"]) == 42
+    bad = _covered(spy.reads, allowed_for("step") + [footer])
+    assert bad is None, f"read outside step's pack slice: {bad}"
+    selected_bytes = sum(ln for _, ln in spy.reads)
+    assert selected_bytes <= (end - data_end) + 8 + container.FRAME_HEADER.size
+
+
+def test_select_on_chunked_single_array_stream():
+    """load_chunked(select=) random access over a dump_chunked v3 stream."""
+    x = _walk(400_000, seed=9)
+    buf = io.BytesIO()
+    CODEC.dump_chunked(x, buf, 1e-3, chunk_bytes=1 << 18)
+    per = plan.chunk_elements(CODEC.block_size, 1 << 18, 4)
+    spy = SpyFile(buf)
+    y = CODEC.load_chunked(spy, select=[1])
+    full = CODEC.load_chunked(io.BytesIO(buf.getvalue()))
+    np.testing.assert_array_equal(y, full[per : 2 * per])
+    idx = container.read_index_footer(buf)
+    lo, ln, _elems = idx["frames"][1]
+    end = buf.seek(0, 2)
+    data_end = idx["frames"][-1][0] + idx["frames"][-1][1]
+    bad = _covered(spy.reads, [(lo, lo + ln), (data_end, end)])
+    assert bad is None, f"select=[1] read outside frame 1: {bad}"
+
+
+def test_v2_footerless_streams_still_decode():
+    x = _walk(200_000, seed=4)
+    v2 = io.BytesIO()
+    CODEC.dump_chunked(x, v2, 1e-3, chunk_bytes=1 << 18, index=False)
+    assert container.read_index_footer(v2) is None
+    v2.seek(0)
+    np.testing.assert_array_equal(CODEC.load_chunked(v2), CODEC.decompress_chunked(
+        io.BytesIO(b"".join(CODEC.compress_chunked(x, 1e-3, chunk_bytes=1 << 18)))
+    ))
+
+
+def test_footer_corruption_rejected():
+    tree = {"w": _walk(50_000, seed=6)}
+    buf = io.BytesIO()
+    TC.compress_tree(tree, buf)
+    raw = bytearray(buf.getvalue())
+    # flip a byte inside the JSON index -> CRC mismatch
+    raw[-40] ^= 0xFF
+    with pytest.raises(ValueError, match="CRC|corrupt|footer|Expecting"):
+        TC.decompress_tree(io.BytesIO(bytes(raw)))
+    # truncated trailer -> not recognized as a tree stream
+    with pytest.raises(ValueError, match="index footer"):
+        TC.decompress_tree(io.BytesIO(bytes(raw[:-10])))
+
+
+def test_tree_stream_rejects_wrong_kind():
+    x = _walk(50_000, seed=7)
+    buf = io.BytesIO()
+    CODEC.dump_chunked(x, buf, 1e-3)        # kind szx-chunked, not szx-tree
+    with pytest.raises(ValueError, match="kind"):
+        TC.decompress_tree(buf)
+
+
+# ---------------------------------------------------------------------------
+# satellite: 'rel' bound resolution audit (once per array/leaf, never per frame)
+# ---------------------------------------------------------------------------
+
+def test_chunked_rel_bound_is_global_even_with_disparate_chunk_ranges():
+    """Frames covering wildly different value ranges must all carry the
+    MONOLITHIC absolute bound: per-frame resolution would silently tighten
+    the early chunks and loosen nothing (the bug this test pins against)."""
+    lo = _walk(100_000, seed=10, scale=1e-5)          # tiny range
+    hi = 1e4 + _walk(100_000, seed=11, scale=10.0)    # huge range, offset
+    x = np.concatenate([lo, hi]).astype(np.float32)
+    e_mono = container.HEADER.unpack_from(CODEC.compress(x, 1e-3, mode="rel"), 0)[5]
+    frames = list(CODEC.compress_chunked(x, 1e-3, mode="rel", chunk_bytes=1 << 18))
+    per = plan.chunk_elements(CODEC.block_size, 1 << 18, 4)
+    assert len(frames) > 2
+    for i, payload in enumerate(container.iter_frames(frames)):
+        e_frame = container.HEADER.unpack_from(payload, 0)[5]
+        assert e_frame == e_mono, f"frame {i} resolved its own rel bound"
+        # and the payload is the monolithic encoding of its slice at e_mono
+        assert payload == CODEC.compress(x[i * per : (i + 1) * per], e_mono)
+    y = CODEC.decompress_chunked(frames)
+    assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= e_mono
+
+
+def test_tree_codec_rel_bound_is_per_leaf_monolithic():
+    """TreeCodec resolves 'rel' once per LEAF over the leaf's full range --
+    chunking a leaf into frames must not change its effective bound."""
+    tree = {
+        "small_range": _walk(120_000, seed=12, scale=1e-4),
+        "large_range": 50.0 + _walk(120_000, seed=13, scale=5.0),
+    }
+    buf = io.BytesIO()
+    manifest = TC.compress_tree(tree, buf)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    for name, arr in tree.items():
+        e_mono = container.HEADER.unpack_from(
+            CODEC.compress(arr, 1e-4, mode="rel"), 0
+        )[5]
+        lo_f, hi_f = by_name[name]["frames"]
+        assert hi_f - lo_f > 1, "leaf must span multiple frames for this test"
+        for i in range(lo_f, hi_f):
+            off, ln = manifest["frames"][i]
+            payload, _ = container.read_frame_at(buf, off, ln, i)
+            assert container.HEADER.unpack_from(payload, 0)[5] == e_mono, name
+    out = TC.decompress_tree(buf, template=tree)
+    for name, arr in tree.items():
+        e = 1e-4 * float(arr.max() - arr.min())
+        assert np.abs(arr - out[name]).max() <= e, name

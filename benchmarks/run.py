@@ -369,7 +369,51 @@ if kind == "tree_checkpoint":
         codec=codec, error_bound=rel, mode="rel", chunk_bytes=8 << 20
     )
 
+
+class CountingFile:
+    # byte-counting reader: measures the store ROI read's bytes-read ratio
+    def __init__(self, raw):
+        self.raw = raw
+        self.n = 0
+
+    def seek(self, *a):
+        return self.raw.seek(*a)
+
+    def tell(self):
+        return self.raw.tell()
+
+    def read(self, k=-1):
+        data = self.raw.read(k)
+        self.n += len(data)
+        return data
+
+    def close(self):
+        self.raw.close()
+
 reps = int(os.environ.get("SZX_BENCH_REPS", 3))   # best-of-N vs host noise
+if kind == "store_roi" and phase == "load":
+    # lazy ROI read of the leading ~1% of rows: report ROI MB/s and the
+    # bytes-read ratio (the "bytes read scale with the ROI" guarantee)
+    from repro.store import ArrayStore
+
+    file_bytes = os.path.getsize(path)
+    dt = float("inf")
+    for _ in range(reps):
+        counting = CountingFile(open(path, "rb"))
+        with ArrayStore.open(counting) as ca:
+            rows = max(ca.shape[0] // 100, 1)
+            t0 = time.time()
+            y = ca[:rows]
+            dt = min(dt, time.time() - t0)
+            read_ratio = counting.n / file_bytes
+            roi_bytes = y.nbytes
+        counting.close()
+    assert y.shape[0] == rows and y.dtype == dtype
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": file_bytes,
+                      "n": n, "dtype": dtype.name, "workers": workers,
+                      "roi_bytes": roi_bytes, "read_ratio": read_ratio}))
+    sys.exit(0)
 if phase == "dump":
     rng = np.random.default_rng(0)
     x = np.cumsum(rng.standard_normal(n_elems, dtype=np.float32) * 0.01)
@@ -378,7 +422,13 @@ if phase == "dump":
     dt = float("inf")
     for _ in range(reps):
         t0 = time.time()
-        if kind == "mono":
+        if kind == "store_roi":
+            from repro.store import ArrayStore
+
+            x3 = x.reshape(-1, 256, 256)
+            ArrayStore.save(path, x3, e, workers=workers)
+            stored = os.path.getsize(path)
+        elif kind == "mono":
             buf = codec.compress(x, e)
             with open(path, "wb") as f:
                 f.write(buf)
@@ -429,7 +479,11 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     (SZX_BENCH_N * 4 bytes) through the width-generic kernel layer in those
     dtypes, gating the per-dtype fast paths.  'tree_checkpoint' pushes the
     same bytes through the pytree front-end (TreeCodec: multi-leaf
-    container-v3 stream with index footer), gating the checkpoint path.  Results also land in
+    container-v3 stream with index footer), gating the checkpoint path.
+    'store_roi_read' saves the same bytes as an N-d repro.store chunk grid
+    and lazily reads a ~1% leading-rows ROI: comp_mbs is the store save
+    throughput, decomp_mbs the ROI read MB/s, and roi_bytes_read_ratio pins
+    that bytes read scale with the ROI, not the array.  Results also land in
     BENCH_codec.json at the repo root (override the path with
     SZX_BENCH_JSON, the f32-equivalent element count with SZX_BENCH_N) to
     anchor the codec perf trajectory; benchmarks/check_regression.py gates
@@ -440,20 +494,24 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     out: dict = {"n": n}
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
     for kind in ("mono", "chunked", "chunked-par", "chunked-f64", "chunked-bf16",
-                 "tree_checkpoint"):
+                 "tree_checkpoint", "store_roi_read"):
+        child_kind = "store_roi" if kind == "store_roi_read" else kind
         path = os.path.join(tmpdir, f"{kind}.szx")
         res = {}
         for phase in ("dump", "load"):
             r = subprocess.run(
-                [sys.executable, "-c", _CHUNKED_CHILD, f"{kind}_{phase}", path],
+                [sys.executable, "-c", _CHUNKED_CHILD, f"{child_kind}_{phase}", path],
                 capture_output=True, text=True, timeout=1800, env=env,
             )
             assert r.returncode == 0, r.stderr[-2000:]
             res[phase] = json.loads(r.stdout.strip().splitlines()[-1])
         raw_mb = n * 4 / 1e6
+        # store_roi_read's load phase reads a ~1% ROI lazily: decomp_mbs is
+        # ROI MB/s (the serving metric), and read_ratio pins bytes-read ∝ ROI
+        load_mb = res["load"].get("roi_bytes", n * 4) / 1e6
         out[kind] = dict(
             comp_mbs=raw_mb / res["dump"]["t"],
-            decomp_mbs=raw_mb / res["load"]["t"],
+            decomp_mbs=load_mb / res["load"]["t"],
             dump_peak_rss_mb=res["dump"]["rss_mb"],
             load_peak_rss_mb=res["load"]["rss_mb"],
             stored_mb=res["dump"]["stored"] / 1e6,
@@ -461,13 +519,17 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
             dtype=res["dump"]["dtype"],
             workers=res["dump"]["workers"],
         )
+        extra = ""
+        if "read_ratio" in res["load"]:
+            out[kind]["roi_bytes_read_ratio"] = res["load"]["read_ratio"]
+            extra = f";roi_read_ratio={res['load']['read_ratio']:.4f}"
         _emit(
             f"beyond/chunked_dump_load/{kind}", res["dump"]["t"] * 1e6,
             f"comp_MB/s={out[kind]['comp_mbs']:.0f};"
             f"decomp_MB/s={out[kind]['decomp_mbs']:.0f};"
             f"dump_RSS_MB={out[kind]['dump_peak_rss_mb']:.0f};"
             f"load_RSS_MB={out[kind]['load_peak_rss_mb']:.0f};"
-            f"CR={out[kind]['cr']:.2f}",
+            f"CR={out[kind]['cr']:.2f}" + extra,
         )
     bench_json = os.environ.get(
         "SZX_BENCH_JSON", os.path.join(REPO_ROOT, "BENCH_codec.json")

@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the classic float32 byte-stream API (repro.core.szx, unchanged) plus
-the layered codec front-end (repro.core.codec.SZxCodec): native multi-dtype
-streams and bounded-memory chunked compression.
+Shows the classic float32 byte-stream API (repro.core.szx, unchanged), the
+layered codec front-end (repro.core.codec.SZxCodec): native multi-dtype
+streams and bounded-memory chunked compression, and the block-addressable
+array store (repro.store): lazy ROI reads + compressed-domain queries.
 """
 import io
 import time
@@ -14,6 +15,7 @@ import numpy as np
 from repro.core import metrics, szx
 from repro.core.codec import SZxCodec
 from repro.data import scidata
+from repro.store import ArrayStore
 
 
 def main():
@@ -56,6 +58,24 @@ def main():
         f"max|err|/e={np.abs(x - y).max() / e:.3f}"
     )
     assert np.abs(x - y).max() <= e, "chunked error bound violated!"
+
+    # --- array store: lazy ROI reads + compressed-domain queries ----------
+    store = io.BytesIO()
+    ArrayStore.save(store, x, 1e-3, mode="rel")
+    ca = ArrayStore.open(store)
+    t0 = time.time()
+    roi = ca[x.shape[0] // 2, : x.shape[1] // 2]       # one half-plane slice
+    t_roi = time.time() - t0
+    assert np.abs(roi - x[x.shape[0] // 2, : x.shape[1] // 2]).max() <= e
+    stats = ca.stats()                                  # exact, from headers
+    hdr = ca.stats(header_only=True)                    # intervals, no planes
+    print(
+        f"store: {ca.nchunks} chunks of {ca.chunk_shape}, ROI {roi.nbytes/1e3:.0f} kB "
+        f"in {t_roi*1e3:.1f} ms; query mean={stats.mean[0]:.4f} "
+        f"(numpy {float(np.mean(x, dtype=np.float64)):.4f}), "
+        f"{hdr.const_blocks}/{hdr.nblocks} blocks answered header-only"
+    )
+    assert abs(stats.mean[0] - float(np.mean(x, dtype=np.float64))) <= e
 
 
 if __name__ == "__main__":

@@ -129,6 +129,10 @@ class CheckpointManager:
             "time": time.time(),
             "file": _STREAM,
             "leaves": stream_manifest["leaves"],
+            # frame byte ranges duplicated from the stream's index footer:
+            # sliced restore seeks without re-reading the footer, and the
+            # ranges survive even if the stream's own footer is damaged
+            "frames": stream_manifest["frames"],
             "raw_bytes": stream_manifest["raw_bytes"],
             "stored_bytes": stream_manifest["stored_bytes"],
         }
@@ -214,6 +218,107 @@ class CheckpointManager:
                 raise KeyError(f"leaf {n} not in checkpoint step {manifest['step']}")
             out[n] = self._restore_leaf_v1(d, by_name[n])
         return out
+
+    def restore_leaf_slice(
+        self, name: str, rows, step: Optional[int] = None
+    ) -> np.ndarray:
+        """Store-backed sliced restore: rows ``rows`` (an int or a step-1
+        slice over the LEADING axis) of leaf ``name``, reading and decoding
+        only the frames -- and within boundary frames only the SZx block
+        range -- that the slice touches.
+
+        A leading-axis slice of a C-order array is one contiguous flat
+        element range, and a leaf's chunk frames partition its flat range,
+        so the read path seeks straight to the intersecting frames via the
+        v3 index (raw pack leaves read just the byte sub-range).  This is
+        the elastic sub-shard restore: a host that owns rows [lo, hi) of a
+        sharded parameter pulls exactly those rows out of a full checkpoint.
+        """
+        d, manifest = self._step_dir(step)
+        if manifest.get("manifest_version", 1) < 2:
+            # v1 layouts have no per-leaf frame index; restore + slice
+            return self._restore_leaf_v1(
+                d, {m["name"]: m for m in manifest["leaves"]}[name]
+            )[rows]
+        by_name = {m["name"]: m for m in manifest["leaves"]}
+        if name not in by_name:
+            raise KeyError(f"leaf {name} not in checkpoint step {manifest['step']}")
+        meta = by_name[name]
+        shape = tuple(meta["shape"])
+        if not shape:
+            raise ValueError(f"leaf {name} is a scalar; use restore_leaves")
+        dtype = np_dtype_for(meta["dtype"])
+        if isinstance(rows, slice):
+            if rows.step not in (None, 1):
+                raise ValueError("restore_leaf_slice supports step-1 slices only")
+            lo, hi, _ = rows.indices(shape[0])
+            if hi <= lo:                    # numpy semantics: empty slice
+                return np.empty((0,) + shape[1:], dtype)
+            squeeze = False
+        else:
+            lo = int(rows) + (shape[0] if int(rows) < 0 else 0)
+            if not 0 <= lo < shape[0]:
+                raise IndexError(f"row {rows} out of range for shape {shape}")
+            hi, squeeze = lo + 1, True
+        row_elems = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 else 1
+        flat_lo, flat_hi = lo * row_elems, hi * row_elems
+        out = np.empty(flat_hi - flat_lo, dtype)
+        with open(os.path.join(d, manifest["file"]), "rb") as f:
+            stream_idx = {"frames": manifest.get("frames")} if "frames" in manifest \
+                else None
+            if stream_idx is None:
+                from repro.core.codec import container as _c
+
+                stream_idx = _c.read_index_footer(f)
+            if meta["codec"] == "raw":
+                frame_off, _len = stream_idx["frames"][meta["frames"][0]]
+                inner, _size = meta["pack"]
+                from repro.core.codec import container as _c
+
+                f.seek(frame_off + _c.FRAME_HEADER.size + inner
+                       + flat_lo * dtype.itemsize)
+                data = _c._read_exact(f, out.nbytes)
+                out[:] = np.frombuffer(data, dtype=dtype)
+            else:
+                self._fill_from_szx_frames(
+                    f, stream_idx["frames"], meta["frames"], flat_lo, flat_hi, out
+                )
+        out = out.reshape((hi - lo,) + shape[1:])
+        return out[0] if squeeze else out
+
+    def _fill_from_szx_frames(self, f, frames, frame_range, flat_lo, flat_hi,
+                              out) -> None:
+        """Fill ``out`` with elements [flat_lo, flat_hi) of a leaf stored as
+        chunk frames [lo_f, hi_f): peek each frame's element count from its
+        header (58-byte reads), then fully read + block-range-decode only
+        the intersecting frames."""
+        from repro.core.codec import container as _c
+
+        lo_f, hi_f = frame_range
+        base = 0                           # flat offset of the current frame
+        for i in range(lo_f, hi_f):
+            off, length = frames[i][:2]
+            _flags, _plen, sheader = _c.read_frame_stream_header_at(f, off, i)
+            _m, _v, _dt, bs, n, _e, _nb, _nnc, _nmid = _c.HEADER.unpack_from(
+                sheader, 0
+            )
+            frame_lo, frame_hi = base, base + n
+            base = frame_hi
+            if frame_hi <= flat_lo:
+                continue
+            if frame_lo >= flat_hi:
+                break
+            payload, _flags = _c.read_frame_at(f, off, length, i)
+            ilo, ihi = max(flat_lo, frame_lo), min(flat_hi, frame_hi)
+            b_lo, b_hi = (ilo - frame_lo) // bs, (ihi - frame_lo - 1) // bs + 1
+            seg = self._codec.decompress_range(payload, b_lo, b_hi)
+            out[ilo - flat_lo : ihi - flat_lo] = seg[
+                (ilo - frame_lo) - b_lo * bs : (ihi - frame_lo) - b_lo * bs
+            ]
+        if base < flat_hi:
+            raise ValueError(
+                f"leaf frames cover {base} elements, slice needs {flat_hi}"
+            )
 
     def _restore_leaf_v1(self, d: str, meta: dict) -> np.ndarray:
         """Per-leaf-file layout of pre-TreeCodec checkpoints."""

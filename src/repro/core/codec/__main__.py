@@ -77,10 +77,14 @@ def _scan_frames(f, container):
 
 
 def _cmd_info(args) -> int:
+    import json
+
     from repro.core.codec import container, plan
 
     with open(args.input, "rb") as f:
-        idx = container.read_index_footer(f)
+        # corrupt footers degrade to the sequential scan with a warning --
+        # info stays usable on damaged v3 files
+        idx = container.read_index_footer_safe(f)
         if idx is None:
             f.seek(0)
             nframes, nraw, total_n, dtype_code, e = _scan_frames(f, container)
@@ -98,17 +102,44 @@ def _cmd_info(args) -> int:
                 szx_leaves = [m for m in idx["leaves"] if m["codec"] == "szx"]
                 first = szx_leaves[0]["frames"][0] if szx_leaves else None
             else:
-                total_n = idx.get("n", 0)
+                if idx.get("kind") == "szx-store":
+                    import math
+
+                    total_n = math.prod(idx["shape"])
+                    e = idx.get("e")       # store footer carries the bound
+                else:
+                    total_n = idx.get("n", 0)
                 dtype_code = idx.get("dtype")
                 first = 0 if idx["frames"] else None
             if first is not None and (dtype_code is None or e is None):
                 off, length = idx["frames"][first][:2]
                 payload, _flags = container.read_frame_at(f, off, length, first)
                 dtype_code, _n, e = container.peek_stream_meta(payload)
-    dtype = plan.spec_for_code(dtype_code).name if dtype_code is not None else "n/a"
+    dtype = plan.spec_for_code(dtype_code).name if dtype_code is not None else None
+    if args.json:
+        info = {
+            "frames": nframes,
+            "raw_frames": nraw,
+            "n": total_n,
+            "dtype": dtype,
+            "e": e,
+            "index": ("v" + str(idx["v"])) if idx else None,
+            "kind": idx.get("kind") if idx else None,
+            # per-frame [offset, length(, elements)] byte ranges when indexed
+            "frame_ranges": idx["frames"] if idx else None,
+        }
+        if idx and idx.get("kind") == "szx-tree":
+            info["leaves"] = [m["name"] for m in idx["leaves"]]
+            info["raw_bytes"] = idx["raw_bytes"]
+            info["stored_bytes"] = idx["stored_bytes"]
+        if idx and idx.get("kind") == "szx-store":
+            info["shape"] = idx["shape"]
+            info["chunk_shape"] = idx["chunk_shape"]
+        print(json.dumps(info, indent=1))
+        return 0
     bound = f"{e:g}" if e is not None else "n/a"
     print(f"frames: {nframes} ({nraw} raw), elements: {total_n}, "
-          f"dtype: {dtype}, e: {bound}")
+          f"dtype: {dtype or 'n/a'}, e: {bound}")
     print(f"index footer: {'v' + str(idx['v']) if idx else 'absent (v2 stream)'}")
     if idx:
         print(f"indexed frames: {len(idx['frames'])}, kind: {idx.get('kind')}")
@@ -150,6 +181,8 @@ def main(argv: list[str] | None = None) -> int:
 
     i = sub.add_parser("info", help="print stream header/index summary")
     i.add_argument("input")
+    i.add_argument("--json", action="store_true",
+                   help="machine-readable summary incl. per-frame byte ranges")
     i.set_defaults(fn=_cmd_info)
 
     args = ap.parse_args(argv)

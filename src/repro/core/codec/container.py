@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import functools
 import struct
+from dataclasses import dataclass
 from typing import Iterator
 
 import numpy as np
@@ -139,6 +140,149 @@ def _copy_mid(L, nbytes, itemsize, counts, start, wide, src, dst, *, gather):
             dst[plane_idx] = src[mid_idx]
 
 
+@dataclass(frozen=True)
+class StreamSections:
+    """Parsed metadata sections of one v2 stream -- everything EXCEPT the
+    mid-byte stream.
+
+    This is the partial-decode contract: the metadata prefix (header, const
+    bitmap, mu, reqlen, L codes) is tiny relative to the mid stream, and
+    ``block_mid_start`` locates every block's mid bytes, so a reader can
+    fetch the prefix, pick a block range, and then read ONLY that range's
+    mid bytes (``repro.store`` ROI reads do exactly this).
+    """
+
+    plan: Plan
+    const: np.ndarray            # (nb,) bool
+    mu: np.ndarray               # (nb,) stream dtype
+    reqlen: np.ndarray           # (nb,) int32 (0 for const blocks)
+    shift: np.ndarray            # (nb,) int32
+    nbytes: np.ndarray           # (nb,) int32
+    L: np.ndarray                # (nb, bs) int32
+    nmid: int                    # total mid-stream length (header field)
+    mid_offset: int              # byte offset of the mid stream in the stream
+    block_mid_start: np.ndarray  # (nb,) int64 exclusive cumsum of block mid bytes
+
+    def mid_range(self, lo: int, hi: int) -> tuple[int, int]:
+        """[start, stop) byte offsets WITHIN the mid stream holding the mid
+        bytes of blocks [lo, hi)."""
+        nb = self.plan.nblocks
+        start = int(self.block_mid_start[lo]) if lo < nb else self.nmid
+        stop = int(self.block_mid_start[hi]) if hi < nb else self.nmid
+        return start, stop
+
+
+def stream_prefix_length(header: bytes) -> int:
+    """Byte length of the metadata prefix (header through L codes) of a v2
+    stream, computed from its 40-byte header alone."""
+    if len(header) < HEADER.size:
+        raise ValueError("truncated SZx stream (shorter than header)")
+    _m, _v, dtype_code, bs, _n, _e, nb, nnc, _nmid = HEADER.unpack_from(header, 0)
+    spec = plan_mod.spec_for_code(dtype_code)
+    nbm = (nb + 7) // 8
+    nl = (nnc * bs + 3) // 4
+    return HEADER.size + nbm + spec.itemsize * nb + nnc + nl
+
+
+def parse_stream_sections(prefix, *, backend: str = "auto") -> StreamSections:
+    """Validate + deserialize the metadata prefix of a v2 stream.
+
+    ``prefix`` must cover at least the metadata sections (header, const
+    bitmap, mu, reqlen, L codes); the mid-byte stream may be absent -- its
+    layout is returned as ``block_mid_start`` so callers can read just the
+    ranges they need (see :func:`extract_block_range`).
+    """
+    buf = bytes(prefix) if not isinstance(prefix, (bytes, bytearray)) else prefix
+    if len(buf) < HEADER.size:
+        raise ValueError("truncated SZx stream (shorter than header)")
+    magic, version, dtype_code, bs, n, e, nb, nnc, nmid = HEADER.unpack_from(buf, 0)
+    if magic != MAGIC:
+        raise ValueError("bad SZx stream header (magic mismatch)")
+    if version != VERSION:
+        raise ValueError(f"unsupported SZx stream version {version}")
+    spec = plan_mod.spec_for_code(dtype_code)           # raises on unknown code
+    if nnc > nb:
+        raise ValueError("corrupt SZx stream (n_nonconst > nblocks)")
+    if bs == 0 or nb != (n + bs - 1) // bs:
+        raise ValueError("corrupt SZx stream (block count mismatch)")
+    p = plan_mod.plan_for_stream(dtype_code, bs, n, e, backend)
+
+    nbm = (nb + 7) // 8
+    nl = (nnc * bs + 3) // 4
+    prefix_len = HEADER.size + nbm + spec.itemsize * nb + nnc + nl
+    if len(buf) < prefix_len:
+        raise ValueError(
+            f"truncated SZx stream ({len(buf)} bytes, metadata sections "
+            f"need {prefix_len})"
+        )
+    off = HEADER.size
+    const = np.unpackbits(np.frombuffer(buf, np.uint8, nbm, off))[:nb].astype(bool)
+    off += nbm
+    mu = np.frombuffer(buf, spec.np_dtype, nb, off).copy()
+    off += spec.itemsize * nb
+    reqlen_nc = np.frombuffer(buf, np.uint8, nnc, off).astype(np.int32)
+    off += nnc
+    L_nc = unpack_2bit(np.frombuffer(buf, np.uint8, nl, off), nnc * bs)
+    off += nl
+
+    nc = ~const
+    if int(nc.sum()) != nnc:
+        raise ValueError("corrupt SZx stream (const bitmap / n_nonconst mismatch)")
+    reqlen = np.zeros(nb, np.int32)
+    reqlen[nc] = reqlen_nc
+    shift, nbytes = derive_layout(reqlen, const, spec)
+    if nbytes.max(initial=0) > spec.itemsize:
+        raise ValueError("corrupt SZx stream (reqlen exceeds dtype width)")
+    L = np.zeros((nb, bs), np.int32)
+    L[nc] = L_nc.reshape(nnc, bs)
+
+    block_counts = np.maximum(nbytes[:, None] - L, 0).sum(axis=1, dtype=np.int64)
+    ends = np.cumsum(block_counts)
+    total = int(ends[-1]) if nb else 0
+    if total != nmid:
+        raise ValueError("corrupt SZx stream (mid-stream length mismatch)")
+    return StreamSections(
+        p, const, mu, reqlen, shift, nbytes, L, int(nmid), off,
+        ends - block_counts,
+    )
+
+
+def extract_block_range(sec: StreamSections, mid, lo: int, hi: int) -> BlockEncoding:
+    """Materialize the block encoding of blocks [lo, hi) of a parsed stream.
+
+    ``mid`` holds EXACTLY those blocks' mid bytes (the ``sec.mid_range(lo,
+    hi)`` slice of the mid stream).  The returned encoding is self-contained
+    (block axis rebased to start at ``lo``) and decodes with the ordinary
+    :func:`repro.core.codec.transform.decode_blocks` on any backend --
+    partial decode costs O(hi - lo), not O(nblocks).
+    """
+    nb = sec.plan.nblocks
+    if not 0 <= lo < hi <= nb:
+        raise ValueError(f"block range [{lo}, {hi}) out of [0, {nb})")
+    spec = sec.plan.dtype
+    itemsize = spec.itemsize
+    bs = sec.plan.block_size
+    L_r = np.ascontiguousarray(sec.L[lo:hi])
+    nbytes_r = np.ascontiguousarray(sec.nbytes[lo:hi])
+    counts, start, nmid_r, wide = _mid_plan(L_r, nbytes_r, itemsize)
+    mid_u8 = np.frombuffer(mid, np.uint8) if not isinstance(mid, np.ndarray) else mid
+    if mid_u8.size != nmid_r:
+        raise ValueError(
+            f"mid-byte range for blocks [{lo}, {hi}) has {mid_u8.size} bytes, "
+            f"expected {nmid_r}"
+        )
+    planes = np.zeros((hi - lo, itemsize, bs), np.uint8)
+    if nmid_r:
+        _copy_mid(
+            L_r, nbytes_r, itemsize, counts, start, wide,
+            mid_u8, planes.reshape(-1), gather=False,
+        )
+    return BlockEncoding(
+        sec.mu[lo:hi], sec.const[lo:hi], sec.reqlen[lo:hi],
+        sec.shift[lo:hi], nbytes_r, planes, L_r,
+    )
+
+
 def build_stream(p: Plan, enc: BlockEncoding) -> bytes:
     """Serialize one plan + block encoding into a self-contained v2 stream."""
     nc = ~enc.const
@@ -176,59 +320,21 @@ def build_stream(p: Plan, enc: BlockEncoding) -> bytes:
 
 def parse_stream(buf: bytes, *, backend: str = "auto") -> tuple[Plan, BlockEncoding]:
     """Validate + deserialize a v2 stream into (plan, block encoding)."""
-    if len(buf) < HEADER.size:
-        raise ValueError("truncated SZx stream (shorter than header)")
-    magic, version, dtype_code, bs, n, e, nb, nnc, nmid = HEADER.unpack_from(buf, 0)
-    if magic != MAGIC:
-        raise ValueError("bad SZx stream header (magic mismatch)")
-    if version != VERSION:
-        raise ValueError(f"unsupported SZx stream version {version}")
-    spec = plan_mod.spec_for_code(dtype_code)           # raises on unknown code
-    if nnc > nb:
-        raise ValueError("corrupt SZx stream (n_nonconst > nblocks)")
-    if bs == 0 or nb != (n + bs - 1) // bs:
-        raise ValueError("corrupt SZx stream (block count mismatch)")
-    p = plan_mod.plan_for_stream(dtype_code, bs, n, e, backend)
-
-    nbm = (nb + 7) // 8
-    nl = (nnc * bs + 3) // 4
-    expected = HEADER.size + nbm + spec.itemsize * nb + nnc + nl + nmid
+    sec = parse_stream_sections(buf, backend=backend)
+    expected = sec.mid_offset + sec.nmid
     if len(buf) < expected:
         raise ValueError(
             f"truncated SZx stream ({len(buf)} bytes, expected {expected})"
         )
-    off = HEADER.size
-    const = np.unpackbits(np.frombuffer(buf, np.uint8, nbm, off))[:nb].astype(bool)
-    off += nbm
-    mu = np.frombuffer(buf, spec.np_dtype, nb, off).copy()
-    off += spec.itemsize * nb
-    reqlen_nc = np.frombuffer(buf, np.uint8, nnc, off).astype(np.int32)
-    off += nnc
-    L_nc = unpack_2bit(np.frombuffer(buf, np.uint8, nl, off), nnc * bs)
-    off += nl
-    mid_stream = np.frombuffer(buf, np.uint8, nmid, off)
-
-    nc = ~const
-    if int(nc.sum()) != nnc:
-        raise ValueError("corrupt SZx stream (const bitmap / n_nonconst mismatch)")
-    reqlen = np.zeros(nb, np.int32)
-    reqlen[nc] = reqlen_nc
-    shift, nbytes = derive_layout(reqlen, const, spec)
-    if nbytes.max(initial=0) > spec.itemsize:
-        raise ValueError("corrupt SZx stream (reqlen exceeds dtype width)")
-    L = np.zeros((nb, bs), np.int32)
-    L[nc] = L_nc.reshape(nnc, bs)
-
-    counts, start, total, wide = _mid_plan(L, nbytes, spec.itemsize)
-    if total != nmid:
-        raise ValueError("corrupt SZx stream (mid-stream length mismatch)")
-    planes = np.zeros((nb, spec.itemsize, bs), np.uint8)
-    if nmid:
-        _copy_mid(
-            L, nbytes, spec.itemsize, counts, start, wide,
-            mid_stream, planes.reshape(-1), gather=False,
+    nb = sec.plan.nblocks
+    if nb == 0:
+        spec = sec.plan.dtype
+        planes = np.zeros((0, spec.itemsize, sec.plan.block_size), np.uint8)
+        return sec.plan, BlockEncoding(
+            sec.mu, sec.const, sec.reqlen, sec.shift, sec.nbytes, planes, sec.L
         )
-    return p, BlockEncoding(mu, const, reqlen, shift, nbytes, planes, L)
+    mid_stream = np.frombuffer(buf, np.uint8, sec.nmid, sec.mid_offset)
+    return sec.plan, extract_block_range(sec, mid_stream, 0, nb)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +399,27 @@ def read_index_footer(f) -> dict | None:
     return json.loads(payload)
 
 
+def read_index_footer_safe(f) -> dict | None:
+    """Corruption-tolerant :func:`read_index_footer`: a bit-flipped or
+    truncated footer returns ``None`` after a ``RuntimeWarning`` instead of
+    raising, so callers can fall back to a sequential v2 decode.  A stream
+    with no footer at all returns ``None`` silently, exactly like
+    :func:`read_index_footer`."""
+    import json
+    import warnings
+
+    try:
+        return read_index_footer(f)
+    except (ValueError, json.JSONDecodeError, struct.error) as err:
+        warnings.warn(
+            f"corrupt container-v3 index footer ({err}); treating the stream "
+            "as a sequential (v2) frame sequence",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return None
+
+
 def read_frame_at(f, offset: int, length: int, seq: int) -> tuple[bytes, int]:
     """Random-access read of one frame via its index entry.
 
@@ -313,6 +440,36 @@ def read_frame_at(f, offset: int, length: int, seq: int) -> tuple[bytes, int]:
     if len(frame) != FRAME_HEADER.size + plen:
         raise ValueError("truncated SZx frame (payload length mismatch)")
     return frame[FRAME_HEADER.size:], flags
+
+
+def read_frame_stream_header_at(f, offset: int, seq: int) -> tuple[int, int, bytes]:
+    """Random-access 58-byte peek at a frame's headers: seek to ``offset``,
+    validate the frame header against ``seq`` and the payload's v2 stream
+    header, and return ``(flags, payload_len, stream_header)``.
+
+    The shared entry for every partial reader (store ROI reads, query
+    scans, checkpoint sliced restore) -- none of them should interpret
+    index-supplied offsets without these checks.  The file position is left
+    right after the stream header.  Raw frames (no v2 payload) are the
+    caller's job to route around via the index.
+    """
+    f.seek(offset)
+    head = _read_exact(f, FRAME_HEADER.size + HEADER.size)
+    magic, version, flags, fseq, plen = FRAME_HEADER.unpack_from(head, 0)
+    if magic != FRAME_MAGIC:
+        raise ValueError("bad SZx frame (magic mismatch)")
+    if version != FRAME_VERSION:
+        raise ValueError(f"unsupported SZx frame version {version}")
+    if fseq != seq:
+        raise ValueError(f"SZx index/frame seq mismatch (frame {fseq}, index {seq})")
+    if plen < HEADER.size:
+        raise ValueError("truncated SZx stream (shorter than header)")
+    sheader = head[FRAME_HEADER.size:]
+    if sheader[:4] != MAGIC:
+        raise ValueError("bad SZx stream header (magic mismatch)")
+    if sheader[4] != VERSION:
+        raise ValueError(f"unsupported SZx stream version {sheader[4]}")
+    return flags, plen, sheader
 
 
 def _read_exact(f, size: int) -> bytes:
@@ -408,9 +565,21 @@ def _iter_frames_file(f) -> Iterator[tuple[bytes, int]]:
         yield _read_exact(f, plen), flags
         seq_expected += 1
         if flags & FLAG_LAST:
-            # v3 streams carry an index footer after the LAST frame; anything
-            # else trailing is an error (frame after LAST, garbage, ...)
+            # v3 streams carry an index footer after the LAST frame.  A
+            # further frame (FRAME_MAGIC) is always an error; any OTHER
+            # trailing bytes are most plausibly a corrupted footer, and the
+            # frames themselves are intact, so tolerate them with a warning
+            # (sequential decode is the corrupt-footer fallback path).
             tail = f.read(len(INDEX_MAGIC))
             if tail and tail != INDEX_MAGIC:
-                raise ValueError("SZx frame after the LAST-flagged frame")
+                if tail.startswith(FRAME_MAGIC[: len(tail)]):
+                    raise ValueError("SZx frame after the LAST-flagged frame")
+                import warnings
+
+                warnings.warn(
+                    "ignoring unrecognized trailing bytes after the LAST "
+                    "SZx frame (corrupt index footer?)",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
             return

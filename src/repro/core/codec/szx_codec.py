@@ -46,6 +46,33 @@ def _imap_ordered(fn: Callable, items: Iterable, workers: int) -> Iterator:
                 pending.popleft().cancel()
 
 
+def _validate_select(select) -> list[int]:
+    """Normalize a frame selection: integers, strictly increasing, non-empty.
+
+    Out-of-range, duplicate, and unsorted selections all raise a clear
+    ValueError here (or in the caller, for the upper range check) instead of
+    leaking numpy/IndexError from the read path.
+    """
+    out = []
+    for i in select:
+        if isinstance(i, bool) or not isinstance(i, (int, np.integer)):
+            raise ValueError(
+                f"select= expects integer frame indices, got {i!r}"
+            )
+        i = int(i)
+        if i < 0:
+            raise ValueError(f"frame index {i} out of range (negative)")
+        if out and i <= out[-1]:
+            raise ValueError(
+                f"select= must be strictly increasing (got {i} after "
+                f"{out[-1]}: duplicates/unsorted selections are ambiguous)"
+            )
+        out.append(i)
+    if not out:
+        raise ValueError("empty SZx frame selection")
+    return out
+
+
 @dataclass(frozen=True)
 class CompressionStats:
     n: int
@@ -109,6 +136,21 @@ class SZxCodec:
         p, enc = container.parse_stream(buf, backend=self.backend)
         xb = transform.decode_blocks(enc, p)
         return np.asarray(xb).reshape(-1)[: p.n]
+
+    def decompress_range(self, buf: bytes, lo_block: int, hi_block: int) -> np.ndarray:
+        """Partial decode of one v2 stream: blocks [lo_block, hi_block) only.
+
+        Returns the flat values covered by those blocks (the trailing padded
+        values of the stream's final block are clipped), i.e. elements
+        ``[lo_block * bs, min(hi_block * bs, n))`` of ``decompress(buf)`` --
+        at O(range) decode cost.  Parsing is still O(stream); callers that
+        also want byte reads proportional to the range use the
+        section-level API (``repro.store``).
+        """
+        p, enc = container.parse_stream(buf, backend=self.backend)
+        xb = transform.decode_block_range(enc, p, lo_block, hi_block)
+        flat = np.asarray(xb).reshape(-1)
+        return flat[: min(hi_block * p.block_size, p.n) - lo_block * p.block_size]
 
     def compress_with_stats(self, x, error_bound: float, **kw) -> tuple[bytes, CompressionStats]:
         buf = self.compress(x, error_bound, **kw)
@@ -287,35 +329,57 @@ class SZxCodec:
         (total element count) to preallocate: peak memory
         O(n + workers * chunk).
 
-        ``select``: an iterable of frame indices -- decode ONLY those frames
-        (concatenated in the given order), reading only their byte ranges via
-        the container-v3 index footer (requires a seekable stream written
-        with ``index=True``; raises ValueError on v2 streams).
+        ``select``: a strictly increasing iterable of in-range frame indices
+        -- decode ONLY those frames (concatenated), reading only their byte
+        ranges via the container-v3 index footer (requires a seekable stream
+        written with ``index=True``; raises ValueError on v2 streams).  A
+        present-but-corrupt footer falls back to a sequential decode of the
+        whole stream (with a RuntimeWarning), still returning only the
+        selected frames' elements.
         """
         if select is None:
             return self.decompress_chunked(fileobj, n=n)
-        idx = container.read_index_footer(fileobj)
-        if idx is None:
-            raise ValueError(
-                "select= needs a container-v3 index footer; this stream has "
-                "none (rewrite it with dump_chunked(..., index=True))"
-            )
-        if idx.get("kind") != "szx-chunked":
+        select = _validate_select(select)
+        idx = container.read_index_footer_safe(fileobj)
+        if idx is not None and idx.get("kind") != "szx-chunked":
             raise ValueError(
                 f"not a single-array chunked stream (footer kind "
                 f"{idx.get('kind')!r}); tree streams restore via "
                 "TreeCodec.decompress_tree"
             )
+        if idx is None:
+            # distinguish "no footer was ever written" (v2: select= is a
+            # caller error) from "footer present but unreadable" (corrupt:
+            # fall back to the sequential decode select= still works on).
+            # A valid trailer starts with the SZXI magic in the last 20
+            # bytes; a corrupt-but-present footer usually still does.
+            end = fileobj.seek(0, 2)
+            fileobj.seek(max(end - container.INDEX_TRAILER.size, 0))
+            trailer = fileobj.read(container.INDEX_TRAILER.size)
+            fileobj.seek(0)
+            if container.INDEX_MAGIC not in trailer:
+                raise ValueError(
+                    "select= needs a container-v3 index footer; this stream "
+                    "has none (rewrite it with dump_chunked(..., index=True))"
+                )
+            wanted = set(select)
+            parts = []
+            for i, payload in enumerate(container.iter_frames(fileobj)):
+                if i in wanted:
+                    parts.append(self.decompress(payload))
+            if select[-1] >= i + 1:
+                raise ValueError(
+                    f"frame index {select[-1]} out of range [0, {i + 1})"
+                )
+            return np.concatenate(parts) if len(parts) > 1 else parts[0]
         frames = idx["frames"]
         parts = []
         for i in select:
-            if not 0 <= i < len(frames):
-                raise IndexError(f"frame {i} out of range [0, {len(frames)})")
+            if i >= len(frames):
+                raise ValueError(f"frame index {i} out of range [0, {len(frames)})")
             off, length, _elems = frames[i]
             payload, _flags = container.read_frame_at(fileobj, off, length, i)
             parts.append(self.decompress(payload))
-        if not parts:
-            raise ValueError("empty SZx frame selection")
         return np.concatenate(parts) if len(parts) > 1 else parts[0]
 
 

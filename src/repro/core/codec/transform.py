@@ -89,3 +89,21 @@ def decode_blocks(enc: BlockEncoding, p: Plan) -> np.ndarray:
             spec=p.dtype, backend=p.backend,
         )
     )
+
+
+def decode_block_range(enc: BlockEncoding, p: Plan, lo: int, hi: int) -> np.ndarray:
+    """Partial decode: blocks [lo, hi) only -> (hi - lo, bs) in the plan dtype.
+
+    The ROI entry point: decode cost scales with the requested range, not the
+    stream -- all three backends, through the same ``ops`` dispatch (dense
+    fast path included via :func:`repro.kernels.ops.unpack_range`)."""
+    from repro.kernels import ops
+
+    if not 0 <= lo < hi <= enc.mu.shape[0]:
+        raise ValueError(f"block range [{lo}, {hi}) out of [0, {enc.mu.shape[0]})")
+    return np.asarray(
+        ops.unpack_range(
+            enc.planes, enc.mu, enc.shift, enc.nbytes, enc.L, lo, hi,
+            spec=p.dtype, backend=p.backend,
+        )
+    )

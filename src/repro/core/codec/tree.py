@@ -254,6 +254,10 @@ class TreeCodec:
         idx = self.read_manifest(fileobj)
         by_name = {m["name"]: m for m in idx["leaves"]}
         if select is not None:
+            select = list(select)
+            if len(set(select)) != len(select):
+                dupes = sorted({n for n in select if select.count(n) > 1})
+                raise ValueError(f"duplicate leaf names in select=: {dupes}")
             out = {}
             for name in select:
                 meta = by_name.get(name)

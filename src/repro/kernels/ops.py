@@ -453,6 +453,26 @@ def unpack_dense(planes, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
         return _unpack_dense_jax(*args, spec)
 
 
+def unpack_range(planes, mu, shift, nbytes, L, lo: int, hi: int, *,
+                 spec: DtypeSpec = specs.F32, backend: str = "auto"):
+    """Partial decode of blocks [lo, hi): the ROI read primitive.
+
+    Slices every per-block operand to the range, then dispatches the same
+    width-generic ``unpack``/``unpack_dense`` pair -- so the partial decode
+    is bit-identical to ``unpack(...)[lo:hi]`` on every backend (jax /
+    kernel / numpy) at O(hi - lo) cost, and ranges with no XOR-lead elision
+    take the dense fast path like full frames do.
+    """
+    nb = np.asarray(mu).shape[0]
+    if not 0 <= lo < hi <= nb:
+        raise ValueError(f"block range [{lo}, {hi}) out of [0, {nb})")
+    L_r = L[lo:hi]
+    args = (planes[lo:hi], mu[lo:hi], shift[lo:hi], nbytes[lo:hi])
+    if not np.asarray(L_r).any():
+        return unpack_dense(*args, spec=spec, backend=backend)
+    return unpack(*args, L_r, spec=spec, backend=backend)
+
+
 def planes_encode(xb, num_planes: int, *, backend: str = "auto"):
     """szx-planes fixed-plane encode (see kernels.ref.planes_encode_ref).
 

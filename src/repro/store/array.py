@@ -1,0 +1,307 @@
+"""Block-addressable compressed array store: save/open + lazy ROI reads.
+
+``ArrayStore.save`` writes an N-d array as a grid of independently
+addressable SZx chunks (one container-v3 frame per chunk, footer =
+block-grid index); ``ArrayStore.open`` returns a lazy :class:`CompressedArray`
+whose ``__getitem__`` decodes ONLY the chunks -- and within each chunk only
+the contiguous SZx block range -- intersecting the requested ROI.
+
+The read path is two-phase per intersecting chunk: (1) read the chunk's
+metadata prefix (stream header, const bitmap, mu, reqlen, L codes -- a few
+percent of the chunk) and (2) read exactly the mid-byte range of the
+intersecting blocks.  Bytes read therefore scale with the ROI, never the
+array, and non-intersecting chunks are never even parsed.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.codec import container, plan as plan_mod, transform
+from repro.core.codec.szx_codec import SZxCodec, _imap_ordered
+from repro.store import format as format_mod, grid as grid_mod, query as query_mod
+from repro.store.grid import ChunkGrid
+
+DEFAULT_STORE_CHUNK_BYTES = grid_mod.DEFAULT_CHUNK_TARGET_BYTES
+
+
+class ArrayStore:
+    """Namespace front-end: ``ArrayStore.save(...)`` / ``ArrayStore.open(...)``."""
+
+    @staticmethod
+    def save(
+        path_or_file,
+        arr,
+        error_bound: float,
+        *,
+        mode: str = "abs",
+        chunk_shape: tuple[int, ...] | None = None,
+        chunk_bytes: int = DEFAULT_STORE_CHUNK_BYTES,
+        block_size: int = plan_mod.DEFAULT_BLOCK_SIZE,
+        backend: str = "numpy",
+        workers: int = 1,
+        attrs: dict | None = None,
+    ) -> dict:
+        """Write ``arr`` as a chunk-grid store stream; returns the index dict.
+
+        The error bound is resolved ONCE over the full array (so
+        ``mode='rel'`` means the same thing it does monolithically), then
+        every chunk is compressed independently at that absolute bound --
+        each chunk payload is bit-identical to ``SZxCodec.compress`` of that
+        chunk.  ``workers > 1`` compresses chunk bodies on a thread pool;
+        the bytes on disk are identical for every worker count.
+        """
+        arr = np.asarray(arr)
+        if arr.ndim == 0:
+            raise ValueError("0-d arrays are not storable; reshape to (1,)")
+        if arr.size == 0:
+            raise ValueError("empty arrays are not storable")
+        spec = plan_mod.spec_for(arr.dtype)     # TypeError on non-float dtypes
+        grid = ChunkGrid.for_shape(
+            arr.shape, chunk_shape, itemsize=spec.itemsize,
+            target_bytes=chunk_bytes,
+        )
+        e = plan_mod.resolve_error_bound(arr, error_bound, mode, spec)
+        codec = SZxCodec(block_size=block_size, backend=backend, workers=workers)
+
+        def payload(cid: int) -> bytes:
+            coord = grid.chunk_coord(cid)
+            box = tuple(slice(lo, hi) for lo, hi in grid.chunk_box(coord))
+            chunk = np.ascontiguousarray(arr[box]).reshape(-1)
+            return codec.compress(chunk, e)
+
+        cids = range(grid.nchunks)
+        if workers > 1 and grid.nchunks > 1:
+            payloads: Iterator[bytes] = _imap_ordered(payload, cids, workers)
+        else:
+            payloads = map(payload, cids)
+
+        f, own = _as_file(path_or_file, "wb")
+        try:
+            written = 0
+            frames: list[list[int]] = []
+            for cid, pl in enumerate(payloads):
+                frame = container.build_frame(pl, cid, last=cid == grid.nchunks - 1)
+                frames.append([
+                    written, len(frame),
+                    grid.chunk_elements(grid.chunk_coord(cid)),
+                ])
+                f.write(frame)
+                written += len(frame)
+            idx = format_mod.build_store_index(
+                grid, spec.code, block_size, e, frames, attrs
+            )
+            f.write(container.build_index_footer(idx))
+        finally:
+            if own:
+                f.close()
+        return idx
+
+    @staticmethod
+    def open(path_or_file, *, backend: str = "numpy") -> "CompressedArray":
+        """Open a store stream lazily: reads ONLY the index footer."""
+        f, own = _as_file(path_or_file, "rb")
+        try:
+            idx = container.read_index_footer(f)
+        except Exception:
+            if own:
+                f.close()
+            raise
+        if idx is None:
+            if own:
+                f.close()
+            raise ValueError(
+                "not an array-store stream (no container-v3 index footer)"
+            )
+        try:
+            return CompressedArray(f, idx, backend=backend, own_file=own)
+        except Exception:
+            if own:
+                f.close()
+            raise
+
+
+def _as_file(path_or_file, fallback_mode):
+    if isinstance(path_or_file, (str, os.PathLike)):
+        return open(path_or_file, fallback_mode), True
+    return path_or_file, False
+
+
+class CompressedArray:
+    """Lazy view of a stored array: numpy-style ROI reads + compressed-domain
+    queries, decoding only what each request touches.
+
+    Supports ints, step-1 slices, and Ellipsis in ``__getitem__`` (every ROI
+    is a hyperrectangle; ``ca[...]`` materializes the whole array).  Queries
+    (:meth:`mean`/:meth:`min`/:meth:`max`/:meth:`sum`) run straight on the
+    compressed stream -- see :mod:`repro.store.query`.  Instances are not
+    thread-safe (one shared seek cursor); concurrent readers each ``open``
+    their own.
+    """
+
+    def __init__(self, fileobj, idx: dict, *, backend: str = "numpy",
+                 own_file: bool = False):
+        grid, spec, block_size, e = format_mod.validate_store_index(idx)
+        self._f = fileobj
+        self._grid = grid
+        self._spec = spec
+        self._block_size = block_size
+        self._e = e
+        self._frames = idx["frames"]
+        self._backend = backend
+        self._own = own_file
+        self._closed = False
+        self.attrs = dict(idx.get("attrs") or {})
+
+    # ------------------------------------------------------------- metadata
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self._grid.shape
+
+    @property
+    def chunk_shape(self) -> tuple[int, ...]:
+        return self._grid.chunk_shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self._spec.np_dtype
+
+    @property
+    def ndim(self) -> int:
+        return len(self._grid.shape)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self._grid.shape)
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self._spec.itemsize
+
+    @property
+    def error_bound(self) -> float:
+        return self._e
+
+    @property
+    def nchunks(self) -> int:
+        return self._grid.nchunks
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(fr[1] for fr in self._frames)
+
+    def __repr__(self) -> str:
+        return (
+            f"CompressedArray(shape={self.shape}, dtype={self.dtype.name}, "
+            f"chunks={self.chunk_shape}, e={self._e:g}, "
+            f"CR={self.nbytes / max(self.stored_bytes, 1):.2f})"
+        )
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            if self._own:
+                self._f.close()
+
+    def __enter__(self) -> "CompressedArray":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ValueError("I/O operation on a closed CompressedArray")
+
+    # ------------------------------------------------------------ ROI reads
+    def __getitem__(self, key) -> np.ndarray:
+        self._check_open()
+        roi = grid_mod.normalize_roi(key, self.shape)
+        out = np.empty(roi.box_shape, self.dtype)
+        bs = self._block_size
+        for cid, local, outr in grid_mod.intersecting_chunks(self._grid, roi):
+            cdims = self._grid.chunk_dims(self._grid.chunk_coord(cid))
+            lo_b, hi_b = grid_mod.block_range_for_box(local, cdims, bs)
+            seg = self._decode_chunk_range(cid, lo_b, hi_b)
+            out_sl = tuple(slice(lo, hi) for lo, hi in outr)
+            if all(hi - lo == d for (lo, hi), d in zip(local, cdims)):
+                # whole chunk requested: the segment IS the chunk, C order
+                out[out_sl] = seg.reshape(cdims)
+            else:
+                idx = np.ravel_multi_index(
+                    np.ix_(*[np.arange(lo, hi) for lo, hi in local]), cdims
+                ) - lo_b * bs
+                out[out_sl] = seg[idx]
+        return out.reshape(roi.out_shape)
+
+    def read(self, key=Ellipsis) -> np.ndarray:
+        return self[key]
+
+    def _decode_chunk_range(self, cid: int, lo_b: int, hi_b: int) -> np.ndarray:
+        """Decode blocks [lo_b, hi_b) of chunk ``cid`` -> flat values.
+
+        Reads (1) the frame header + stream metadata prefix and (2) exactly
+        the mid-byte range of the requested blocks; returns the flat decoded
+        values with the final block's padding clipped.
+        """
+        off, length, elements = (int(v) for v in self._frames[cid])
+        f = self._f
+        _flags, plen, sheader = container.read_frame_stream_header_at(f, off, cid)
+        if container.FRAME_HEADER.size + plen != length:
+            raise ValueError("corrupt store index (frame length mismatch)")
+        prefix_len = container.stream_prefix_length(sheader)
+        if prefix_len > plen:
+            raise ValueError("truncated SZx stream (metadata exceeds payload)")
+        rest = container._read_exact(f, prefix_len - container.HEADER.size)
+        sec = container.parse_stream_sections(
+            sheader + rest, backend=self._backend
+        )
+        if sec.plan.n != elements:
+            raise ValueError(
+                f"corrupt store index (chunk {cid}: stream has {sec.plan.n} "
+                f"elements, index says {elements})"
+            )
+        hi_b = min(hi_b, sec.plan.nblocks)
+        mlo, mhi = sec.mid_range(lo_b, hi_b)
+        mid = b""
+        if mhi > mlo:
+            f.seek(off + container.FRAME_HEADER.size + prefix_len + mlo)
+            mid = container._read_exact(f, mhi - mlo)
+        enc = container.extract_block_range(
+            sec, np.frombuffer(mid, np.uint8), lo_b, hi_b
+        )
+        flat = np.asarray(transform.decode_blocks(enc, sec.plan)).reshape(-1)
+        bs = sec.plan.block_size
+        return flat[: min(hi_b * bs, elements) - lo_b * bs]
+
+    # ----------------------------------------------------- compressed queries
+    def stats(self, *, header_only: bool = False) -> "query_mod.QueryStats":
+        """Aggregate stats straight from the compressed stream.
+
+        Default: exact stats of the decompressed array (constant blocks are
+        answered from their headers alone; only non-constant blocks decode).
+        ``header_only=True`` never reads plane/mid bytes at all and returns
+        guaranteed ``[lo, hi]`` intervals instead (width <= 2*(radius bound
+        + e) per non-constant block; exact when every block is constant).
+        """
+        self._check_open()
+        return query_mod.scan_frames(
+            self._f, self._frames, backend=self._backend,
+            header_only=header_only,
+        )
+
+    def mean(self) -> float:
+        return self.stats().mean[0]
+
+    def sum(self) -> float:
+        return self.stats().sum[0]
+
+    def min(self) -> float:
+        return self.stats().min[0]
+
+    def max(self) -> float:
+        return self.stats().max[0]

@@ -1,0 +1,93 @@
+"""On-disk format of the array store: container v3 with a block-grid index.
+
+A store file IS a container-v3 stream (`docs/FORMAT.md`): a sequence of
+self-delimiting frames -- one frame per N-d chunk, each payload an
+independent v2 SZx stream of the chunk's C-order flattening -- followed by
+the seekable index footer.  The footer's ``kind`` is ``"szx-store"`` and its
+index extends the chunked schema with the chunk-grid geometry:
+
+    {
+      "v": 1, "kind": "szx-store", "store_v": 1,
+      "shape": [...], "chunk_shape": [...],
+      "dtype": <dtype code>, "block_size": <int>, "e": <absolute bound>,
+      "frames": [[offset, length, elements], ...],   # one per chunk, C order
+      "attrs": {...},                                 # user metadata
+    }
+
+``frames[grid.chunk_id(coord)]`` is the byte range of the chunk at N-d
+coordinate ``coord`` -- the block-grid index mapping chunk coordinates to
+byte ranges.  Any container-v3 reader can still walk the frames
+sequentially; ``SZxCodec.load_chunked``-style readers see a normal chunked
+stream whose chunk order happens to be the grid's C order.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.codec import plan as plan_mod
+
+from repro.store.grid import ChunkGrid
+
+STORE_KIND = "szx-store"
+STORE_VERSION = 1
+
+
+def build_store_index(
+    grid: ChunkGrid,
+    dtype_code: int,
+    block_size: int,
+    e: float,
+    frames: list[list[int]],
+    attrs: dict | None = None,
+) -> dict:
+    if len(frames) != grid.nchunks:
+        raise ValueError(
+            f"store index needs one frame per chunk ({grid.nchunks}), got "
+            f"{len(frames)}"
+        )
+    from repro.core.codec import container
+
+    return {
+        "v": container.INDEX_VERSION,
+        "kind": STORE_KIND,
+        "store_v": STORE_VERSION,
+        "shape": list(grid.shape),
+        "chunk_shape": list(grid.chunk_shape),
+        "dtype": int(dtype_code),
+        "block_size": int(block_size),
+        "e": float(e),
+        "frames": frames,
+        "attrs": dict(attrs or {}),
+    }
+
+
+def validate_store_index(idx: dict) -> tuple[ChunkGrid, object, int, float]:
+    """Check a footer dict is a readable store index; returns
+    ``(grid, dtype_spec, block_size, e)``."""
+    if idx.get("kind") != STORE_KIND:
+        raise ValueError(
+            f"not an array-store stream (footer kind {idx.get('kind')!r}); "
+            "chunked streams load via SZxCodec.load_chunked, tree streams "
+            "via TreeCodec.decompress_tree"
+        )
+    if idx.get("store_v", 0) > STORE_VERSION:
+        raise ValueError(
+            f"unsupported array-store version {idx.get('store_v')}"
+        )
+    spec = plan_mod.spec_for_code(int(idx["dtype"]))
+    shape = tuple(int(d) for d in idx["shape"])
+    chunk_shape = tuple(int(c) for c in idx["chunk_shape"])
+    grid = ChunkGrid(shape, chunk_shape)
+    frames = idx["frames"]
+    if len(frames) != grid.nchunks:
+        raise ValueError(
+            f"corrupt store index ({len(frames)} frames for {grid.nchunks} "
+            "chunks)"
+        )
+    total = sum(int(f[2]) for f in frames)
+    if total != math.prod(shape):
+        raise ValueError(
+            f"corrupt store index (frames cover {total} elements, shape "
+            f"needs {math.prod(shape)})"
+        )
+    return grid, spec, int(idx["block_size"]), float(idx["e"])

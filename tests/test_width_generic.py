@@ -117,6 +117,42 @@ def test_ops_backends_agree(dtype):
 
 @pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
 @pytest.mark.parametrize("backend", BACKENDS)
+def test_unpack_range_matches_full_decode(dtype, backend):
+    """Partial decode (the store ROI primitive): ``unpack_range(lo, hi)`` is
+    bit-identical to the corresponding slice of the full decode on every
+    backend, and validates its range."""
+    spec = specs.spec_for(dtype)
+    x = _field(23 * 64, dtype, seed=7, scale=0.01).reshape(23, 64)
+    e = 1e-2
+    mu, const, reqlen, shift, nbytes, planes, L = (
+        np.asarray(a) for a in ops.encode(x, e, spec=spec, backend="numpy")
+    )
+    full = np.asarray(ops.unpack(planes, mu, shift, nbytes, L, spec=spec,
+                                 backend=backend))
+    for lo, hi in ((0, 23), (5, 9), (22, 23), (0, 1)):
+        part = np.asarray(
+            ops.unpack_range(planes, mu, shift, nbytes, L, lo, hi,
+                             spec=spec, backend=backend)
+        )
+        np.testing.assert_array_equal(
+            part.view(np.uint8), full[lo:hi].view(np.uint8),
+            err_msg=f"range [{lo},{hi}) {backend}",
+        )
+    # dense fast path inside a range: all-L==0 ranges match unpack_dense
+    z = np.zeros_like(L)
+    d = np.asarray(ops.unpack_range(planes, mu, shift, nbytes, z, 3, 11,
+                                    spec=spec, backend=backend))
+    ref = np.asarray(ops.unpack_dense(planes[3:11], mu[3:11], shift[3:11],
+                                      nbytes[3:11], spec=spec, backend=backend))
+    np.testing.assert_array_equal(d.view(np.uint8), ref.view(np.uint8))
+    for lo, hi in ((-1, 3), (5, 5), (9, 5), (0, 24)):
+        with pytest.raises(ValueError):
+            ops.unpack_range(planes, mu, shift, nbytes, L, lo, hi,
+                             spec=spec, backend=backend)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=_ids)
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_fused_encode_matches_two_call(dtype, backend):
     spec = specs.spec_for(dtype)
     x = _field(9 * 128, dtype, seed=3).reshape(9, 128)

@@ -347,7 +347,11 @@ else:
     dtype = np.dtype(np.float32)
 n_elems = n * 4 // dtype.itemsize
 workers = (os.cpu_count() or 1) if kind == "chunked-par" else 1
-codec = SZxCodec(backend="numpy", workers=workers)
+# chunked-dev-decode: the SAME frame pipeline on the device backend --
+# encode_to_stream on dump, decode_stream on load (one transfer per chunk,
+# on-device container parse + fused unpack+compose)
+backend = "jax" if kind == "chunked-dev-decode" else "numpy"
+codec = SZxCodec(backend=backend, workers=workers)
 rel = 1e-3
 
 
@@ -391,6 +395,42 @@ class CountingFile:
         self.raw.close()
 
 reps = int(os.environ.get("SZX_BENCH_REPS", 3))   # best-of-N vs host noise
+if kind == "pipeline_compressed_a2a":
+    # gpipe dryrun: compressed vs raw activation shift on an 8-device host
+    # mesh (parent sets XLA_FLAGS).  dump = compressed schedule, load = raw;
+    # wire bytes are analytic (wire_bytes_per_value), so the parent's cr is
+    # the deterministic compressed-vs-raw bytes-moved ratio.
+    import jax, jax.numpy as jnp
+    from repro.core import grad_compress as gc
+    from repro.pipeline_par import pipeline_apply
+
+    n_stages, n_micro, d = 4, 8, 512
+    mb = max(n // (n_micro * d * 8), 1)           # scale batch with SZX_BENCH_N
+    mesh = jax.make_mesh((n_stages,), ("stage",))
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray((rng.standard_normal((n_stages, d, d)) * 0.1),
+                     jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+    stage = lambda p, x: jnp.tanh(x @ p)
+    planes = 1
+    fn = pipeline_apply(
+        stage, mesh, compress_activations=phase == "dump", num_planes=planes
+    )
+    jax.block_until_ready(fn(ws, xs))             # compile outside the timing
+    dt = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn(ws, xs))
+        dt = min(dt, time.time() - t0)
+    ticks = n_micro + n_stages - 1
+    wire_raw = ticks * n_stages * mb * d * 4      # per-tick per-stage shift
+    wire_comp = wire_raw / 4.0 * gc.wire_bytes_per_value(planes, 64)
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": int(wire_comp),
+                      "n": n, "dtype": "float32", "workers": 1,
+                      "wire_raw_mb": wire_raw / 1e6,
+                      "wire_comp_mb": wire_comp / 1e6}))
+    sys.exit(0)
 if kind == "store_roi" and phase == "load":
     # lazy ROI read of the leading ~1% of rows: report ROI MB/s and the
     # bytes-read ratio (the "bytes read scale with the ROI" guarantee)
@@ -483,7 +523,13 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     'store_roi_read' saves the same bytes as an N-d repro.store chunk grid
     and lazily reads a ~1% leading-rows ROI: comp_mbs is the store save
     throughput, decomp_mbs the ROI read MB/s, and roi_bytes_read_ratio pins
-    that bytes read scale with the ROI, not the array.  Results also land in
+    that bytes read scale with the ROI, not the array.  'chunked-dev-decode'
+    runs the chunked pipeline on the device backend (one transfer per chunk
+    both ways; the decode tentpole's symmetric path).
+    'pipeline_compressed_a2a' dry-runs the gpipe activation shift on an
+    8-device host mesh: comp_mbs/decomp_mbs are the compressed/raw schedule
+    wire-throughputs and cr is the analytic compressed-vs-raw bytes-moved
+    ratio.  Results also land in
     BENCH_codec.json at the repo root (override the path with
     SZX_BENCH_JSON, the f32-equivalent element count with SZX_BENCH_N) to
     anchor the codec perf trajectory; benchmarks/check_regression.py gates
@@ -494,17 +540,43 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     out: dict = {"n": n}
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
     for kind in ("mono", "chunked", "chunked-par", "chunked-f64", "chunked-bf16",
-                 "tree_checkpoint", "store_roi_read"):
+                 "chunked-dev-decode", "tree_checkpoint", "store_roi_read",
+                 "pipeline_compressed_a2a"):
         child_kind = "store_roi" if kind == "store_roi_read" else kind
+        child_env = env
+        if kind == "pipeline_compressed_a2a":
+            child_env = {
+                **env, "XLA_FLAGS": "--xla_force_host_platform_device_count=8"
+            }
         path = os.path.join(tmpdir, f"{kind}.szx")
         res = {}
         for phase in ("dump", "load"):
             r = subprocess.run(
                 [sys.executable, "-c", _CHUNKED_CHILD, f"{child_kind}_{phase}", path],
-                capture_output=True, text=True, timeout=1800, env=env,
+                capture_output=True, text=True, timeout=1800, env=child_env,
             )
             assert r.returncode == 0, r.stderr[-2000:]
             res[phase] = json.loads(r.stdout.strip().splitlines()[-1])
+        if kind == "pipeline_compressed_a2a":
+            wire_raw_mb = res["dump"]["wire_raw_mb"]
+            out[kind] = dict(
+                comp_mbs=wire_raw_mb / res["dump"]["t"],    # compressed sched
+                decomp_mbs=wire_raw_mb / res["load"]["t"],  # raw schedule
+                cr=wire_raw_mb / res["dump"]["wire_comp_mb"],
+                wire_raw_mb=wire_raw_mb,
+                wire_comp_mb=res["dump"]["wire_comp_mb"],
+                dtype="float32",
+                workers=1,
+            )
+            _emit(
+                f"beyond/chunked_dump_load/{kind}", res["dump"]["t"] * 1e6,
+                f"comp_MB/s={out[kind]['comp_mbs']:.0f};"
+                f"decomp_MB/s={out[kind]['decomp_mbs']:.0f};"
+                f"wire_raw_MB={wire_raw_mb:.1f};"
+                f"wire_comp_MB={out[kind]['wire_comp_mb']:.1f};"
+                f"bytes_moved_ratio={out[kind]['cr']:.2f}",
+            )
+            continue
         raw_mb = n * 4 / 1e6
         # store_roi_read's load phase reads a ~1% ROI lazily: decomp_mbs is
         # ROI MB/s (the serving metric), and read_ratio pins bytes-read ∝ ROI

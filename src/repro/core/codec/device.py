@@ -238,3 +238,170 @@ def to_stream(enc: DeviceEncoding) -> bytes:
 def encode_to_stream(xb, p: Plan) -> bytes:
     """One-transfer encode: blocks -> final container bytes."""
     return to_stream(encode_device(xb, p))
+
+
+# ---------------------------------------------------------------------------
+# device-resident decode (the mirror: ONE device_put of raw frame bytes)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "backend", "nb", "bs", "rb", "rebase")
+)
+def _decode_device_jit(body, nnc, lo, *, spec: DtypeSpec, backend: str,
+                       nb: int, bs: int, rb: int, rebase: bool):
+    from repro.kernels import ops
+
+    return ops.decode_staged(
+        body, nnc, lo, spec=spec, nb=nb, bs=bs, rb=rb, rebase=rebase,
+        backend=backend,
+    )
+
+
+def _bucket_body(raw: np.ndarray, cap: int) -> np.ndarray:
+    """Zero-pad the body bytes to the next power-of-2 bucket (bounded by the
+    worst-case capacity) so each chunk geometry compiles a handful of decode
+    programs instead of one per payload length.  Gathers in the decode
+    program are index-clipped, so the padding is never observable."""
+    size = min(cap, 1 << (max(int(raw.size), 1) - 1).bit_length())
+    padded = np.zeros(size, np.uint8)
+    padded[: raw.size] = raw
+    return padded
+
+
+def _checked_stream_header(buf):
+    """Host-side header-only validation (mirrors ``container.parse_stream``'s
+    messages); returns the unpacked fields + spec + section geometry."""
+    from repro.core.codec import plan as plan_mod
+
+    if len(buf) < container.HEADER.size:
+        raise ValueError("truncated SZx stream (shorter than header)")
+    magic, version, dtype_code, bs, n, e, nb, nnc, nmid = (
+        container.HEADER.unpack_from(buf, 0)
+    )
+    if magic != container.MAGIC:
+        raise ValueError("bad SZx stream header (magic mismatch)")
+    if version != container.VERSION:
+        raise ValueError(f"unsupported SZx stream version {version}")
+    spec = plan_mod.spec_for_code(dtype_code)           # raises on unknown code
+    if nnc > nb:
+        raise ValueError("corrupt SZx stream (n_nonconst > nblocks)")
+    if bs == 0 or nb != (n + bs - 1) // bs:
+        raise ValueError("corrupt SZx stream (block count mismatch)")
+    prefix_len = (
+        container.HEADER.size + (nb + 7) // 8 + spec.itemsize * nb + nnc
+        + (nnc * bs + 3) // 4
+    )
+    if len(buf) < prefix_len:
+        raise ValueError(
+            f"truncated SZx stream ({len(buf)} bytes, metadata sections "
+            f"need {prefix_len})"
+        )
+    return spec, bs, n, nb, nnc, nmid, prefix_len
+
+
+def _check_measured(meas, nnc: int, nmid: int, spec: DtypeSpec) -> None:
+    """Raise the canonical ``container`` corrupt-stream errors from the
+    data-dependent checks the device program measured (fetched alongside the
+    decoded values in its single readback)."""
+    if int(meas[0]) != nnc:
+        raise ValueError("corrupt SZx stream (const bitmap / n_nonconst mismatch)")
+    if int(meas[1]) > spec.itemsize:
+        raise ValueError("corrupt SZx stream (reqlen exceeds dtype width)")
+    if int(meas[2]) != nmid:
+        raise ValueError("corrupt SZx stream (mid-stream length mismatch)")
+
+
+def decode_stream(buf, *, backend: str = "auto", out=None, block_range=None):
+    """Device-resident decompress of ONE v2 stream -> flat (n,) numpy array.
+
+    The decode mirror of :func:`encode_to_stream`: the 40-byte header is
+    unpacked on the host (pure struct math, no numpy section parsing), the
+    raw body bytes cross the link as exactly ONE ``jax.device_put``, and the
+    section offsets, metadata parse, and fused unpack+compose all run inside
+    one jitted program (``ops.decode_staged``).  The decoded values return
+    with the validation scalars in a single ``jax.device_get``.
+
+    Returns None when the device route does not apply (numpy backend, empty
+    stream, int32-unsafe capacity, or a body longer than the worst case) --
+    callers then take the host path.  With ``out`` (flat (n,) array in the
+    stream dtype) the result is written in place.  ``block_range=(lo, hi)``
+    decodes only those blocks of the same device-put body (mid offsets stay
+    absolute) and returns their clipped flat values.
+    """
+    from repro.kernels import ops
+
+    backend = ops._resolve(backend)
+    if backend == "numpy":
+        return None
+    spec, bs, n, nb, nnc, nmid, prefix_len = _checked_stream_header(buf)
+    expected = prefix_len + nmid
+    if len(buf) < expected:
+        raise ValueError(
+            f"truncated SZx stream ({len(buf)} bytes, expected {expected})"
+        )
+    cap = nb and (
+        (nb + 7) // 8 + spec.itemsize * nb + nb + (nb * bs + 3) // 4
+        + nb * bs * spec.itemsize
+    )
+    blen = expected - container.HEADER.size
+    if nb == 0 or cap > _INT32_SAFE or blen > cap:
+        return None
+    lo, hi = (0, nb) if block_range is None else block_range
+    if not 0 <= lo < hi <= nb:
+        return None                      # host path raises the canonical error
+    raw = np.frombuffer(buf, np.uint8, blen, container.HEADER.size)
+    with ops._x64_scope(spec):
+        dev_body = jax.device_put(_bucket_body(raw, cap))
+        vals, meas = _decode_device_jit(
+            dev_body, np.int32(nnc), np.int32(lo),
+            spec=spec, backend=backend, nb=nb, bs=bs, rb=hi - lo, rebase=False,
+        )
+        vals, meas = jax.device_get((vals, meas))
+    _check_measured(meas, nnc, nmid, spec)
+    flat = vals.reshape(-1)[: min(hi * bs, n) - lo * bs]
+    if out is not None:
+        np.copyto(out, flat)
+        return out
+    return flat
+
+
+def decode_range(prefix: bytes, mid: bytes, lo: int, hi: int, *,
+                 backend: str = "auto"):
+    """Device decode of blocks [lo, hi) from a metadata prefix + exactly that
+    range's mid bytes (the store ROI read layout) -> flat (hi-lo)*bs values.
+
+    The combined ``prefix[40:] + mid`` buffer has the SAME section offsets as
+    a full body (the mid section simply starts at block ``lo``'s first mid
+    byte), so this shares the full-decode program with ``rebase=True``: the
+    kernel re-derives block ``lo``'s absolute mid offset from the L-code
+    cumsum and subtracts it.  One ``device_put``, one jitted program, one
+    readback.  Returns None when the device route does not apply.
+    """
+    from repro.kernels import ops
+
+    backend = ops._resolve(backend)
+    if backend == "numpy":
+        return None
+    spec, bs, n, nb, nnc, nmid, prefix_len = _checked_stream_header(prefix)
+    cap = nb and (
+        (nb + 7) // 8 + spec.itemsize * nb + nb + (nb * bs + 3) // 4
+        + nb * bs * spec.itemsize
+    )
+    if nb == 0 or cap > _INT32_SAFE or not 0 <= lo < hi <= nb:
+        return None
+    raw = np.concatenate([
+        np.frombuffer(prefix, np.uint8, prefix_len - container.HEADER.size,
+                      container.HEADER.size),
+        np.frombuffer(mid, np.uint8),
+    ])
+    if raw.size > cap:
+        return None
+    with ops._x64_scope(spec):
+        dev_body = jax.device_put(_bucket_body(raw, cap))
+        vals, meas = _decode_device_jit(
+            dev_body, np.int32(nnc), np.int32(lo),
+            spec=spec, backend=backend, nb=nb, bs=bs, rb=hi - lo, rebase=True,
+        )
+        vals, meas = jax.device_get((vals, meas))
+    _check_measured(meas, nnc, nmid, spec)
+    return vals.reshape(-1)

@@ -131,11 +131,36 @@ class SZxCodec:
 
         return device.encode_to_stream(xb, p)
 
-    def decompress(self, buf: bytes) -> np.ndarray:
-        """Decompress one v2 stream -> flat array in the stream's dtype."""
+    def decompress(self, buf: bytes, *, out: np.ndarray | None = None) -> np.ndarray:
+        """Decompress one v2 stream -> flat array in the stream's dtype.
+
+        On the device backends ('jax'/'kernel', or 'auto' resolving to them)
+        the whole decode is device-resident -- ONE ``jax.device_put`` of the
+        raw body bytes, on-device section parsing + the fused unpack+compose
+        program, one readback (``device.decode_stream``); the numpy backend
+        keeps the host mirror.  With ``out`` (a flat (n,) array in the
+        stream's dtype) the result is written in place and ``out`` returned.
+        """
+        from repro.kernels import ops
+
+        if ops._resolve(self.backend) != "numpy":
+            from repro.core.codec import device
+
+            res = device.decode_stream(buf, backend=self.backend, out=out)
+            if res is not None:
+                return res
         p, enc = container.parse_stream(buf, backend=self.backend)
+        if out is not None and p.n == p.nblocks * p.block_size:
+            transform.decode_blocks(
+                enc, p, out=out.reshape(p.nblocks, p.block_size)
+            )
+            return out
         xb = transform.decode_blocks(enc, p)
-        return np.asarray(xb).reshape(-1)[: p.n]
+        flat = np.asarray(xb).reshape(-1)[: p.n]
+        if out is not None:
+            np.copyto(out, flat)
+            return out
+        return flat
 
     def decompress_range(self, buf: bytes, lo_block: int, hi_block: int) -> np.ndarray:
         """Partial decode of one v2 stream: blocks [lo_block, hi_block) only.
@@ -145,8 +170,19 @@ class SZxCodec:
         ``[lo_block * bs, min(hi_block * bs, n))`` of ``decompress(buf)`` --
         at O(range) decode cost.  Parsing is still O(stream); callers that
         also want byte reads proportional to the range use the
-        section-level API (``repro.store``).
+        section-level API (``repro.store``).  Device backends decode the
+        range with the same one-put fused program as :meth:`decompress`.
         """
+        from repro.kernels import ops
+
+        if ops._resolve(self.backend) != "numpy":
+            from repro.core.codec import device
+
+            res = device.decode_stream(
+                buf, backend=self.backend, block_range=(lo_block, hi_block)
+            )
+            if res is not None:
+                return res
         p, enc = container.parse_stream(buf, backend=self.backend)
         xb = transform.decode_block_range(enc, p, lo_block, hi_block)
         flat = np.asarray(xb).reshape(-1)
@@ -237,44 +273,56 @@ class SZxCodec:
         ``frames`` may be concatenated bytes, a binary file object, or an
         iterable of frame byte strings (e.g. from :meth:`compress_chunked`).
         Pass ``n`` (the total element count, e.g. from a manifest) to
-        preallocate the output and keep peak memory at O(n + workers * chunk);
-        without it the decoded chunks are buffered and concatenated,
-        peaking at ~2x the output size.  With ``workers > 1`` frame payloads
-        decode concurrently; results are consumed strictly in frame order.
+        preallocate the output and keep peak memory at O(n + workers * chunk):
+        each frame's element count is peeked from its header and the frame
+        decodes straight into its slice of the output (``out=``), with no
+        per-frame result copy -- including under ``workers > 1``.  Without
+        ``n`` the decoded chunks are buffered and concatenated, peaking at
+        ~2x the output size.  With ``workers > 1`` frame payloads decode
+        concurrently; results are consumed strictly in frame order.
         """
+        out = None
 
-        def checked_payloads() -> Iterator[bytes]:
+        def jobs() -> Iterator[tuple[bytes, int, int]]:
+            nonlocal out
             spec_code = None
+            off = 0
             for payload in container.iter_frames(frames):
                 if len(payload) <= 5:
                     raise ValueError("truncated SZx stream (shorter than header)")
                 if spec_code is None:
                     spec_code = payload[5]
+                    if n is not None:
+                        out = np.empty(
+                            n, plan_mod.spec_for_code(spec_code).np_dtype
+                        )
                 elif payload[5] != spec_code:
                     raise ValueError("SZx frame sequence mixes dtypes")
-                yield payload
-
-        if self.workers > 1:
-            decoded = _imap_ordered(self.decompress, checked_payloads(), self.workers)
-        else:
-            decoded = map(self.decompress, checked_payloads())
-
-        parts: list[np.ndarray] = []
-        out = None
-        filled = 0
-        seen = False
-        for part in decoded:
-            if not seen:
-                seen = True
-                if n is not None:
-                    out = np.empty(n, part.dtype)
-            if out is not None:
-                if filled + part.size > n:
+                _code, fn, _e = container.peek_stream_meta(payload)
+                if out is not None and off + fn > n:
                     raise ValueError(
                         f"SZx frame sequence longer than expected ({n} elements)"
                     )
-                out[filled : filled + part.size] = part
-            else:
+                yield payload, off, int(fn)
+                off += int(fn)
+
+        def decode(job: tuple[bytes, int, int]) -> np.ndarray:
+            payload, off, fn = job
+            if out is not None:
+                return self.decompress(payload, out=out[off : off + fn])
+            return self.decompress(payload)
+
+        if self.workers > 1:
+            decoded = _imap_ordered(decode, jobs(), self.workers)
+        else:
+            decoded = map(decode, jobs())
+
+        parts: list[np.ndarray] = []
+        filled = 0
+        seen = False
+        for part in decoded:
+            seen = True
+            if out is None:
                 parts.append(part)
             filled += part.size
         if not seen:

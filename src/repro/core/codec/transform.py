@@ -67,28 +67,29 @@ def encode_blocks(xb: np.ndarray, p: Plan) -> BlockEncoding:
                          planes, L.astype(np.int32))
 
 
-def decode_blocks(enc: BlockEncoding, p: Plan) -> np.ndarray:
+def decode_blocks(enc: BlockEncoding, p: Plan, *, out=None) -> np.ndarray:
     """Inverse of :func:`encode_blocks` -> (nb, bs) in the plan dtype.
 
     Frames whose L codes are all zero (no XOR-lead elision anywhere) take the
     batched dense path -- for EVERY dtype -- which skips the per-byte
-    index-propagation scan.
+    index-propagation scan.  With ``out`` (a (nb, bs) array in the plan
+    dtype) the frame is reconstructed straight into the caller's buffer and
+    ``out`` is returned -- the chunked decompressors pass views of their
+    preallocated output so no per-frame result array is ever materialized.
     """
     from repro.kernels import ops
 
     if not enc.L.any():
-        return np.asarray(
-            ops.unpack_dense(
-                enc.planes, enc.mu, enc.shift, enc.nbytes,
-                spec=p.dtype, backend=p.backend,
-            )
+        res = ops.unpack_dense(
+            enc.planes, enc.mu, enc.shift, enc.nbytes,
+            spec=p.dtype, backend=p.backend, out=out,
         )
-    return np.asarray(
-        ops.unpack(
+    else:
+        res = ops.unpack(
             enc.planes, enc.mu, enc.shift, enc.nbytes, enc.L,
-            spec=p.dtype, backend=p.backend,
+            spec=p.dtype, backend=p.backend, out=out,
         )
-    )
+    return res if out is not None else np.asarray(res)
 
 
 def decode_block_range(enc: BlockEncoding, p: Plan, lo: int, hi: int) -> np.ndarray:

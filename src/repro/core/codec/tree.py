@@ -85,7 +85,7 @@ class TreeCodec:
     def _compressible(self, arr: np.ndarray) -> bool:
         return arr.dtype in plan_mod.BY_DTYPE and arr.size >= self.min_compress_elems
 
-    def compress_tree(self, tree, fileobj) -> dict:
+    def compress_tree(self, tree, fileobj, *, _leaf_payloads=None) -> dict:
         """Write ``tree`` as one container-v3 multi-leaf stream; returns the
         stream manifest (the same dict stored in the index footer).
 
@@ -95,6 +95,13 @@ class TreeCodec:
         O(workers * chunk) for the compressed leaves.
         """
         import jax
+
+        if _leaf_payloads is None:
+            def _leaf_payloads(arr):
+                return self.codec.iter_chunk_payloads(
+                    arr, self.error_bound, mode=self.mode,
+                    chunk_bytes=self.chunk_bytes,
+                )
 
         leaves = [
             (name, np.asarray(jax.device_get(leaf)))
@@ -152,9 +159,7 @@ class TreeCodec:
             lo = seq
             stored = 0
             final_leaf = li == len(big_leaves) - 1
-            for payload, pl_last in self.codec.iter_chunk_payloads(
-                arr, self.error_bound, mode=self.mode, chunk_bytes=self.chunk_bytes
-            ):
+            for payload, pl_last in _leaf_payloads(arr):
                 frame = container.build_frame(
                     payload, seq, last=final_leaf and pl_last
                 )
@@ -181,6 +186,66 @@ class TreeCodec:
         fileobj.write(container.build_index_footer(manifest))
         return manifest
 
+    def _sharded_leaf_payloads(
+        self, arr: np.ndarray, devices
+    ) -> Iterator[tuple[bytes, bool]]:
+        """One block-aligned shard per device; shard ``i`` compresses under
+        ``jax.default_device(devices[i])`` so its whole device-resident
+        encode (transform + stream assembly) runs on that device.  The error
+        bound is resolved over the FULL leaf first, so each payload is
+        bit-identical to ``compress(shard, e_abs)`` -- the stream layout is
+        indistinguishable from a host chunked encode with shard-sized
+        chunks, and restores through the ordinary frame path.
+        """
+        import jax
+
+        spec = plan_mod.spec_for(arr.dtype)
+        e = plan_mod.resolve_error_bound(arr, self.error_bound, self.mode, spec)
+        flat = arr.reshape(-1)
+        bs = self.codec.block_size
+        ndev = max(len(devices), 1)
+        blocks_total = max((flat.size + bs - 1) // bs, 1)
+        per = -(-blocks_total // ndev)          # ceil: block-aligned shards
+        bounds = [min(i * per * bs, flat.size) for i in range(ndev + 1)]
+        shards = [
+            (dev, lo, hi)
+            for dev, (lo, hi) in zip(devices, zip(bounds, bounds[1:]))
+            if hi > lo
+        ] or [(devices[0], 0, flat.size)]
+
+        def payload(job) -> bytes:
+            dev, lo, hi = job
+            with jax.default_device(dev):
+                return self.codec.compress(flat[lo:hi], e, mode="abs")
+
+        if self.codec.workers > 1 and len(shards) > 1:
+            payloads = _imap_ordered(payload, iter(shards), self.codec.workers)
+        else:
+            payloads = map(payload, shards)
+        for i, pl in enumerate(payloads):
+            yield pl, i == len(shards) - 1
+
+    def compress_tree_sharded(self, tree, fileobj, mesh, *, axis: str = "data") -> dict:
+        """Sharded :meth:`compress_tree`: each device along mesh ``axis``
+        compresses its own block-aligned shard of every large float leaf.
+
+        Shard payloads land in the stream in shard order, so the container
+        layout and manifest are structurally identical to a chunked encode
+        and :meth:`decompress_tree` restores them unchanged.  Small/raw
+        leaves still pack into frame 0 on the host.
+        """
+        names = list(mesh.axis_names)
+        if axis not in names:
+            raise ValueError(
+                f"mesh has no axis {axis!r} (axes: {tuple(names)})"
+            )
+        moved = np.moveaxis(np.asarray(mesh.devices), names.index(axis), 0)
+        devices = list(moved.reshape(moved.shape[0], -1)[:, 0])
+        return self.compress_tree(
+            tree, fileobj,
+            _leaf_payloads=lambda arr: self._sharded_leaf_payloads(arr, devices),
+        )
+
     # ----------------------------------------------------------- decompress
     def read_manifest(self, fileobj) -> dict:
         idx = container.read_index_footer(fileobj)
@@ -204,28 +269,35 @@ class TreeCodec:
             data = container._read_exact(fileobj, size)
             return np.frombuffer(data, dtype=dtype).reshape(shape)
         lo, hi = meta["frames"]
+        # preallocated fill: each frame decodes straight into its slice of
+        # the output (``out=``), so peak memory stays O(leaf + workers *
+        # chunk) with no per-frame result copy
+        flat = np.empty(meta["n"], dtype=dtype)
 
-        def payloads() -> Iterator[bytes]:
+        def jobs() -> Iterator[tuple[bytes, int, int]]:
+            off = 0
             for i in range(lo, hi):
-                off, length = idx["frames"][i]
-                payload, _flags = container.read_frame_at(fileobj, off, length, i)
-                yield payload
+                foff, length = idx["frames"][i]
+                payload, _flags = container.read_frame_at(fileobj, foff, length, i)
+                _code, fn, _e = container.peek_stream_meta(payload)
+                if off + fn > flat.size:
+                    raise ValueError(
+                        f"leaf {meta['name']}: stream has more than the "
+                        f"manifest's {meta['n']} elements"
+                    )
+                yield payload, off, int(fn)
+                off += int(fn)
+
+        def decode(job: tuple[bytes, int, int]) -> np.ndarray:
+            payload, off, fn = job
+            return self.codec.decompress(payload, out=flat[off : off + fn])
 
         if self.codec.workers > 1 and hi - lo > 1:
-            parts = _imap_ordered(self.codec.decompress, payloads(), self.codec.workers)
+            parts = _imap_ordered(decode, jobs(), self.codec.workers)
         else:
-            parts = map(self.codec.decompress, payloads())
-        # preallocated fill: peak memory stays O(leaf + workers * chunk),
-        # not 2x the leaf (parts list + concatenate copy)
-        flat = np.empty(meta["n"], dtype=dtype)
+            parts = map(decode, jobs())
         filled = 0
         for part in parts:
-            if filled + part.size > flat.size:
-                raise ValueError(
-                    f"leaf {meta['name']}: stream has more than the "
-                    f"manifest's {meta['n']} elements"
-                )
-            flat[filled : filled + part.size] = part
             filled += part.size
         if filled != flat.size:
             raise ValueError(

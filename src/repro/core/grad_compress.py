@@ -75,6 +75,59 @@ def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1,
     return mean, resid
 
 
+def compressed_ppermute(x, axis_name: str, perm, *, num_planes: int = 1,
+                        block: int = DEFAULT_BLOCK, backend: str = "jax"):
+    """Inside shard_map: szx-planes-compressed ``jax.lax.ppermute``.
+
+    Encodes ``x`` along its last axis, permutes the (~4x smaller at P=1)
+    encoding arrays over ``axis_name``, and decodes on the receiving member.
+    The point-to-point activation shift of pipeline parallelism
+    (``pipeline_par.gpipe``) is the intended caller: the wire moves
+    ``wire_bytes_per_value`` bytes/value instead of 4.0.
+    """
+    enc = _encode_leaf(x, num_planes, block, backend)
+    moved = jax.tree.map(
+        lambda a: jax.lax.ppermute(a, axis_name, perm), enc
+    )
+    return _decode_leaf(moved, x.shape, x.dtype, block, backend)
+
+
+def compressed_all_to_all(x, axis_name: str, split_axis: int, concat_axis: int,
+                          *, num_planes: int = 1, block: int = DEFAULT_BLOCK,
+                          backend: str = "jax"):
+    """Inside shard_map: szx-planes-compressed ``jax.lax.all_to_all``.
+
+    Encodes along the LAST axis (which becomes the block grid and must not
+    be the split/concat axis), moves each encoding array with a tiled
+    ``all_to_all`` -- the ``planes`` array's leading plane axis shifts the
+    operand axes by one -- and decodes to the post-exchange shape.
+    """
+    if x.ndim < 2:
+        raise ValueError("compressed_all_to_all needs >= 2 dims (last = blocks)")
+    split_axis, concat_axis = split_axis % x.ndim, concat_axis % x.ndim
+    if x.ndim - 1 in (split_axis, concat_axis):
+        raise ValueError(
+            "compressed_all_to_all cannot split/concat the blocked last axis"
+        )
+    n = compat.axis_size(axis_name)
+    enc = _encode_leaf(x, num_planes, block, backend)
+
+    def move(a, lead):
+        return jax.lax.all_to_all(
+            a, axis_name, split_axis + lead, concat_axis + lead, tiled=True
+        )
+
+    moved = enc.replace(
+        mu=move(enc["mu"], 0),
+        sexp=move(enc["sexp"], 0),
+        planes=move(enc["planes"], 1),
+    )
+    shape = list(x.shape)
+    shape[split_axis] //= n
+    shape[concat_axis] *= n
+    return _decode_leaf(moved, tuple(shape), x.dtype, block, backend)
+
+
 def wire_bytes_per_value(num_planes: int, block: int = DEFAULT_BLOCK) -> float:
     """Bytes/gradient-value moved over the pod axis (vs 4.0 uncompressed)."""
     return PlanesCodec(num_planes).wire_bytes_per_value(block)

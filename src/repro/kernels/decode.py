@@ -1,0 +1,136 @@
+"""Pallas kernel: fused SZx stream decode (unpack + compose in ONE kernel).
+
+The inverse of ``encode.py`` at the stream level: one ``pallas_call`` takes
+the raw container body bytes (header stripped, zero-padded to a static
+capacity) plus the per-block metadata vectors parsed on device by
+``ref.parse_body_ref`` and produces the reconstructed values directly --
+2-bit L-code expansion, exclusive-cumsum ``nbytes - L`` mid-stream offsets,
+gathered byte compose, XOR-lead/shift reconstruction, and the mu add, with
+no intermediate planes array ever materialized.
+
+The mid-offset cumsum couples every block to its predecessors, so the kernel
+runs gridless over the whole chunk (the chunk IS the tile; chunked codecs
+bound it to a few MB).  Width-generic via :class:`repro.kernels.specs
+.DtypeSpec`; the index propagation is the same interleaved pad-shift-max
+scan as ``unpack.py``, so all three backends stay bit-identical
+(``ref.decode_body_ref`` is the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+from repro.kernels.unpack import _compose
+
+
+def _make_kernel(spec: DtypeSpec, nb: int, bs: int, rb: int, rebase: bool):
+    W = spec.itemsize
+    nbm = (nb + 7) // 8
+    req_off = nbm + W * nb
+    udt = spec.uint_dtype
+
+    def _kernel(body_ref, nnc_ref, lo_ref, mu_ref, shift_ref, nbytes_ref,
+                rank_ref, out_ref, mid_total_ref):
+        body = body_ref[...]
+        nnc = nnc_ref[0]
+        lo = lo_ref[0]
+        rank = rank_ref[...]
+        nbytes = nbytes_ref[...]
+        cap = body.shape[0]
+        l_off = req_off + nnc
+        mid_off = l_off + (nnc * bs + 3) // 4
+        # 2-bit L codes (little-endian 4/byte, compacted over non-const blocks)
+        pos = rank[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
+        live_blk = (rank >= 0)[:, None]
+        lidx = jnp.clip(jnp.where(live_blk, l_off + pos // 4, 0), 0, cap - 1)
+        code = (body[lidx].astype(jnp.int32) >> ((pos % 4) * 2)) & 3
+        L = jnp.where(live_blk, code, 0)
+        # exclusive cumsum of stored-byte counts -> absolute mid offsets
+        counts = jnp.maximum(nbytes[:, None] - L, 0)
+        ends = jnp.cumsum(counts.reshape(-1)).reshape(nb, bs)
+        start = ends - counts
+        mid_total_ref[0] = ends.reshape(-1)[-1]
+        base = mid_off - (
+            jax.lax.dynamic_slice_in_dim(start, lo, 1, axis=0)[0, 0]
+            if rebase else 0
+        )
+
+        def sl(a):
+            return jax.lax.dynamic_slice_in_dim(a, lo, rb, axis=0)
+
+        L, start = sl(L), sl(start)
+        nbytes_r = sl(nbytes)
+        idxs = jnp.broadcast_to(
+            jnp.arange(bs, dtype=jnp.int32)[None, :], (rb, bs)
+        )
+        ws = jnp.zeros((rb, bs), udt)
+        for j in range(W):
+            sh = jnp.asarray(8 * (W - 1 - j), udt)
+            stored = (L <= j) & (j < nbytes_r[:, None])
+            gidx = jnp.clip(
+                jnp.where(stored, base + start + (j - L), 0), 0, cap - 1
+            )
+            byte = jnp.where(stored, body[gidx].astype(jnp.int32), 0)
+            if j >= spec.lead_cap:
+                # every live value stores this plane itself (L <= lead_cap)
+                ws = ws | (byte.astype(udt) << sh)
+                continue
+            # fused key: idx dominates, so the max carries the byte of the
+            # nearest preceding stored position (interleaved log-step scan,
+            # same shape as the unpack.py kernel)
+            key = jnp.where(stored, idxs * 256 + byte, -1)
+            step = 1
+            while step < bs:
+                shifted = jnp.pad(
+                    key, ((0, 0), (step, 0)), constant_values=-1
+                )[:, :bs]
+                key = jnp.maximum(key, shifted)
+                step *= 2
+            b = jnp.where(
+                key >= 0, (key & 0xFF).astype(udt), jnp.asarray(0, udt)
+            )
+            ws = ws | (b << sh)
+        out_ref[...] = _compose(
+            ws, sl(mu_ref[...]), sl(shift_ref[...]), nbytes_r, spec
+        )
+
+    return _kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "bs", "rb", "rebase", "interpret")
+)
+def decode_body(body, nnc, lo, mu, shift, nbytes, rank, *,
+                spec: DtypeSpec = specs.F32, bs: int, rb: int,
+                rebase: bool = False, interpret: bool | None = None):
+    """Fused stream-body decode -> (vals (rb, bs), mid_total int32).
+
+    Bit-identical to ``ref.decode_body_ref`` (the oracle); one kernel launch
+    over the whole chunk.  Pass the full (nb,) metadata vectors from
+    ``ref.parse_body_ref``; the kernel slices the decoded range internally.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb = rank.shape[0]
+    out, mid_total = pl.pallas_call(
+        _make_kernel(spec, nb, bs, rb, rebase),
+        out_shape=(
+            jax.ShapeDtypeStruct((rb, bs), spec.np_dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(
+        body,
+        jnp.reshape(jnp.asarray(nnc, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(lo, jnp.int32), (1,)),
+        mu,
+        shift,
+        nbytes,
+        rank,
+    )
+    return out, mid_total[0]

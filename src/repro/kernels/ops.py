@@ -219,7 +219,67 @@ def _encode_np(xb, e, spec: DtypeSpec, p_e: int | None = None):
     return mu, const, reqlen, shift, nbytes, planes, L
 
 
-def _unpack_np(planes, mu, shift, nbytes, L, spec: DtypeSpec):
+def _finish_unpack_np(ws, mu, shift, nbytes, spec: DtypeSpec, out=None):
+    """Shared tail of the numpy unpack mirrors: Solution-C shift back,
+    bitcast, mu add, constant-block fill.  ``ws`` is consumed (shifted in
+    place).  With ``out`` the reconstruction lands in the caller's buffer --
+    for f32/f64 the mu add itself writes there, dropping the frame-sized
+    temporary entirely."""
+    udt = spec.uint_dtype
+    np.left_shift(ws, shift[:, None].astype(udt), out=ws)
+    v = ws.view(spec.np_dtype)
+    cdt = spec.compute_np_dtype
+    mu_w = np.asarray(mu).astype(cdt, copy=False)
+    if out is not None and np.dtype(cdt) == np.dtype(spec.np_dtype):
+        x = np.add(v, mu_w[:, None], out=out)
+    else:
+        x = (v.astype(cdt, copy=False) + mu_w[:, None]).astype(
+            spec.np_dtype, copy=False
+        )
+    constm = nbytes == 0
+    if out is None:
+        return np.where(constm[:, None], np.asarray(mu)[:, None], x)
+    if x is not out:
+        np.copyto(out, x)
+    if constm.any():
+        out[constm] = np.asarray(mu)[constm, None]
+    return out
+
+
+def _unpack16_np(planes, mu, shift, nbytes, L, spec: DtypeSpec, out=None):
+    """2-plane (float16/bfloat16) specialization of ``_unpack_np``.
+
+    The generic loop pays per-plane index compression (``flatnonzero`` +
+    fancy gathers) and strided byte-view scatters that dominate 16-bit decode
+    time.  With exactly two planes the word composes arithmetically:
+    propagate each plane only when some value actually elides it, then
+    ``msb << 8 | lsb`` -- full-width masked ops, no index arrays, one
+    contiguous word write.  Bit-identical to the generic path."""
+    nb, _, bs = planes.shape
+    msb = planes[:, 0, :]
+    lsb = planes[:, 1, :]
+    live0 = (nbytes > 0)[:, None]
+    live1 = (nbytes > 1)[:, None]
+    idxs256 = (np.arange(bs, dtype=np.int32) << 8)[None, :]
+    if (L > 0).any():
+        key = np.where((L <= 0) & live0, idxs256 | msb, np.int32(-1))
+        np.maximum.accumulate(key, axis=1, out=key)
+        b0 = (key & 0xFF).astype(np.uint16)
+        b0[key < 0] = 0
+    else:
+        b0 = np.where(live0, msb, 0).astype(np.uint16)
+    if (L > 1).any():
+        key = np.where((L <= 1) & live1, idxs256 | lsb, np.int32(-1))
+        np.maximum.accumulate(key, axis=1, out=key)
+        b1 = (key & 0xFF).astype(np.uint16)
+        b1[key < 0] = 0
+    else:
+        b1 = np.where(live1, lsb, 0).astype(np.uint16)
+    ws = (b0 << np.uint16(8)) | b1
+    return _finish_unpack_np(ws, mu, shift, nbytes, spec, out)
+
+
+def _unpack_np(planes, mu, shift, nbytes, L, spec: DtypeSpec, out=None):
     """Bit-identical to ``ref.unpack_ref`` but byte-oriented: planes are written
     straight into a little-endian word byte view, index propagation runs only
     on planes that actually need it (some value has ``L > j``) and only over
@@ -227,6 +287,8 @@ def _unpack_np(planes, mu, shift, nbytes, L, spec: DtypeSpec):
     is the fused-key trick of the Pallas kernel: one cumulative max over
     ``idx*256 + byte`` (idx dominates, so the surviving key carries the byte
     of the nearest preceding stored position) -- no gather pass."""
+    if spec.itemsize == 2:
+        return _unpack16_np(planes, mu, shift, nbytes, L, spec, out)
     udt = spec.uint_dtype
     itemsize = spec.itemsize
     nb, _, bs = planes.shape
@@ -248,21 +310,17 @@ def _unpack_np(planes, mu, shift, nbytes, L, spec: DtypeSpec):
         byte = (key & 0xFF).astype(np.uint8)
         byte[key < 0] = 0
         wsb[act, :, itemsize - 1 - j] = byte
-    w = ws << shift[:, None].astype(udt)
-    v = w.view(spec.np_dtype)
-    cdt = spec.compute_np_dtype
-    mu_w = np.asarray(mu).astype(cdt, copy=False)
-    x = (v.astype(cdt, copy=False) + mu_w[:, None]).astype(spec.np_dtype, copy=False)
-    return np.where((nbytes == 0)[:, None], np.asarray(mu)[:, None], x)
+    return _finish_unpack_np(ws, mu, shift, nbytes, spec, out)
 
 
-def _unpack_dense_np(planes, mu, shift, nbytes, spec: DtypeSpec):
+def _unpack_dense_np(planes, mu, shift, nbytes, spec: DtypeSpec, out=None):
     """All-``L==0`` fast path.  ``_unpack_np`` already degenerates to verbatim
     byte composition on every plane when no value has ``L > j``, so delegate
     with a broadcastable all-zero L instead of duplicating the loop (the real
     dense-path win is the jitted oracle, which drops the propagation scan)."""
     return _unpack_np(
-        planes, mu, shift, nbytes, np.zeros((planes.shape[0], 1), np.int32), spec
+        planes, mu, shift, nbytes, np.zeros((planes.shape[0], 1), np.int32),
+        spec, out,
     )
 
 
@@ -376,6 +434,51 @@ def encode_staged(xb, e, p_e, *, spec: DtypeSpec = specs.F32, backend: str = "ja
     return ref.encode_ref(xb, e, spec, p_e)
 
 
+def decode_staged(body, nnc, lo=0, *, spec: DtypeSpec = specs.F32, nb: int,
+                  bs: int, rb: int | None = None, rebase: bool = False,
+                  backend: str = "jax"):
+    """Trace-composable fused stream decode: dispatch WITHOUT host syncs.
+
+    The decode mirror of :func:`encode_staged`, for callers that stage the
+    decode into a larger jitted program (the device-resident container parse
+    in ``repro.core.codec.device``).  ``body`` is the raw stream body (40-byte
+    header stripped, zero-padded to a static capacity); ``nnc`` the header's
+    n_nonconst field and ``lo`` the first decoded block, both traced; ``nb``/
+    ``bs``/``rb`` static.  Parses the metadata sections on device
+    (``ref.parse_body_ref``) then runs the fused unpack+compose -- the
+    single-``pallas_call`` kernel on the 'kernel' route, the jnp oracle on
+    'jax'.  Returns (vals (rb, bs), measured (3,) int32): the bitmap's
+    nonconst count, the max per-block nbytes, and the L-implied mid-stream
+    total -- checked against the header fields on the host after its single
+    readback (the device-side half of ``container.parse_stream`` validation).
+    """
+    if backend not in ("jax", "kernel"):
+        raise ValueError(
+            f"decode_staged needs a resolved device backend, got {backend!r}"
+        )
+    if rb is None:
+        rb = nb
+    _const, mu, shift, nbytes, rank, nnc_seen = ref.parse_body_ref(
+        body, nnc, spec, nb
+    )
+    if backend == "kernel" and _kernel_route(spec, "decode"):
+        from repro.kernels import decode as k
+
+        vals, mid_total = k.decode_body(
+            body, nnc, lo, mu, shift, nbytes, rank,
+            spec=spec, bs=bs, rb=rb, rebase=rebase,
+        )
+    else:
+        vals, mid_total = ref.decode_body_ref(
+            body, nnc, lo, mu, shift, nbytes, rank, spec,
+            bs=bs, rb=rb, rebase=rebase,
+        )
+    measured = jnp.stack(
+        [nnc_seen, jnp.max(nbytes).astype(jnp.int32), mid_total]
+    )
+    return vals, measured
+
+
 def encode(xb, e, *, spec: DtypeSpec = specs.F32, backend: str = "auto"):
     """Fused block_stats + pack: (mu, const, reqlen, shift, nbytes, planes, L).
 
@@ -401,7 +504,10 @@ def encode(xb, e, *, spec: DtypeSpec = specs.F32, backend: str = "auto"):
 
 
 def unpack(planes, mu, shift, nbytes, L, *, spec: DtypeSpec = specs.F32,
-           backend: str = "auto"):
+           backend: str = "auto", out=None):
+    """Inverse of :func:`pack`.  With ``out`` (a (nb, bs) array in the spec's
+    dtype) the reconstruction is written into the caller's buffer and ``out``
+    is returned -- allocation-free on the numpy route, one copy elsewhere."""
     backend = _resolve(backend)
     if backend == "numpy":
         return _unpack_np(
@@ -411,6 +517,7 @@ def unpack(planes, mu, shift, nbytes, L, *, spec: DtypeSpec = specs.F32,
             np.asarray(nbytes),
             np.asarray(L),
             spec,
+            out,
         )
     with _x64_scope(spec):
         args = (
@@ -423,12 +530,17 @@ def unpack(planes, mu, shift, nbytes, L, *, spec: DtypeSpec = specs.F32,
         if backend == "kernel" and _kernel_route(spec, "unpack"):
             from repro.kernels import unpack as k
 
-            return k.unpack(*args, spec=spec)
-        return _unpack_jax(*args, spec)
+            res = k.unpack(*args, spec=spec)
+        else:
+            res = _unpack_jax(*args, spec)
+    if out is not None:
+        np.copyto(out, np.asarray(res))
+        return out
+    return res
 
 
 def unpack_dense(planes, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
-                 backend: str = "auto"):
+                 backend: str = "auto", out=None):
     """Batched fast path for frames whose L codes are all zero: every stored
     byte sits at its own value, so decode skips the per-byte index-propagation
     scan entirely.  Bit-identical to ``unpack(..., L=0)``.
@@ -437,7 +549,7 @@ def unpack_dense(planes, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
     if backend == "numpy":
         return _unpack_dense_np(
             np.asarray(planes), np.asarray(mu), np.asarray(shift),
-            np.asarray(nbytes), spec,
+            np.asarray(nbytes), spec, out,
         )
     with _x64_scope(spec):
         args = (
@@ -449,8 +561,13 @@ def unpack_dense(planes, mu, shift, nbytes, *, spec: DtypeSpec = specs.F32,
         if backend == "kernel" and _kernel_route(spec, "unpack_dense"):
             from repro.kernels import unpack as k
 
-            return k.unpack_dense(*args, spec=spec)
-        return _unpack_dense_jax(*args, spec)
+            res = k.unpack_dense(*args, spec=spec)
+        else:
+            res = _unpack_dense_jax(*args, spec)
+    if out is not None:
+        np.copyto(out, np.asarray(res))
+        return out
+    return res
 
 
 def unpack_range(planes, mu, shift, nbytes, L, lo: int, hi: int, *,

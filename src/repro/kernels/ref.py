@@ -226,6 +226,112 @@ def unpack_dense_ref(planes, mu, shift, nbytes, spec: DtypeSpec = specs.F32):
 
 
 # ---------------------------------------------------------------------------
+# Device-resident stream decode: the inverse of core.codec.device assembly.
+# ---------------------------------------------------------------------------
+
+def parse_body_ref(body, nnc, spec: DtypeSpec, nb: int):
+    """On-device parse of the v2 metadata sections from raw stream bytes.
+
+    ``body`` is the stream minus its 40-byte header -- ONE uint8 vector,
+    zero-padded to a static capacity so chunk geometry (not payload size)
+    decides the compiled program.  ``nnc`` is the header's n_nonconst field
+    (traced scalar).  Section offsets are derived here exactly as the host
+    serializer lays them out: ``[const bitmap][mu words][compacted reqlen]``.
+
+    Returns (const, mu, shift, nbytes, rank, nnc_seen): per-block metadata
+    (rank = compacted index of each non-const block, -1 for const) plus the
+    bitmap's own nonconst count -- compared against the header's ``nnc`` on
+    the host after the single readback (corrupt-stream validation).
+    """
+    W = spec.itemsize
+    nbm = (nb + 7) // 8
+    req_off = nbm + W * nb
+    # const bitmap, MSB-first (numpy packbits order)
+    bits = (body[:nbm][:, None] >> jnp.arange(7, -1, -1, dtype=jnp.uint8)) & 1
+    const = bits.reshape(-1)[:nb].astype(bool)
+    # mu words: little-endian bytes, the exact inverse of the encode-side
+    # bitcast_convert_type(mu, uint8) scatter
+    mu = jax.lax.bitcast_convert_type(
+        body[nbm:req_off].reshape(nb, W), spec.np_dtype
+    )
+    nonconst = ~const
+    incl = jnp.cumsum(nonconst.astype(jnp.int32))
+    rank = jnp.where(nonconst, incl - 1, -1)
+    ridx = jnp.clip(req_off + rank, 0, body.shape[0] - 1)
+    reqlen = jnp.where(nonconst, body[ridx].astype(jnp.int32), 0)
+    # layout derivation (Formula 5, Solution C) -- same as derive_layout
+    shift = jnp.where(const, 0, (8 - reqlen % 8) % 8)
+    nbytes = (reqlen + shift) // 8
+    return const, mu, shift, nbytes, rank, incl[-1]
+
+
+def decode_body_ref(body, nnc, lo, mu, shift, nbytes, rank, spec: DtypeSpec,
+                    *, bs: int, rb: int, rebase: bool = False):
+    """Fused unpack+compose straight from raw body bytes (decode oracle).
+
+    Expands the compacted 2-bit L codes, derives each value's mid-stream
+    offset as the exclusive cumsum of ``nbytes - L``, gathers the stored
+    bytes directly out of ``body`` (no intermediate planes array), runs the
+    XOR-lead index propagation as a fused-key cummax, and composes via
+    :func:`_compose_word`.  ``lo`` is the first decoded block (traced);
+    ``rb`` (static) blocks are produced.  ``rebase=True`` reads the mid
+    section as starting at block ``lo``'s first mid byte -- the store ROI
+    buffer layout (metadata prefix + the requested blocks' mid range).
+
+    Returns (vals (rb, bs) in the spec's dtype, mid_total int32): the
+    full-stream mid byte count implied by the L codes, for host-side
+    validation against the header's nmid after the single readback.
+    """
+    W = spec.itemsize
+    nb = rank.shape[0]
+    nbm = (nb + 7) // 8
+    req_off = nbm + W * nb
+    l_off = req_off + nnc
+    nl = (nnc * bs + 3) // 4
+    mid_off = l_off + nl
+    cap = body.shape[0]
+    # 2-bit L codes: little-endian 4 per byte, compacted over non-const blocks
+    pos = rank[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
+    live_blk = (rank >= 0)[:, None]
+    lidx = jnp.clip(jnp.where(live_blk, l_off + pos // 4, 0), 0, cap - 1)
+    code = (body[lidx].astype(jnp.int32) >> ((pos % 4) * 2)) & 3
+    L = jnp.where(live_blk, code, 0)
+    # mid-stream offsets: exclusive cumsum of per-value stored-byte counts
+    counts = jnp.maximum(nbytes[:, None] - L, 0)
+    ends = jnp.cumsum(counts.reshape(-1)).reshape(nb, bs)
+    start = ends - counts
+    mid_total = ends.reshape(-1)[-1]
+    base = mid_off - (
+        jax.lax.dynamic_slice_in_dim(start, lo, 1, axis=0)[0, 0] if rebase else 0
+    )
+
+    def sl(a):
+        return jax.lax.dynamic_slice_in_dim(a, lo, rb, axis=0)
+
+    L, start = sl(L), sl(start)
+    nbytes_r, shift_r, mu_r = sl(nbytes), sl(shift), sl(mu)
+    udt = spec.uint_dtype
+    idxs = jnp.broadcast_to(jnp.arange(bs, dtype=jnp.int32)[None, :], (rb, bs))
+    ws = jnp.zeros((rb, bs), udt)
+    for j in range(W):
+        sh = jnp.asarray(8 * (W - 1 - j), udt)
+        stored = (L <= j) & (j < nbytes_r[:, None])
+        gidx = jnp.clip(jnp.where(stored, base + start + (j - L), 0), 0, cap - 1)
+        byte = jnp.where(stored, body[gidx].astype(jnp.int32), 0)
+        if j >= spec.lead_cap:
+            # L <= lead_cap <= j: every live value stores this plane itself
+            ws = ws | (byte.astype(udt) << sh)
+            continue
+        # fused-key index propagation (idx dominates; the surviving key
+        # carries the byte of the nearest preceding stored position)
+        key = jnp.where(stored, idxs * 256 + byte, -1)
+        key = jax.lax.cummax(key, axis=1)
+        b = jnp.where(key >= 0, (key & 0xFF).astype(udt), jnp.asarray(0, udt))
+        ws = ws | (b << sh)
+    return _compose_word(ws, mu_r, shift_r, nbytes_r, spec), mid_total
+
+
+# ---------------------------------------------------------------------------
 # Fixed-plane ("szx-planes") in-graph mode -- see DESIGN.md section 2.
 # ---------------------------------------------------------------------------
 

@@ -25,12 +25,24 @@ def pipeline_apply(
     stage_fn: Callable,        # (stage_params, x) -> y   (per-stage compute)
     mesh,
     stage_axis: str = "stage",
+    *,
+    compress_activations: bool = False,
+    num_planes: int = 1,
+    compress_block: int = 64,
+    compress_backend: str = "jax",
 ):
     """Returns fn(stacked_stage_params, microbatches) -> outputs.
 
     stacked_stage_params: pytree with leading [n_stages] dim (stage-sharded).
     microbatches: (n_micro, mb, ...) input microbatches.
     Output: (n_micro, mb, ...) as produced by the LAST stage.
+
+    ``compress_activations=True`` routes the per-tick activation shift
+    through ``grad_compress.compressed_ppermute``: each stage szx-planes
+    encodes its output, permutes the encoding arrays (~4x fewer wire bytes
+    at P=1), and the next stage decodes -- the paper's
+    faster-than-the-link compression applied to pipeline traffic.  Lossy
+    (bounded by the planes budget); leave off for exact schedules.
     """
     n_stages = mesh.shape[stage_axis]
 
@@ -62,9 +74,16 @@ def pipeline_apply(
                 outs,
             )
             # shift activations to the next stage
-            nxt = jax.lax.ppermute(
-                y, stage_axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
-            )
+            ring = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            if compress_activations:
+                from repro.core import grad_compress
+
+                nxt = grad_compress.compressed_ppermute(
+                    y, stage_axis, ring, num_planes=num_planes,
+                    block=compress_block, backend=compress_backend,
+                )
+            else:
+                nxt = jax.lax.ppermute(y, stage_axis, ring)
             return (nxt[None], outs), None
 
         buf0 = jnp.zeros_like(xs[:1])

@@ -63,8 +63,19 @@ def _kv_encode(x, num_planes: int):
 
 
 def _kv_decode(mu, sexp, planes, dtype):
+    """Inverse of :func:`_kv_encode`, through the same ``DeviceEncoding``
+    record -- the decode mirror of the shared device-resident path, so the
+    cache dequant and the stream/gradient decoders exercise ONE codec
+    entry point (``PlanesCodec.decode_encoding``)."""
+    from repro.core.codec.device import DeviceEncoding
+
     codec = PlanesCodec(planes.shape[0])
-    return codec.decode_blocks(mu, jnp.asarray(sexp, jnp.int32), planes).astype(dtype)
+    enc = DeviceEncoding.make(
+        "szx-planes",
+        {"mu": mu, "sexp": sexp, "planes": planes},
+        num_planes=planes.shape[0],
+    )
+    return codec.decode_encoding(enc).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

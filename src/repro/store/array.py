@@ -101,8 +101,16 @@ class ArrayStore:
         return idx
 
     @staticmethod
-    def open(path_or_file, *, backend: str = "numpy") -> "CompressedArray":
-        """Open a store stream lazily: reads ONLY the index footer."""
+    def open(
+        path_or_file, *, backend: str = "numpy", device: bool = False
+    ) -> "CompressedArray":
+        """Open a store stream lazily: reads ONLY the index footer.
+
+        ``device=True`` opts ROI reads into the device-resident range decode
+        (one ``jax.device_put`` of prefix+mid bytes per touched chunk, fused
+        on-device unpack+compose -- see ``codec.device.decode_range``);
+        requires a device backend ('jax'/'kernel').
+        """
         f, own = _as_file(path_or_file, "rb")
         try:
             idx = container.read_index_footer(f)
@@ -117,7 +125,9 @@ class ArrayStore:
                 "not an array-store stream (no container-v3 index footer)"
             )
         try:
-            return CompressedArray(f, idx, backend=backend, own_file=own)
+            return CompressedArray(
+                f, idx, backend=backend, own_file=own, device=device
+            )
         except Exception:
             if own:
                 f.close()
@@ -143,8 +153,16 @@ class CompressedArray:
     """
 
     def __init__(self, fileobj, idx: dict, *, backend: str = "numpy",
-                 own_file: bool = False):
+                 own_file: bool = False, device: bool = False):
         grid, spec, block_size, e = format_mod.validate_store_index(idx)
+        if device:
+            from repro.kernels import ops
+
+            if ops._resolve(backend) == "numpy":
+                raise ValueError(
+                    "device=True needs a device backend ('jax'/'kernel'), "
+                    f"got {backend!r}"
+                )
         self._f = fileobj
         self._grid = grid
         self._spec = spec
@@ -153,6 +171,7 @@ class CompressedArray:
         self._frames = idx["frames"]
         self._backend = backend
         self._own = own_file
+        self._device = device
         self._closed = False
         self.attrs = dict(idx.get("attrs") or {})
 
@@ -246,7 +265,9 @@ class CompressedArray:
 
         Reads (1) the frame header + stream metadata prefix and (2) exactly
         the mid-byte range of the requested blocks; returns the flat decoded
-        values with the final block's padding clipped.
+        values with the final block's padding clipped.  With ``device=True``
+        the prefix+mid bytes go through the device-resident range decode
+        (the host section parse stays, but only for disk-offset planning).
         """
         off, length, elements = (int(v) for v in self._frames[cid])
         f = self._f
@@ -271,6 +292,15 @@ class CompressedArray:
         if mhi > mlo:
             f.seek(off + container.FRAME_HEADER.size + prefix_len + mlo)
             mid = container._read_exact(f, mhi - mlo)
+        if self._device:
+            from repro.core.codec import device as device_mod
+
+            flat = device_mod.decode_range(
+                sheader + rest, mid, lo_b, hi_b, backend=self._backend
+            )
+            if flat is not None:
+                bs = sec.plan.block_size
+                return flat[: min(hi_b * bs, elements) - lo_b * bs]
         enc = container.extract_block_range(
             sec, np.frombuffer(mid, np.uint8), lo_b, hi_b
         )

@@ -1,0 +1,232 @@
+"""Device-resident decode (repro.core.codec.device decode_stream/decode_range).
+
+Pins the decode tentpole contracts, mirroring test_device_encoding.py: the
+device decode performs exactly ONE host->device transfer per chunk (spy over
+jax.device_put), never touches the host section parser or the host unpack
+mirror (zero numpy intermediates), and is bit-identical to the host decode
+for every dtype and device backend (the Pallas kernel runs in interpret mode
+on CPU).  Also covers the out= in-place decode paths and the store ROI
+device opt-in.
+"""
+import io
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.codec import SZxCodec, container, device, plan, transform
+from repro.store.array import ArrayStore
+
+try:
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    BF16 = None
+
+_DTYPES = [np.float32, np.float64, np.float16] + ([BF16] if BF16 is not None else [])
+
+
+def _walk(n, seed=0, dtype=np.float32, scale=0.01):
+    rng = np.random.default_rng(seed)
+    return (np.cumsum(rng.standard_normal(n)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# transfer spy: ONE device_put per chunk, zero host numpy intermediates
+# ---------------------------------------------------------------------------
+
+def test_decode_device_is_one_device_put(monkeypatch):
+    x = _walk(100_000, seed=1)
+    buf = SZxCodec(backend="numpy").compress(x, 1e-3)
+    ref = SZxCodec(backend="numpy").decompress(buf)
+    SZxCodec(backend="jax").decompress(buf)      # warm the jit cache first
+    calls = []
+    real_put = jax.device_put
+    monkeypatch.setattr(
+        jax, "device_put", lambda v, *a, **k: calls.append(v) or real_put(v, *a, **k)
+    )
+    got = SZxCodec(backend="jax").decompress(buf)
+    assert len(calls) == 1, "decode path must upload exactly once per chunk"
+    assert calls[0].dtype == np.uint8           # ... and it is the raw body bytes
+    np.testing.assert_array_equal(got.view(np.uint8), ref.view(np.uint8))
+
+
+def test_decode_device_no_host_parse_or_unpack(monkeypatch):
+    """The device route must never materialize host numpy section arrays:
+    the host container parser and the host unpack mirror are off-limits."""
+    from repro.kernels import ops
+
+    x = _walk(50_000, seed=2)
+    buf = SZxCodec(backend="numpy").compress(x, 1e-3)
+    ref = SZxCodec(backend="numpy").decompress(buf)
+    SZxCodec(backend="jax").decompress(buf)      # warm the jit cache first
+
+    def _banned(name):
+        def fn(*a, **k):
+            raise AssertionError(f"device decode must not call {name}")
+        return fn
+
+    monkeypatch.setattr(container, "parse_stream", _banned("container.parse_stream"))
+    monkeypatch.setattr(
+        container, "parse_stream_sections", _banned("container.parse_stream_sections")
+    )
+    monkeypatch.setattr(ops, "_unpack_np", _banned("ops._unpack_np"))
+    monkeypatch.setattr(transform, "decode_blocks", _banned("transform.decode_blocks"))
+    got = SZxCodec(backend="jax").decompress(buf)
+    np.testing.assert_array_equal(got.view(np.uint8), ref.view(np.uint8))
+
+
+def test_chunked_decode_is_one_put_per_frame(monkeypatch):
+    x = _walk(300_000, seed=3)
+    host = SZxCodec(backend="numpy")
+    frames = b"".join(host.compress_chunked(x, 1e-3, chunk_bytes=1 << 19))
+    dev = SZxCodec(backend="jax")
+    dev.decompress_chunked(frames, n=x.size)     # warm the jit cache first
+    per = plan.chunk_elements(128, 1 << 19, 4)
+    nchunks = -(-x.size // per)
+    calls = []
+    real_put = jax.device_put
+    monkeypatch.setattr(
+        jax, "device_put", lambda v, *a, **k: calls.append(v) or real_put(v, *a, **k)
+    )
+    got = dev.decompress_chunked(frames, n=x.size)
+    assert len(calls) == nchunks, "one device_put per frame, no more"
+    np.testing.assert_array_equal(
+        got.view(np.uint8), host.decompress_chunked(frames).view(np.uint8)
+    )
+
+
+# ---------------------------------------------------------------------------
+# bit identity: device decode == host decode, every dtype x backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", _DTYPES, ids=lambda d: np.dtype(d).name)
+@pytest.mark.parametrize("backend", ["jax", "kernel"])
+def test_device_decode_bit_identical_to_host(dtype, backend):
+    for n, bs, e in ((9999, 128, 1e-3), (257, 32, 1e-2), (1000, 128, 1.0)):
+        x = _walk(n, seed=n, dtype=dtype)
+        buf = SZxCodec(block_size=bs, backend="numpy").compress(x, e)
+        ref = SZxCodec(block_size=bs, backend="numpy").decompress(buf)
+        got = SZxCodec(block_size=bs, backend=backend).decompress(buf)
+        assert got.dtype == ref.dtype
+        np.testing.assert_array_equal(
+            got.view(np.uint8), ref.view(np.uint8),
+            err_msg=f"{np.dtype(dtype).name}/{backend} n={n} bs={bs} e={e}",
+        )
+    # constant + verbatim extremes
+    c = np.full(1500, 2.5).astype(dtype)
+    bufc = SZxCodec(backend="numpy").compress(c, 1e-3)
+    np.testing.assert_array_equal(
+        SZxCodec(backend=backend).decompress(bufc).view(np.uint8),
+        SZxCodec(backend="numpy").decompress(bufc).view(np.uint8),
+    )
+    tiny = float(plan.finfo(np.dtype(dtype)).tiny)
+    v = _walk(2000, seed=4, dtype=dtype, scale=1.0)
+    bufv = SZxCodec(backend="numpy").compress(v, tiny)
+    np.testing.assert_array_equal(
+        SZxCodec(backend=backend).decompress(bufv).view(np.uint8),
+        SZxCodec(backend="numpy").decompress(bufv).view(np.uint8),
+    )
+
+
+@pytest.mark.parametrize("backend", ["jax", "kernel"])
+def test_device_range_decode_matches_host(backend):
+    x = _walk(9999, seed=7)
+    buf = SZxCodec(backend="numpy").compress(x, 1e-3)
+    host = SZxCodec(backend="numpy")
+    dev = SZxCodec(backend=backend)
+    for lo, hi in ((0, 1), (0, 3), (3, 11), (70, 79), (0, 79)):
+        a = host.decompress_range(buf, lo, hi)
+        b = dev.decompress_range(buf, lo, hi)
+        np.testing.assert_array_equal(
+            a.view(np.uint8), b.view(np.uint8), err_msg=f"[{lo}, {hi})"
+        )
+    with pytest.raises(ValueError):
+        dev.decompress_range(buf, 5, 200)       # host-path range error preserved
+
+
+# ---------------------------------------------------------------------------
+# corrupt streams: the device path raises the canonical container errors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_corrupt_streams_same_errors_on_device_path(backend):
+    x = _walk(5000, seed=9)
+    buf = bytearray(SZxCodec(backend="numpy").compress(x, 1e-3))
+    codec = SZxCodec(backend=backend)
+    with pytest.raises(ValueError, match="shorter than header"):
+        codec.decompress(bytes(buf[:10]))
+    bad = bytearray(buf); bad[0] = 0
+    with pytest.raises(ValueError, match="magic mismatch"):
+        codec.decompress(bytes(bad))
+    bad = bytearray(buf); bad[4] = 99
+    with pytest.raises(ValueError, match="version 99"):
+        codec.decompress(bytes(bad))
+    with pytest.raises(ValueError, match="truncated SZx stream"):
+        codec.decompress(bytes(buf[:-5]))
+    # mid-length mismatch: shrink the header's nmid field (Q at offset 32)
+    bad = bytearray(buf)
+    nmid = int.from_bytes(bad[32:40], "little")
+    bad[32:40] = (nmid + 1).to_bytes(8, "little")
+    with pytest.raises(ValueError, match="truncated|mid-stream"):
+        codec.decompress(bytes(bad))
+
+
+# ---------------------------------------------------------------------------
+# out= in-place decode (the chunked no-copy path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_decompress_out_param(backend):
+    for n in (9999, 1024):                      # padded and exact final block
+        x = _walk(n, seed=n)
+        buf = SZxCodec(backend="numpy").compress(x, 1e-3)
+        ref = SZxCodec(backend="numpy").decompress(buf)
+        out = np.empty(n, np.float32)
+        got = SZxCodec(backend=backend).decompress(buf, out=out)
+        assert got is out
+        np.testing.assert_array_equal(out.view(np.uint8), ref.view(np.uint8))
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_decompress_chunked_out_matches(backend, workers):
+    x = _walk(200_000, seed=11)
+    frames = b"".join(
+        SZxCodec(backend="numpy").compress_chunked(x, 1e-3, chunk_bytes=1 << 18)
+    )
+    codec = SZxCodec(backend=backend, workers=workers)
+    pre = codec.decompress_chunked(frames, n=x.size)
+    buf = codec.decompress_chunked(frames)
+    np.testing.assert_array_equal(pre.view(np.uint8), buf.view(np.uint8))
+    with pytest.raises(ValueError, match="longer than expected"):
+        codec.decompress_chunked(frames, n=x.size - 1000)
+    with pytest.raises(ValueError, match="expected"):
+        codec.decompress_chunked(frames, n=x.size + 1000)
+
+
+# ---------------------------------------------------------------------------
+# store ROI reads: device= opt-in
+# ---------------------------------------------------------------------------
+
+def test_store_roi_device_reads_match_host():
+    arr = _walk(64 * 130, seed=13).reshape(64, 130)
+    bio = io.BytesIO()
+    ArrayStore.save(bio, arr, 1e-3, chunk_shape=(32, 70))
+    host = ArrayStore.open(io.BytesIO(bio.getvalue()), backend="numpy")
+    dev = ArrayStore.open(io.BytesIO(bio.getvalue()), backend="jax", device=True)
+    for roi in ((slice(5, 60), slice(3, 100)), (slice(0, 64), slice(0, 130)),
+                (7, slice(10, 20)), Ellipsis):
+        a, b = host[roi], dev[roi]
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+    with pytest.raises(ValueError, match="device backend"):
+        ArrayStore.open(io.BytesIO(bio.getvalue()), backend="numpy", device=True)
+
+
+def test_decode_stream_falls_back_on_numpy_backend():
+    x = _walk(1000, seed=17)
+    buf = SZxCodec(backend="numpy").compress(x, 1e-3)
+    assert device.decode_stream(buf, backend="numpy") is None
+    assert device.decode_range(buf, b"", 0, 1, backend="numpy") is None

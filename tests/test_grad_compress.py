@@ -77,3 +77,67 @@ def test_compressed_dp_training_matches():
         env={**__import__("os").environ, "PYTHONPATH": "src"},
     )
     assert "GRADCOMP-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+
+
+COLLECTIVES_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import grad_compress as gc
+
+mesh = jax.make_mesh((4,), ("x",))
+rng = np.random.default_rng(1)
+perm = [(i, (i + 1) % 4) for i in range(4)]
+
+def run(fn, x):
+    return np.asarray(shard_map(
+        fn, mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+        axis_names={"x"}, check_vma=False,
+    )(x))
+
+# compressed ppermute tracks the raw permute within the planes budget
+x = rng.normal(size=(4, 8, 64)).astype(np.float32)
+a = run(lambda xs: gc.compressed_ppermute(xs[0], "x", perm, num_planes=3)[None], x)
+b = run(lambda xs: jax.lax.ppermute(xs[0], "x", perm)[None], x)
+assert a.shape == b.shape and np.abs(a - b).max() < 0.05, np.abs(a - b).max()
+
+# compressed all_to_all matches the raw exchange's shape and values
+x2 = rng.normal(size=(4, 8, 12, 64)).astype(np.float32)
+a2 = run(lambda xs: gc.compressed_all_to_all(xs[0], "x", 0, 1, num_planes=3)[None], x2)
+b2 = run(lambda xs: jax.lax.all_to_all(xs[0], "x", 0, 1, tiled=True)[None], x2)
+assert a2.shape == b2.shape and np.abs(a2 - b2).max() < 0.05, np.abs(a2 - b2).max()
+
+# blocked-last-axis misuse is rejected
+import traceback
+try:
+    run(lambda xs: gc.compressed_all_to_all(xs[0], "x", 0, 2, num_planes=1)[None], x2)
+except ValueError as e:
+    assert "blocked last axis" in str(e)
+else:
+    raise AssertionError("expected ValueError for last-axis exchange")
+
+# gpipe compressed activation shift tracks the exact schedule
+from repro.pipeline_par import pipeline_apply
+smesh = jax.make_mesh((4,), ("stage",))
+ws = (rng.normal(size=(4, 64, 64)) * 0.1).astype(np.float32)
+xs = rng.normal(size=(8, 2, 64)).astype(np.float32)
+stage = lambda p, x: jnp.tanh(x @ p)
+raw = np.asarray(pipeline_apply(stage, smesh)(jnp.asarray(ws), jnp.asarray(xs)))
+comp = np.asarray(pipeline_apply(
+    stage, smesh, compress_activations=True, num_planes=3,
+)(jnp.asarray(ws), jnp.asarray(xs)))
+assert np.abs(raw - comp).max() < 0.05, np.abs(raw - comp).max()
+print("COLLECTIVES-OK")
+"""
+
+
+def test_compressed_collectives_track_raw():
+    r = subprocess.run(
+        [sys.executable, "-c", COLLECTIVES_CODE],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+    )
+    assert "COLLECTIVES-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

@@ -149,7 +149,7 @@ def fig6_shift_overhead() -> dict:
             tot_c = tot_b = comp_bytes = 0
             for _, x in scidata.fields(app):
                 p, xt = codec_plan.make_plan(
-                    x, rel, mode="rel", block_size=128, backend="numpy"
+                    x, codec_plan.Bound.rel(rel), block_size=128, backend="numpy"
                 )
                 e = p.error_bound
                 xb = codec_plan.to_blocks(xt, p)
@@ -332,7 +332,7 @@ _CHUNKED_CHILD = r"""
 import json, os, resource, sys, time
 import numpy as np
 import ml_dtypes
-from repro.core.codec import SZxCodec
+from repro.core.codec import Bound, SZxCodec
 
 mode, path = sys.argv[1], sys.argv[2]
 kind, phase = mode.rsplit("_", 1)
@@ -370,7 +370,7 @@ if kind == "tree_checkpoint":
     from repro.core.codec import TreeCodec
 
     tree_codec = TreeCodec(
-        codec=codec, error_bound=rel, mode="rel", chunk_bytes=8 << 20
+        codec=codec, bound=Bound.rel(rel), chunk_bytes=8 << 20
     )
 
 
@@ -509,6 +509,103 @@ print(json.dumps({"t": dt, "rss_mb": rss_mb, "stored": stored, "n": n,
 """
 
 
+def _store_service_load(tmpdir: str, n: int) -> dict:
+    """Load-generate against a live store service: cold vs warm-cache ROI
+    latency (p50/p99), hit rate and request throughput.
+
+    The latency probes use narrow-column ROIs (the read path still decodes
+    ~the whole chunk's flat span cold, but the warm path answers from the
+    decoded-chunk cache), so the warm/cold ratio isolates the cache win.
+    Asserts the warm p50 is >=5x below the cold p50 at byte-identical
+    responses; the throughput probes re-read whole chunks for a stable
+    decomp_mbs.
+    """
+    import threading
+    import urllib.request
+
+    from repro.api import ArrayStore, Bound
+    from repro.serve.store_service import make_server
+
+    cols = 4096
+    rows = max(n // cols, 64)
+    rng = np.random.default_rng(12)
+    base = np.cumsum(rng.standard_normal(rows)).astype(np.float32)
+    x = base[:, None] + rng.standard_normal((rows, cols)).astype(np.float32) * 0.01
+    path = os.path.join(tmpdir, "service.szs")
+    t0 = time.perf_counter()
+    idx = ArrayStore.save(path, x, Bound.rel(1e-3))
+    save_t = time.perf_counter() - t0
+    stored = sum(f[1] for f in idx["frames"])
+    chunk_rows = idx["chunk_shape"][0]
+    nchunks = len(idx["frames"])
+
+    srv = make_server(path, port=0)
+    thread = threading.Thread(target=srv.serve_forever, daemon=True)
+    thread.start()
+    host, port = srv.server_address
+    url = f"http://{host}:{port}/v1/stores/default/read?roi="
+
+    def fetch(roi: str) -> tuple[float, bytes]:
+        t = time.perf_counter()
+        with urllib.request.urlopen(url + roi, timeout=120) as r:
+            body = r.read()
+        return time.perf_counter() - t, body
+
+    def pct(xs: list[float], q: float) -> float:
+        xs = sorted(xs)
+        return xs[min(int(q * (len(xs) - 1) + 0.5), len(xs) - 1)]
+
+    try:
+        probes = [
+            f"{cid * chunk_rows}:{min((cid + 1) * chunk_rows, rows)},0:64"
+            for cid in range(min(nchunks, 16))
+        ]
+        cold, bodies = [], {}
+        for roi in probes:                      # first touch: decode path
+            dt, body = fetch(roi)
+            cold.append(dt)
+            bodies[roi] = body
+        warm = []
+        warm_t0 = time.perf_counter()
+        for _ in range(5):                      # repeats: cache path
+            for roi in probes:
+                dt, body = fetch(roi)
+                warm.append(dt)
+                assert body == bodies[roi], f"warm bytes diverged for {roi}"
+        warm_wall = time.perf_counter() - warm_t0
+        cold_p50, warm_p50 = pct(cold, 0.50), pct(warm, 0.50)
+        assert warm_p50 * 5 <= cold_p50, (
+            f"warm-cache p50 {warm_p50 * 1e3:.2f} ms not >=5x below cold "
+            f"{cold_p50 * 1e3:.2f} ms"
+        )
+        # throughput probes: whole-chunk re-reads from the warm cache
+        full = f"0:{min(chunk_rows, rows)},0:{cols}"
+        fetch(full)                             # prime
+        tput_bytes = 0
+        tput_t0 = time.perf_counter()
+        for _ in range(8):
+            _dt, body = fetch(full)
+            tput_bytes += len(body)
+        tput_wall = time.perf_counter() - tput_t0
+        cache = srv.service.cache.stats()
+        assert cache["hits"] > 0
+    finally:
+        srv.shutdown()
+        srv.server_close()
+    return dict(
+        comp_mbs=x.nbytes / 1e6 / save_t,       # store save (ingest) MB/s
+        decomp_mbs=tput_bytes / 1e6 / tput_wall,  # warm whole-chunk read MB/s
+        cr=x.nbytes / stored,
+        cold_p50_ms=cold_p50 * 1e3, cold_p99_ms=pct(cold, 0.99) * 1e3,
+        warm_p50_ms=warm_p50 * 1e3, warm_p99_ms=pct(warm, 0.99) * 1e3,
+        warm_speedup=cold_p50 / warm_p50,
+        hit_rate=cache["hit_rate"],
+        req_s=len(warm) / warm_wall,
+        dtype="float32",
+        workers=1,
+    )
+
+
 def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     """Monolithic vs chunked vs parallel-chunked codec: throughput + peak RSS.
 
@@ -529,7 +626,11 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
     'pipeline_compressed_a2a' dry-runs the gpipe activation shift on an
     8-device host mesh: comp_mbs/decomp_mbs are the compressed/raw schedule
     wire-throughputs and cr is the analytic compressed-vs-raw bytes-moved
-    ratio.  Results also land in
+    ratio.  'store_service_load' load-generates against a live HTTP store
+    service: comp_mbs is store-save (ingest) MB/s, decomp_mbs the warm
+    whole-chunk read MB/s, plus cold/warm ROI p50/p99 latency, cache hit
+    rate and req/s (asserts warm p50 >=5x below cold at byte-identical
+    responses).  Results also land in
     BENCH_codec.json at the repo root (override the path with
     SZX_BENCH_JSON, the f32-equivalent element count with SZX_BENCH_N) to
     anchor the codec perf trajectory; benchmarks/check_regression.py gates
@@ -603,6 +704,18 @@ def chunked_dump_load(tmpdir: str = "/tmp/repro_chunked") -> dict:
             f"load_RSS_MB={out[kind]['load_peak_rss_mb']:.0f};"
             f"CR={out[kind]['cr']:.2f}" + extra,
         )
+    row = out["store_service_load"] = _store_service_load(tmpdir, n)
+    _emit(
+        "beyond/chunked_dump_load/store_service_load",
+        row["warm_p50_ms"] * 1e3,
+        f"comp_MB/s={row['comp_mbs']:.0f};"
+        f"decomp_MB/s={row['decomp_mbs']:.0f};"
+        f"cold_p50_ms={row['cold_p50_ms']:.2f};"
+        f"warm_p50_ms={row['warm_p50_ms']:.2f};"
+        f"hit_rate={row['hit_rate']:.2f};"
+        f"req_s={row['req_s']:.0f};"
+        f"CR={row['cr']:.2f}",
+    )
     bench_json = os.environ.get(
         "SZX_BENCH_JSON", os.path.join(REPO_ROOT, "BENCH_codec.json")
     )

@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.api import Bound
 from repro.checkpoint import CheckpointManager
 from repro.models import transformer as T
 
@@ -29,7 +30,7 @@ def main():
     for compress, tag in ((False, "raw"), (True, "szx(rel 1e-5)")):
         root = f"/tmp/repro_ckpt_{int(compress)}"
         shutil.rmtree(root, ignore_errors=True)
-        m = CheckpointManager(root, compress=compress, error_bound=1e-5)
+        m = CheckpointManager(root, compress=compress, bound=Bound.rel(1e-5))
         t0 = time.time()
         m.save(0, params)
         dt = time.time() - t0

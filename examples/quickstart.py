@@ -2,20 +2,20 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the classic float32 byte-stream API (repro.core.szx, unchanged), the
-layered codec front-end (repro.core.codec.SZxCodec): native multi-dtype
-streams and bounded-memory chunked compression, and the block-addressable
-array store (repro.store): lazy ROI reads + compressed-domain queries.
+Shows the public repro.api surface: the one-shot functional API with the
+unified Bound spec, the layered codec front-end (repro.api.SZxCodec):
+native multi-dtype streams and bounded-memory chunked compression, and the
+block-addressable array store (repro.api.ArrayStore): lazy ROI reads +
+compressed-domain queries.
 """
 import io
 import time
 
 import numpy as np
 
-from repro.core import metrics, szx
-from repro.core.codec import SZxCodec
+from repro.api import ArrayStore, Bound, SZxCodec, compress_with_stats, decompress
+from repro.core import metrics
 from repro.data import scidata
-from repro.store import ArrayStore
 
 
 def main():
@@ -24,10 +24,10 @@ def main():
 
     for rel in (1e-2, 1e-3, 1e-4):
         t0 = time.time()
-        buf, stats = szx.compress_with_stats(x, rel, mode="rel", backend="numpy")
+        buf, stats = compress_with_stats(x, Bound.rel(rel), backend="numpy")
         t_c = time.time() - t0
         t0 = time.time()
-        y = szx.decompress(buf, backend="numpy").reshape(x.shape)
+        y = decompress(buf, backend="numpy").reshape(x.shape)
         t_d = time.time() - t0
         err = np.abs(x - y).max()
         print(
@@ -42,14 +42,14 @@ def main():
     codec = SZxCodec(backend="numpy")
     for dtype in (np.float64, np.float16):
         xd = x.astype(dtype)
-        buf = codec.compress(xd, 1e-2, mode="rel")
+        buf = codec.compress(xd, Bound.rel(1e-2))
         y = codec.decompress(buf)
         print(
             f"native {np.dtype(dtype).name}: CR={xd.nbytes/len(buf):5.2f}  "
             f"decoded dtype={y.dtype}"
         )
     sink = io.BytesIO()
-    written = codec.dump_chunked(x, sink, 1e-3, mode="rel", chunk_bytes=1 << 20)
+    written = codec.dump_chunked(x, sink, Bound.rel(1e-3), chunk_bytes=1 << 20)
     sink.seek(0)
     y = codec.load_chunked(sink).reshape(x.shape)
     e = 1e-3 * float(x.max() - x.min())
@@ -61,7 +61,7 @@ def main():
 
     # --- array store: lazy ROI reads + compressed-domain queries ----------
     store = io.BytesIO()
-    ArrayStore.save(store, x, 1e-3, mode="rel")
+    ArrayStore.save(store, x, Bound.rel(1e-3))
     ca = ArrayStore.open(store)
     t0 = time.time()
     roi = ca[x.shape[0] // 2, : x.shape[1] // 2]       # one half-plane slice

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.api import Bound
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM
 from repro.models import transformer as T
@@ -63,7 +64,7 @@ def main():
         k: jnp.asarray(v) for k, v in ds.batch_at(step).items()
     }
 
-    ckpt = CheckpointManager(args.ckpt, keep=2, compress=True, error_bound=1e-6)
+    ckpt = CheckpointManager(args.ckpt, keep=2, compress=True, bound=Bound.rel(1e-6))
     tr = Trainer(
         TrainerConfig(total_steps=args.steps, checkpoint_every=50, log_every=20),
         step_fn, batch_fn, ckpt,

@@ -1,4 +1,36 @@
 """repro: SZx (ultra-fast error-bounded lossy compression) as a first-class
-feature of a multi-pod JAX training/serving framework."""
+feature of a multi-pod JAX training/serving framework.
 
-__version__ = "1.0.0"
+The supported public surface is :mod:`repro.api`; its names are re-exported
+here (``repro.SZxCodec``, ``repro.Bound``, ...).  See ``repro.api.__doc__``
+for the deprecation policy.
+"""
+
+__version__ = "1.1.0"
+
+__all__ = [
+    "api",
+    "Bound",
+    "SZxCodec",
+    "TreeCodec",
+    "PlanesCodec",
+    "ArrayStore",
+    "CompressedArray",
+    "CheckpointManager",
+    "CompressionStats",
+    "compress",
+    "compress_with_stats",
+    "decompress",
+]
+
+
+def __getattr__(name):
+    # Top-level names resolve through repro.api lazily: `import repro` stays
+    # import-cheap, and repro.api remains the one definition of the surface.
+    if name in __all__:
+        from repro import api
+
+        if name == "api":
+            return api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

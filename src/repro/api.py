@@ -1,0 +1,65 @@
+"""repro.api -- the curated public surface of the repro package.
+
+Everything supported for external use is importable from here (and
+re-exported at the top level: ``import repro; repro.SZxCodec``):
+
+  Bound        -- the unified error-bound spec: ``Bound.abs(1e-3)`` /
+                  ``Bound.rel(1e-4)``; every bound-taking API also accepts a
+                  bare float, meaning ``Bound.abs``
+  SZxCodec     -- byte-stream codec (monolithic + chunked streaming,
+                  f32/f64/f16/bf16)
+  TreeCodec    -- pytree codec: one multi-leaf container-v3 stream per tree
+  PlanesCodec  -- fixed-shape in-graph codec (gradient / KV-cache planes)
+  ArrayStore   -- block-addressable compressed N-d array store (lazy ROI
+                  reads, compressed-domain queries, sharded manifests)
+  CheckpointManager -- fault-tolerant checkpoints over TreeCodec streams
+  compress / decompress / compress_with_stats -- one-shot functional API
+
+Anything imported from deeper module paths (``repro.core.codec.*``,
+``repro.store.*``) is a stable-ish internal: it works, but only the names
+listed here are covered by the deprecation policy.  The historical
+``repro.core.szx`` float32 module is a frozen legacy shim.
+"""
+from repro.core.codec.plan import Bound  # noqa: F401
+from repro.core.codec.planes_codec import PlanesCodec  # noqa: F401
+from repro.core.codec.szx_codec import (  # noqa: F401
+    CompressionStats,
+    SZxCodec,
+    compress,
+    compress_with_stats,
+    decompress,
+)
+from repro.core.codec.tree import TreeCodec  # noqa: F401
+
+
+def __getattr__(name):
+    # Heavy optional surfaces resolve lazily so `import repro.api` stays
+    # cheap and never drags in jax for codec-only callers.
+    if name == "ArrayStore":
+        from repro.store import ArrayStore
+
+        return ArrayStore
+    if name == "CompressedArray":
+        from repro.store import CompressedArray
+
+        return CompressedArray
+    if name == "CheckpointManager":
+        from repro.checkpoint.manager import CheckpointManager
+
+        return CheckpointManager
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+__all__ = [
+    "Bound",
+    "SZxCodec",
+    "TreeCodec",
+    "PlanesCodec",
+    "ArrayStore",
+    "CompressedArray",
+    "CheckpointManager",
+    "CompressionStats",
+    "compress",
+    "compress_with_stats",
+    "decompress",
+]

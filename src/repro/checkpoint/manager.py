@@ -45,6 +45,7 @@ import jax
 import numpy as np
 
 from repro.core.codec import SZxCodec, TreeCodec
+from repro.core.codec.plan import Bound, as_bound
 from repro.core.codec.tree import leaf_name, np_dtype_for
 
 _MARKER = "_COMMITTED"
@@ -59,8 +60,9 @@ class CheckpointManager:
         *,
         keep: int = 3,
         compress: bool = False,
-        error_bound: float = 1e-6,
-        mode: str = "rel",
+        bound: Bound | float | None = None,
+        error_bound: float | None = None,
+        mode: str | None = None,
         async_save: bool = False,
         chunk_bytes: int = 64 << 20,
         workers: int = 1,
@@ -69,8 +71,14 @@ class CheckpointManager:
         self.root = root
         self.keep = keep
         self.compress = compress
-        self.error_bound = error_bound
-        self.mode = mode
+        if bound is None and error_bound is None and mode is None:
+            self.bound = Bound.rel(1e-6)   # the manager's historical default
+        else:
+            # legacy error_bound= without mode= historically meant 'rel' here
+            if error_bound is not None and mode is None:
+                mode = "rel"
+            self.bound = as_bound(bound, mode, error_bound=error_bound,
+                                  owner="CheckpointManager")
         self.async_save = async_save
         self.chunk_bytes = chunk_bytes
         # leaves are device_get'd to host before they reach the codec, so the
@@ -81,8 +89,7 @@ class CheckpointManager:
         # real leaf size routes all of them into the shared pack frame
         self._tree_codec = TreeCodec(
             codec=self._codec,
-            error_bound=error_bound,
-            mode=mode,
+            bound=self.bound,
             chunk_bytes=chunk_bytes,
             min_compress_elems=1024 if compress else (1 << 62),
         )

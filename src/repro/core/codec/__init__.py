@@ -22,7 +22,7 @@ Front-ends over the same core:
 """
 from repro.core.codec import container, device, plan, transform  # noqa: F401
 from repro.core.codec.device import DeviceEncoding  # noqa: F401
-from repro.core.codec.plan import DEFAULT_BLOCK_SIZE  # noqa: F401
+from repro.core.codec.plan import DEFAULT_BLOCK_SIZE, Bound  # noqa: F401
 from repro.core.codec.planes_codec import PlanesCodec  # noqa: F401
 from repro.core.codec.tree import TreeCodec  # noqa: F401
 from repro.core.codec.szx_codec import (  # noqa: F401

@@ -1,9 +1,12 @@
 """File CLI for the SZx codec (parity with the reference ``szx`` tool).
 
     python -m repro.core.codec compress   IN.bin OUT.szx --dtype float32 \
-        --error-bound 1e-3 --mode rel
+        --bound rel:1e-3
     python -m repro.core.codec decompress IN.szx OUT.bin
     python -m repro.core.codec info       IN.szx
+
+``--bound`` takes the unified spelling (``1e-3`` = abs, ``abs:1e-3``,
+``rel:1e-4``); the legacy ``--error-bound``/``--mode`` pair still works.
 
 ``compress`` reads a raw binary array (``--dtype`` elements), writes a
 chunked container-v3 stream (self-delimiting frames + seekable index
@@ -25,24 +28,38 @@ def _dtype(name: str) -> np.dtype:
     return np_dtype_for(name)
 
 
+def resolve_cli_bound(args):
+    """--bound SPEC, or the legacy --error-bound/--mode pair -> Bound."""
+    from repro.core.codec.plan import Bound
+
+    if getattr(args, "bound", None) is not None:
+        if args.error_bound is not None or args.mode is not None:
+            raise ValueError("pass --bound OR --error-bound/--mode, not both")
+        return Bound.parse(args.bound)
+    if args.error_bound is None:
+        raise ValueError("an error bound is required (--bound SPEC)")
+    return Bound(args.error_bound, args.mode or "abs")
+
+
 def _cmd_compress(args) -> int:
     from repro.core.codec import SZxCodec
 
     dtype = _dtype(args.dtype)
     data = np.fromfile(args.input, dtype=dtype)
+    bound = resolve_cli_bound(args)
     codec = SZxCodec(
         block_size=args.block_size, backend=args.backend, workers=args.workers
     )
     with open(args.output, "wb") as f:
         written = codec.dump_chunked(
-            data, f, args.error_bound, mode=args.mode,
+            data, f, bound,
             chunk_bytes=args.chunk_bytes, index=not args.no_index,
         )
     raw = data.nbytes
     print(
         f"{args.input}: {raw} -> {written} bytes "
         f"(CR {raw / max(written, 1):.2f}, n={data.size} {dtype.name}, "
-        f"{args.mode} {args.error_bound:g})"
+        f"{bound})"
     )
     return 0
 
@@ -158,9 +175,11 @@ def main(argv: list[str] | None = None) -> int:
     c = sub.add_parser("compress", help="raw binary -> chunked SZx stream")
     c.add_argument("input")
     c.add_argument("output")
-    c.add_argument("--error-bound", type=float, required=True,
-                   help="ABS bound, or REL factor with --mode rel")
-    c.add_argument("--mode", choices=("abs", "rel"), default="abs")
+    c.add_argument("--bound", default=None, metavar="SPEC",
+                   help="error bound: '1e-3' (abs), 'abs:1e-3', 'rel:1e-4'")
+    c.add_argument("--error-bound", type=float, default=None,
+                   help="legacy: ABS bound, or REL factor with --mode rel")
+    c.add_argument("--mode", choices=("abs", "rel"), default=None)
     c.add_argument("--dtype", default="float32",
                    help="element dtype of the raw input (float32/float64/"
                         "float16/bfloat16)")

@@ -9,6 +9,7 @@ upcasting every input to float32.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -27,6 +28,93 @@ from repro.kernels.specs import (  # noqa: F401  (re-exports)
 )
 
 DEFAULT_BLOCK_SIZE = 128  # paper Fig. 8: best compression-ratio/PSNR tradeoff
+
+
+@dataclass(frozen=True)
+class Bound:
+    """The unified error-bound spec accepted everywhere a bound is taken.
+
+    ``Bound.abs(1e-3)`` is an absolute bound ``e``; ``Bound.rel(1e-4)`` is a
+    value-range-relative factor (``e = value * (max - min)``, the paper's REL
+    semantics, resolved over the full array being compressed).  Every API
+    that takes a bound also accepts a bare float, which means ``Bound.abs``.
+    This replaces the scattered ``(error_bound, mode=)`` kwarg pairs; the
+    old kwargs keep working through deprecation shims (:func:`as_bound`).
+    """
+
+    value: float
+    mode: str = "abs"
+
+    def __post_init__(self):
+        if self.mode not in ("abs", "rel"):
+            raise ValueError(f"unknown bound mode {self.mode!r} (abs/rel)")
+        if not float(self.value) > 0:
+            raise ValueError("error bound must be positive")
+        object.__setattr__(self, "value", float(self.value))
+
+    @classmethod
+    def abs(cls, value: float) -> "Bound":  # noqa: A003 - reads as Bound.abs
+        """Absolute bound: ``|x - x'| <= value`` element-wise."""
+        return cls(value, "abs")
+
+    @classmethod
+    def rel(cls, value: float) -> "Bound":
+        """Value-range-relative bound: ``e = value * (max(x) - min(x))``."""
+        return cls(value, "rel")
+
+    @classmethod
+    def parse(cls, text: str) -> "Bound":
+        """CLI spelling: ``'1e-3'`` (abs), ``'abs:1e-3'``, or ``'rel:1e-4'``."""
+        text = text.strip()
+        if ":" in text:
+            mode, _, value = text.partition(":")
+            return cls(float(value), mode.strip())
+        return cls(float(text), "abs")
+
+    def __str__(self) -> str:
+        return f"{self.mode}:{self.value:g}"
+
+
+def as_bound(bound=None, mode: str | None = None, *, error_bound=None,
+             owner: str = "", stacklevel: int = 3) -> Bound:
+    """Normalize the unified bound argument (the ONE deprecation shim).
+
+    ``bound`` is a :class:`Bound` or a bare positive number (meaning
+    ``Bound.abs``).  ``mode`` and ``error_bound`` are the legacy kwargs:
+    passing either emits a ``DeprecationWarning`` and resolves them the old
+    way (``Bound(error_bound, mode or 'abs')``).
+    """
+    if error_bound is not None:
+        if bound is not None:
+            raise TypeError(
+                f"{owner or 'bound'}: pass bound OR the legacy error_bound=, "
+                "not both"
+            )
+        warnings.warn(
+            f"{owner or 'this API'}: the (error_bound, mode=) kwargs are "
+            "deprecated; pass repro.api.Bound.abs(e) / Bound.rel(r) instead",
+            DeprecationWarning,
+            stacklevel=stacklevel,
+        )
+        return Bound(float(error_bound), mode or "abs")
+    if isinstance(bound, Bound):
+        if mode is not None:
+            raise TypeError(
+                f"{owner or 'bound'}: pass the mode inside Bound "
+                "(Bound.abs/Bound.rel), not as a mode= kwarg"
+            )
+        return bound
+    if bound is None:
+        raise TypeError(f"{owner or 'bound'}: an error bound is required")
+    if mode is not None:
+        warnings.warn(
+            f"{owner or 'this API'}: the (error_bound, mode=) kwargs are "
+            "deprecated; pass repro.api.Bound.abs(e) / Bound.rel(r) instead",
+            DeprecationWarning,
+            stacklevel=stacklevel,
+        )
+        return Bound(float(bound), mode)
+    return Bound(float(bound), "abs")
 
 
 def finfo(dtype):
@@ -55,17 +143,29 @@ class Plan:
         return self.n * self.dtype.itemsize
 
 
-def resolve_error_bound(x: np.ndarray, error_bound: float, mode: str, spec: DtypeSpec) -> float:
-    """Resolve the user bound to an absolute e > 0 (paper REL semantics)."""
-    if mode == "rel":
+def resolve_error_bound(x: np.ndarray, bound, mode: str = "abs",
+                        spec: DtypeSpec | None = None) -> float:
+    """Resolve a bound to an absolute e > 0 (paper REL semantics).
+
+    The ONE place bound resolution happens.  ``bound`` is a :class:`Bound`
+    (``mode`` is then ignored) or a bare number interpreted under ``mode``
+    -- the legacy calling convention, kept so stream headers and existing
+    call sites resolve identically.
+    """
+    if not isinstance(bound, Bound):
+        if mode == "rel":
+            bound = Bound(float(bound), "rel")
+        elif mode == "abs":
+            bound = Bound(float(bound), "abs")
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+    if bound.mode == "rel":
         rng = float(x.max() - x.min()) if x.size else 0.0
-        e = float(error_bound) * rng
+        e = bound.value * rng
         if e == 0.0:
-            e = float(finfo(spec.np_dtype).tiny)
-    elif mode == "abs":
-        e = float(error_bound)
+            e = float(finfo((spec or spec_for(np.asarray(x).dtype)).np_dtype).tiny)
     else:
-        raise ValueError(f"unknown mode {mode!r}")
+        e = bound.value
     if e <= 0:
         raise ValueError("error bound must be positive")
     return e
@@ -73,7 +173,7 @@ def resolve_error_bound(x: np.ndarray, error_bound: float, mode: str, spec: Dtyp
 
 def make_plan(
     x,
-    error_bound: float,
+    bound,
     *,
     mode: str = "abs",
     block_size: int = DEFAULT_BLOCK_SIZE,
@@ -82,8 +182,9 @@ def make_plan(
 ) -> tuple[Plan, np.ndarray]:
     """Build the plan for ``x`` and return ``(plan, x_as_plan_dtype)``.
 
-    ``dtype`` forces the codec dtype (the input is cast); by default the
-    input's own dtype is kept -- no silent upcast.
+    ``bound`` is a :class:`Bound` or a bare number interpreted under
+    ``mode``.  ``dtype`` forces the codec dtype (the input is cast); by
+    default the input's own dtype is kept -- no silent upcast.
     """
     x = np.asarray(x)
     if dtype is not None:
@@ -93,7 +194,7 @@ def make_plan(
     spec = spec_for(x.dtype)
     if not 1 <= block_size <= 0xFFFF:
         raise ValueError(f"block_size {block_size} out of range [1, 65535]")
-    e = resolve_error_bound(x, error_bound, mode, spec)
+    e = resolve_error_bound(x, bound, mode, spec)
     n = int(x.size)
     nblocks = max((n + block_size - 1) // block_size, 0)
     return Plan(spec, n, block_size, nblocks, e, backend), x

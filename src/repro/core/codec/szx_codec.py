@@ -18,7 +18,7 @@ from typing import Callable, Iterable, Iterator
 import numpy as np
 
 from repro.core.codec import container, plan as plan_mod, transform
-from repro.core.codec.plan import DEFAULT_BLOCK_SIZE, Plan
+from repro.core.codec.plan import DEFAULT_BLOCK_SIZE, Bound, Plan
 
 DEFAULT_CHUNK_BYTES = 64 << 20     # 64 MB of input per frame
 
@@ -103,16 +103,21 @@ class SZxCodec:
     workers: int = 1               # threads for compress_chunked/decompress_chunked
 
     # ------------------------------------------------------------- monolithic
-    def compress(self, x, error_bound: float, *, mode: str = "abs", dtype=None) -> bytes:
+    def compress(self, x, bound: Bound | float | None = None, *,
+                 mode: str | None = None, dtype=None,
+                 error_bound: float | None = None) -> bytes:
         """Compress an array (f32/f64/f16/bf16) into one v2 stream.
 
-        mode: 'abs' -- `error_bound` is the absolute bound e.
-              'rel' -- value-range-relative: e = error_bound * (max - min).
+        bound: a :class:`repro.api.Bound` (``Bound.abs(1e-3)`` /
+               ``Bound.rel(1e-4)``) or a bare float meaning ``Bound.abs``.
         dtype: optionally force the codec dtype (input is cast first).
+        The legacy ``(error_bound, mode=)`` kwargs still work but emit a
+        ``DeprecationWarning``.
         """
+        b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                              owner="SZxCodec.compress")
         p, xt = plan_mod.make_plan(
-            x, error_bound, mode=mode, block_size=self.block_size,
-            backend=self.backend, dtype=dtype,
+            x, b, block_size=self.block_size, backend=self.backend, dtype=dtype,
         )
         return self._compress_planned(xt, p)
 
@@ -188,8 +193,9 @@ class SZxCodec:
         flat = np.asarray(xb).reshape(-1)
         return flat[: min(hi_block * p.block_size, p.n) - lo_block * p.block_size]
 
-    def compress_with_stats(self, x, error_bound: float, **kw) -> tuple[bytes, CompressionStats]:
-        buf = self.compress(x, error_bound, **kw)
+    def compress_with_stats(self, x, bound: Bound | float | None = None,
+                            **kw) -> tuple[bytes, CompressionStats]:
+        buf = self.compress(x, bound, **kw)
         _, _, _, _, n, e, nb, nnc, _ = container.HEADER.unpack_from(buf, 0)
         itemsize = plan_mod.spec_for_code(buf[5]).itemsize
         return buf, CompressionStats(
@@ -206,36 +212,39 @@ class SZxCodec:
     def iter_chunk_payloads(
         self,
         x,
-        error_bound: float,
+        bound: Bound | float | None = None,
         *,
-        mode: str = "abs",
+        mode: str | None = None,
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
         dtype=None,
+        error_bound: float | None = None,
     ) -> Iterator[tuple[bytes, bool]]:
         """Yield ``(payload, is_last)`` covering ``x`` in chunk order.
 
         The frame-less core of :meth:`compress_chunked` -- and the ONE place
         the chunk count is derived, so every wrapper agrees on which payload
-        closes the sequence.  The error bound is resolved over the FULL
-        array first (so 'rel' mode matches the monolithic stream -- every
-        chunk carries the same absolute ``e``), then each block-aligned
-        chunk is compressed independently; each payload is bit-identical to
-        ``compress(chunk, e_abs)``.  With ``workers > 1`` the chunk bodies
-        run concurrently but payloads are yielded strictly in order.
-        Callers that interleave several arrays into one stream
-        (``TreeCodec``) wrap these in their own frames.
+        closes the sequence.  The bound (:class:`Bound` or bare-float abs)
+        is resolved over the FULL array first (so ``Bound.rel`` matches the
+        monolithic stream -- every chunk carries the same absolute ``e``),
+        then each block-aligned chunk is compressed independently; each
+        payload is bit-identical to ``compress(chunk, e_abs)``.  With
+        ``workers > 1`` the chunk bodies run concurrently but payloads are
+        yielded strictly in order.  Callers that interleave several arrays
+        into one stream (``TreeCodec``) wrap these in their own frames.
         """
+        b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                              owner="SZxCodec.iter_chunk_payloads")
         x = np.asarray(x)
         if dtype is not None:
             x = x.astype(np.dtype(dtype), copy=False)
         spec = plan_mod.spec_for(x.dtype)
-        e = plan_mod.resolve_error_bound(x, error_bound, mode, spec)
+        e = plan_mod.resolve_error_bound(x, b, spec=spec)
         flat = x.reshape(-1)
         per_chunk = plan_mod.chunk_elements(self.block_size, chunk_bytes, spec.itemsize)
         nchunks = max((flat.size + per_chunk - 1) // per_chunk, 1)
 
         def payload(i: int) -> bytes:
-            return self.compress(flat[i * per_chunk : (i + 1) * per_chunk], e, mode="abs")
+            return self.compress(flat[i * per_chunk : (i + 1) * per_chunk], e)
 
         if self.workers > 1 and nchunks > 1:
             payloads = _imap_ordered(payload, range(nchunks), self.workers)
@@ -247,11 +256,12 @@ class SZxCodec:
     def compress_chunked(
         self,
         x,
-        error_bound: float,
+        bound: Bound | float | None = None,
         *,
-        mode: str = "abs",
+        mode: str | None = None,
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
         dtype=None,
+        error_bound: float | None = None,
     ) -> Iterator[bytes]:
         """Yield self-delimiting frames covering ``x`` in order.
 
@@ -260,10 +270,10 @@ class SZxCodec:
         compression of its slice, the byte stream identical for any worker
         count.
         """
+        b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                              owner="SZxCodec.compress_chunked")
         for i, (payload, last) in enumerate(
-            self.iter_chunk_payloads(
-                x, error_bound, mode=mode, chunk_bytes=chunk_bytes, dtype=dtype
-            )
+            self.iter_chunk_payloads(x, b, chunk_bytes=chunk_bytes, dtype=dtype)
         ):
             yield container.build_frame(payload, i, last=last)
 
@@ -335,8 +345,8 @@ class SZxCodec:
             return out
         return np.concatenate(parts) if len(parts) > 1 else parts[0]
 
-    def dump_chunked(self, x, fileobj, error_bound: float, *, index: bool = True,
-                     **kw) -> int:
+    def dump_chunked(self, x, fileobj, bound: Bound | float | None = None, *,
+                     index: bool = True, **kw) -> int:
         """Stream ``compress_chunked`` frames straight to a file; returns
         bytes written.  Peak memory stays O(workers * chunk).
 
@@ -349,7 +359,7 @@ class SZxCodec:
         written = 0
         frames_idx: list[list[int]] = []
         dtype_code = None
-        for frame in self.compress_chunked(x_arr, error_bound, **kw):
+        for frame in self.compress_chunked(x_arr, bound, **kw):
             if index:
                 dtype_code, payload_n, _e = container.peek_stream_meta(
                     memoryview(frame)[container.FRAME_HEADER.size:]
@@ -432,19 +442,23 @@ class SZxCodec:
 
 
 # functional API (compat shim repro.core.szx re-exports these)
-def compress(x, error_bound: float, *, mode: str = "abs",
+def compress(x, bound: Bound | float | None = None, *, mode: str | None = None,
              block_size: int = DEFAULT_BLOCK_SIZE, backend: str = "auto",
-             dtype=None) -> bytes:
-    return SZxCodec(block_size, backend).compress(x, error_bound, mode=mode, dtype=dtype)
+             dtype=None, error_bound: float | None = None) -> bytes:
+    b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                          owner="szx_codec.compress")
+    return SZxCodec(block_size, backend).compress(x, b, dtype=dtype)
 
 
 def decompress(buf: bytes, *, backend: str = "auto") -> np.ndarray:
     return SZxCodec(backend=backend).decompress(buf)
 
 
-def compress_with_stats(x, error_bound: float, *, mode: str = "abs",
+def compress_with_stats(x, bound: Bound | float | None = None, *,
+                        mode: str | None = None,
                         block_size: int = DEFAULT_BLOCK_SIZE, backend: str = "auto",
-                        dtype=None) -> tuple[bytes, CompressionStats]:
-    return SZxCodec(block_size, backend).compress_with_stats(
-        x, error_bound, mode=mode, dtype=dtype
-    )
+                        dtype=None, error_bound: float | None = None,
+                        ) -> tuple[bytes, CompressionStats]:
+    b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                          owner="szx_codec.compress_with_stats")
+    return SZxCodec(block_size, backend).compress_with_stats(x, b, dtype=dtype)

@@ -21,12 +21,13 @@ writer, sit on.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
 from typing import Any, Iterable, Iterator
 
 import numpy as np
 
 from repro.core.codec import container, plan as plan_mod
+from repro.core.codec.plan import Bound
 from repro.core.codec.szx_codec import (
     DEFAULT_CHUNK_BYTES,
     SZxCodec,
@@ -70,16 +71,31 @@ class TreeCodec:
     """Configured pytree codec; instances are cheap and immutable.
 
     ``codec`` supplies the per-chunk byte codec (backend, block size, worker
-    pool); ``error_bound``/``mode`` are resolved per leaf; leaves smaller
-    than ``min_compress_elems`` (or of non-float dtype) are stored raw in
-    the shared pack frame.
+    pool); ``bound`` (a :class:`repro.api.Bound`, default ``Bound.rel(1e-6)``)
+    is resolved per leaf; leaves smaller than ``min_compress_elems`` (or of
+    non-float dtype) are stored raw in the shared pack frame.  The legacy
+    ``(error_bound, mode=)`` ctor kwargs still work (``DeprecationWarning``)
+    and keep their historical rel default.
     """
 
     codec: SZxCodec = field(default_factory=SZxCodec)
-    error_bound: float = 1e-6
-    mode: str = "rel"
+    bound: Bound | float | None = None
     chunk_bytes: int = DEFAULT_CHUNK_BYTES
     min_compress_elems: int = 1024
+    error_bound: InitVar[float | None] = None
+    mode: InitVar[str | None] = None
+
+    def __post_init__(self, error_bound, mode):
+        if error_bound is None and mode is None and self.bound is None:
+            b = Bound.rel(1e-6)            # the codec's historical default
+        else:
+            # legacy error_bound= without mode= historically meant 'rel'
+            # here (unlike SZxCodec's abs) -- preserve that under the shim
+            if error_bound is not None and mode is None:
+                mode = "rel"
+            b = plan_mod.as_bound(self.bound, mode, error_bound=error_bound,
+                                  owner="TreeCodec", stacklevel=4)
+        object.__setattr__(self, "bound", b)
 
     # ------------------------------------------------------------- compress
     def _compressible(self, arr: np.ndarray) -> bool:
@@ -99,8 +115,7 @@ class TreeCodec:
         if _leaf_payloads is None:
             def _leaf_payloads(arr):
                 return self.codec.iter_chunk_payloads(
-                    arr, self.error_bound, mode=self.mode,
-                    chunk_bytes=self.chunk_bytes,
+                    arr, self.bound, chunk_bytes=self.chunk_bytes,
                 )
 
         leaves = [
@@ -200,7 +215,7 @@ class TreeCodec:
         import jax
 
         spec = plan_mod.spec_for(arr.dtype)
-        e = plan_mod.resolve_error_bound(arr, self.error_bound, self.mode, spec)
+        e = plan_mod.resolve_error_bound(arr, self.bound, spec=spec)
         flat = arr.reshape(-1)
         bs = self.codec.block_size
         ndev = max(len(devices), 1)
@@ -216,7 +231,7 @@ class TreeCodec:
         def payload(job) -> bytes:
             dev, lo, hi = job
             with jax.default_device(dev):
-                return self.codec.compress(flat[lo:hi], e, mode="abs")
+                return self.codec.compress(flat[lo:hi], e)
 
         if self.codec.workers > 1 and len(shards) > 1:
             payloads = _imap_ordered(payload, iter(shards), self.codec.workers)

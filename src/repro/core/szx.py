@@ -1,13 +1,16 @@
-"""Compat shim over ``repro.core.codec`` -- the original float32 SZx API.
+"""LEGACY compat shim over ``repro.core.codec`` -- the original float32 API.
+
+.. deprecated::
+    This module is the frozen pre-1.0 surface, kept so old callers and the
+    golden-bytes tests keep working unchanged (float32-only, positional
+    ``(error_bound, mode=)`` spelling).  New code should import from
+    :mod:`repro.api` -- :class:`repro.api.SZxCodec` adds chunked streaming
+    and native f64/f16/bf16 support, and takes a :class:`repro.api.Bound`.
 
 The monolithic encoder that used to live here was decomposed into the layered
 ``repro.core.codec`` package (plan / transform / container + SZxCodec /
-PlanesCodec front-ends).  This module keeps the old public surface working
-unchanged: float32-only byte-stream compression with the exact v2 stream
-layout (golden-bytes pinned in tests/test_codec.py).
-
-New code should use :class:`repro.core.codec.SZxCodec`, which adds chunked
-streaming and native f64/f16/bf16 support.
+PlanesCodec front-ends); byte output is golden-bytes pinned in
+tests/test_codec.py.
 """
 from __future__ import annotations
 
@@ -27,17 +30,19 @@ DEFAULT_BLOCK_SIZE = _plan.DEFAULT_BLOCK_SIZE  # paper Fig. 8 tradeoff
 
 def compress(
     x,
-    error_bound: float,
+    error_bound,
     *,
     mode: str = "abs",
     block_size: int = DEFAULT_BLOCK_SIZE,
     backend: str = "auto",
 ) -> bytes:
     """Compress an array of float32 values (other dtypes are cast, as the
-    original monolith did; use SZxCodec for native multi-dtype streams)."""
+    original monolith did; use repro.api.SZxCodec for native multi-dtype
+    streams).  ``error_bound`` may also be a :class:`repro.api.Bound`."""
+    b = error_bound if isinstance(error_bound, _plan.Bound) \
+        else _plan.Bound(float(error_bound), mode)
     return _codec.compress(
-        np.asarray(x, np.float32), error_bound,
-        mode=mode, block_size=block_size, backend=backend,
+        np.asarray(x, np.float32), b, block_size=block_size, backend=backend,
     )
 
 
@@ -46,8 +51,11 @@ def decompress(buf: bytes, *, backend: str = "auto") -> np.ndarray:
     return _codec.decompress(buf, backend=backend)
 
 
-def compress_with_stats(x, error_bound, **kw) -> tuple[bytes, CompressionStats]:
-    return _codec.compress_with_stats(np.asarray(x, np.float32), error_bound, **kw)
+def compress_with_stats(x, error_bound, *, mode: str = "abs",
+                        **kw) -> tuple[bytes, CompressionStats]:
+    b = error_bound if isinstance(error_bound, _plan.Bound) \
+        else _plan.Bound(float(error_bound), mode)
+    return _codec.compress_with_stats(np.asarray(x, np.float32), b, **kw)
 
 
 def roundtrip_max_error(x, error_bound, **kw) -> float:

@@ -78,19 +78,32 @@ class SyntheticLM:
 class CompressedInMemoryCache:
     """SZx-compressed RAM cache of float shards (the QC-simulation pattern).
 
-    put() compresses; get() decompresses on demand.  Error bound is absolute
-    and strict, so consumers can rely on |x - x'| <= e."""
+    put() compresses; get() decompresses on demand.  ``bound`` is a
+    :class:`repro.api.Bound` or a bare float (``Bound.abs``); the default is
+    absolute and strict, so consumers can rely on |x - x'| <= e."""
 
-    def __init__(self, error_bound: float = 1e-4, mode: str = "abs"):
-        self.error_bound = error_bound
-        self.mode = mode
+    def __init__(self, bound=None, *, error_bound=None, mode=None):
+        from repro.core.codec import plan as _plan
+
+        if bound is None and error_bound is None and mode is None:
+            bound = _plan.Bound.abs(1e-4)
+        self.bound = _plan.as_bound(bound, mode, error_bound=error_bound,
+                                    owner="CompressedInMemoryCache")
         self._store: dict = {}
         self._raw_bytes = 0
         self._stored_bytes = 0
 
+    @property
+    def error_bound(self) -> float:
+        return self.bound.value
+
+    @property
+    def mode(self) -> str:
+        return self.bound.mode
+
     def put(self, key, arr: np.ndarray) -> None:
         arr = np.asarray(arr, np.float32)
-        buf = szx.compress(arr, self.error_bound, mode=self.mode)
+        buf = szx.compress(arr, self.bound)
         self._store[key] = (buf, arr.shape)
         self._raw_bytes += arr.nbytes
         self._stored_bytes += len(buf)

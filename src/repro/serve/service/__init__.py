@@ -1,0 +1,32 @@
+"""Production store serving tier.
+
+- :mod:`.app` -- the synchronous request core (:class:`~.app.StoreService`),
+  the stdlib-asyncio HTTP frontend (:class:`~.app.HttpServer`) and the
+  optional ASGI adapter (:func:`~.app.asgi_app`).
+- :mod:`.cache` -- size-bounded decoded-chunk LRU shared by all stores.
+- :mod:`.registry` -- named stores, revalidating handles, ETags, quotas.
+- :mod:`.metrics` -- request counters and latency percentiles.
+"""
+from repro.serve.service.app import HttpServer, StoreService, asgi_app
+from repro.serve.service.cache import LRUBytesCache
+from repro.serve.service.metrics import Metrics
+from repro.serve.service.registry import (
+    QuotaExceeded,
+    StoreGone,
+    StoreNotFound,
+    StoreRegistry,
+    compute_etag,
+)
+
+__all__ = [
+    "HttpServer",
+    "LRUBytesCache",
+    "Metrics",
+    "QuotaExceeded",
+    "StoreGone",
+    "StoreNotFound",
+    "StoreRegistry",
+    "StoreService",
+    "asgi_app",
+    "compute_etag",
+]

@@ -1,0 +1,71 @@
+"""Request counters and latency percentiles for the store service.
+
+Lock-guarded in-process counters plus a bounded ring of recent request
+latencies per route class; the ``/v1/metrics`` endpoint serves
+``snapshot()``.  Percentiles are computed over the ring at snapshot time
+(the ring is small), so the hot path cost is one append under a mutex.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict, deque
+
+
+class Metrics:
+    def __init__(self, window: int = 2048):
+        self._lock = threading.Lock()
+        self._window = window
+        self.requests = 0
+        self.errors = 0
+        self.bytes_sent = 0
+        self.by_route: dict[str, int] = defaultdict(int)
+        self.by_status: dict[int, int] = defaultdict(int)
+        self.by_tenant: dict[str, dict] = defaultdict(
+            lambda: {"requests": 0, "bytes": 0}
+        )
+        self._lat: dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=self._window)
+        )
+
+    def observe(self, route: str, status: int, seconds: float,
+                nbytes: int, tenant: str | None = None) -> None:
+        with self._lock:
+            self.requests += 1
+            self.bytes_sent += nbytes
+            self.by_route[route] += 1
+            self.by_status[status] += 1
+            if status >= 400:
+                self.errors += 1
+            if tenant is not None:
+                t = self.by_tenant[tenant]
+                t["requests"] += 1
+                t["bytes"] += nbytes
+            self._lat[route].append(seconds)
+
+    @staticmethod
+    def _pct(samples: list[float], q: float) -> float:
+        if not samples:
+            return 0.0
+        samples = sorted(samples)
+        i = min(int(q * (len(samples) - 1) + 0.5), len(samples) - 1)
+        return samples[i]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            lat = {
+                route: {
+                    "count": len(d),
+                    "p50_ms": self._pct(list(d), 0.50) * 1e3,
+                    "p99_ms": self._pct(list(d), 0.99) * 1e3,
+                }
+                for route, d in self._lat.items()
+            }
+            return {
+                "requests": self.requests,
+                "errors": self.errors,
+                "bytes_sent": self.bytes_sent,
+                "by_route": dict(self.by_route),
+                "by_status": {str(k): v for k, v in self.by_status.items()},
+                "by_tenant": {k: dict(v) for k, v in self.by_tenant.items()},
+                "latency": lat,
+            }

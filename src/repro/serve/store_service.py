@@ -1,88 +1,67 @@
-"""HTTP slice/query service over a compressed array store.
+"""HTTP slice/query service over compressed array stores.
 
-The store-backed serving layer: many concurrent readers pull ROI slices and
-aggregate queries of ONE huge compressed array without any server-side
-materialization -- each request decodes only the chunks/blocks its ROI
-touches (``repro.store``'s lazy read path), so working memory per request is
-O(ROI), and the whole array lives on disk compressed.
+Compatibility front door for the production serving tier in
+:mod:`repro.serve.service`.  The legacy single-store endpoints keep their
+exact shapes --
 
-Endpoints (all GET):
-
-    /info                    store geometry + compression stats (JSON)
+    /info                    store geometry (JSON)
     /stats[?header_only=1]   compressed-domain aggregate query (JSON)
     /read?roi=0:16,:,3       ROI slice; raw little-endian bytes
                              (C order, dtype/shape in X-Dtype/X-Shape headers)
 
-Built on the stdlib ThreadingHTTPServer: every request opens its own
-``CompressedArray`` handle (a footer read), so readers never contend on a
-shared seek cursor.  Start it with ``python -m repro.store serve FILE`` or
-:func:`serve_store`; :func:`make_server` is the embeddable/testable hook.
+-- and the full ``/v1`` API (multi-store registry, decoded-chunk LRU cache,
+ETag/If-None-Match, Range over compressed bytes, shard redirects, metrics,
+quotas) is served by the same process; see :mod:`repro.serve.service.app`.
+
+``/info`` is now answered from the registry's CURRENT revalidated handle:
+replacing the store file updates the metadata immediately, and a vanished
+file answers 410 instead of the stale startup snapshot (the old behaviour
+cached ``/info`` at ``make_server`` time).
+
+Start it with ``python -m repro.store serve FILE`` or :func:`serve_store`;
+:func:`make_server` is the embeddable/testable hook -- it binds the socket
+synchronously (``server_address`` is valid before ``serve_forever`` runs)
+and keeps the ThreadingHTTPServer-style lifecycle
+(``serve_forever``/``shutdown``/``server_close``).
 """
 from __future__ import annotations
 
-import json
-import urllib.parse
-from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from repro.serve.service.app import HttpServer, StoreService, asgi_app
+
+__all__ = ["make_server", "serve_store", "make_service", "asgi_app"]
+
+DEFAULT_CACHE_BYTES = 256 << 20
+
+
+def make_service(path: str | None = None, *, backend: str = "numpy",
+                 cache_bytes: int = DEFAULT_CACHE_BYTES,
+                 quota_requests: int | None = None,
+                 quota_bytes: int | None = None) -> StoreService:
+    """Build the request core, optionally pre-registering one default store.
+
+    ``path`` may be a single ``.szs`` store file or a shard-manifest
+    ``.json``; more stores can be added later with ``service.add_store``.
+    """
+    service = StoreService(
+        backend=backend, cache_bytes=cache_bytes,
+        quota_requests=quota_requests, quota_bytes=quota_bytes,
+    )
+    if path is not None:
+        service.add_store("default", path)
+    return service
 
 
 def make_server(path: str, host: str = "127.0.0.1", port: int = 0,
-                *, backend: str = "numpy") -> ThreadingHTTPServer:
-    """Build (but do not run) the threading HTTP server for one store file."""
-    from repro.store import ArrayStore
-    from repro.store.__main__ import parse_roi
+                *, backend: str = "numpy",
+                cache_bytes: int = DEFAULT_CACHE_BYTES) -> HttpServer:
+    """Build (but do not run) the HTTP server for one store file.
 
-    with ArrayStore.open(path) as ca:      # validate once at startup
-        meta = {
-            "shape": list(ca.shape),
-            "chunk_shape": list(ca.chunk_shape),
-            "dtype": ca.dtype.name,
-            "e": ca.error_bound,
-            "nchunks": ca.nchunks,
-            "raw_bytes": ca.nbytes,
-            "stored_bytes": ca.stored_bytes,
-        }
-
-    class Handler(BaseHTTPRequestHandler):
-        def log_message(self, *a):          # quiet by default
-            pass
-
-        def _json(self, code: int, payload: dict) -> None:
-            body = json.dumps(payload).encode()
-            self.send_response(code)
-            self.send_header("Content-Type", "application/json")
-            self.send_header("Content-Length", str(len(body)))
-            self.end_headers()
-            self.wfile.write(body)
-
-        def do_GET(self):                   # noqa: N802 (stdlib API name)
-            url = urllib.parse.urlparse(self.path)
-            q = urllib.parse.parse_qs(url.query)
-            try:
-                if url.path == "/info":
-                    self._json(200, meta)
-                elif url.path == "/stats":
-                    header_only = q.get("header_only", ["0"])[0] not in ("0", "")
-                    with ArrayStore.open(path, backend=backend) as ca:
-                        stats = ca.stats(header_only=header_only).to_dict()
-                    self._json(200, stats)
-                elif url.path == "/read":
-                    roi = parse_roi(q.get("roi", [None])[0])
-                    with ArrayStore.open(path, backend=backend) as ca:
-                        out = ca[roi]
-                    body = out.tobytes()
-                    self.send_response(200)
-                    self.send_header("Content-Type", "application/octet-stream")
-                    self.send_header("Content-Length", str(len(body)))
-                    self.send_header("X-Dtype", out.dtype.name)
-                    self.send_header("X-Shape", ",".join(map(str, out.shape)))
-                    self.end_headers()
-                    self.wfile.write(body)
-                else:
-                    self._json(404, {"error": f"unknown path {url.path}"})
-            except (ValueError, TypeError, IndexError, KeyError) as err:
-                self._json(400, {"error": str(err)})
-
-    return ThreadingHTTPServer((host, port), Handler)
+    The returned object binds its socket immediately and exposes
+    ``server_address``, ``serve_forever()``, ``shutdown()`` and
+    ``server_close()``.
+    """
+    service = make_service(path, backend=backend, cache_bytes=cache_bytes)
+    return HttpServer(service, host, port)
 
 
 def serve_store(path: str, host: str = "127.0.0.1", port: int = 8117,
@@ -92,10 +71,11 @@ def serve_store(path: str, host: str = "127.0.0.1", port: int = 8117,
     srv = make_server(path, host, port, backend=backend)
     host, port = srv.server_address[:2]
     print(f"serving compressed array store {path} on http://{host}:{port} "
-          "(/info /stats /read?roi=...)")
+          "(/info /stats /read?roi=... + /v1/...)")
     try:
         srv.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        srv.shutdown()
         srv.server_close()

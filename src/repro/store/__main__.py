@@ -1,7 +1,7 @@
 """File CLI for the array store.
 
     python -m repro.store create  IN.bin OUT.szs --shape 256,256,256 \
-        --dtype float32 --error-bound 1e-3 --mode rel
+        --dtype float32 --bound rel:1e-3
     python -m repro.store info    STORE.szs [--json]
     python -m repro.store read    STORE.szs OUT.bin --roi "0:16,:,3"
     python -m repro.store query   STORE.szs [--roi ...] [--header-only] [--json]
@@ -21,24 +21,7 @@ import sys
 import numpy as np
 
 
-def parse_roi(text: str | None):
-    """'0:16,:,3' -> an N-d index tuple (step-1 slices and ints only)."""
-    if text is None or text.strip() in ("", "..."):
-        return Ellipsis
-    out = []
-    for part in text.split(","):
-        part = part.strip()
-        if part == "...":
-            out.append(Ellipsis)
-        elif ":" in part:
-            fields = part.split(":")
-            if len(fields) > 3:
-                raise ValueError(f"bad ROI slice {part!r}")
-            vals = [int(v) if v else None for v in fields]
-            out.append(slice(*vals))
-        else:
-            out.append(int(part))
-    return tuple(out)
+from repro.store.grid import parse_roi  # noqa: F401  (compat re-export)
 
 
 def _shape(text: str) -> tuple[int, ...]:
@@ -46,6 +29,7 @@ def _shape(text: str) -> tuple[int, ...]:
 
 
 def _cmd_create(args) -> int:
+    from repro.core.codec.__main__ import resolve_cli_bound
     from repro.core.codec.tree import np_dtype_for
     from repro.store import ArrayStore
 
@@ -53,16 +37,27 @@ def _cmd_create(args) -> int:
     data = np.fromfile(args.input, dtype=dtype)
     shape = _shape(args.shape)
     data = data.reshape(shape)
-    idx = ArrayStore.save(
-        args.output, data, args.error_bound, mode=args.mode,
+    kw = dict(
         chunk_shape=_shape(args.chunk_shape) if args.chunk_shape else None,
         block_size=args.block_size, backend=args.backend, workers=args.workers,
     )
-    stored = sum(f[1] for f in idx["frames"])
+    if args.shards:
+        man = ArrayStore.save_sharded(
+            args.output, data, resolve_cli_bound(args), nshards=args.shards,
+            **kw,
+        )
+        frames = [fr for sh in man["shards"] for fr in sh["frames"]]
+        chunk_shape, e = man["chunk_shape"], man["e"]
+        where = f"{len(man['shards'])} shard files + manifest"
+    else:
+        idx = ArrayStore.save(args.output, data, resolve_cli_bound(args), **kw)
+        frames, chunk_shape, e = idx["frames"], idx["chunk_shape"], idx["e"]
+        where = "1 file"
+    stored = sum(f[1] for f in frames)
     print(
         f"{args.input}: {data.nbytes} -> {stored} bytes in "
-        f"{len(idx['frames'])} chunks of {tuple(idx['chunk_shape'])} "
-        f"(CR {data.nbytes / max(stored, 1):.2f}, e={idx['e']:g})"
+        f"{len(frames)} chunks of {tuple(chunk_shape)} ({where}, "
+        f"CR {data.nbytes / max(stored, 1):.2f}, e={e:g})"
     )
     return 0
 
@@ -156,10 +151,16 @@ def main(argv: list[str] | None = None) -> int:
     c.add_argument("input")
     c.add_argument("output")
     c.add_argument("--shape", required=True, help="comma-separated dims")
-    c.add_argument("--error-bound", type=float, required=True)
-    c.add_argument("--mode", choices=("abs", "rel"), default="abs")
+    c.add_argument("--bound", default=None, metavar="SPEC",
+                   help="error bound: '1e-3' (abs), 'abs:1e-3', 'rel:1e-4'")
+    c.add_argument("--error-bound", type=float, default=None,
+                   help="legacy: ABS bound, or REL factor with --mode rel")
+    c.add_argument("--mode", choices=("abs", "rel"), default=None)
     c.add_argument("--dtype", default="float32")
     c.add_argument("--chunk-shape", default=None, help="comma-separated dims")
+    c.add_argument("--shards", type=int, default=0,
+                   help="write N shard files + a JSON manifest (OUTPUT is "
+                        "the manifest path) instead of one store file")
     c.add_argument("--block-size", type=int, default=128)
     c.add_argument("--workers", type=int, default=1)
     c.add_argument("--backend", default="numpy")

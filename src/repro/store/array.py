@@ -11,9 +11,15 @@ metadata prefix (stream header, const bitmap, mu, reqlen, L codes -- a few
 percent of the chunk) and (2) read exactly the mid-byte range of the
 intersecting blocks.  Bytes read therefore scale with the ROI, never the
 array, and non-intersecting chunks are never even parsed.
+
+Arrays larger than one file shard across files: ``ArrayStore.save_sharded``
+writes N shard files plus a JSON manifest (chunk-coord ranges -> shard
+files); ``ArrayStore.open`` on the manifest path reads transparently across
+the shards -- same chunk frames, same bytes per chunk, same API.
 """
 from __future__ import annotations
 
+import json
 import math
 import os
 from typing import Iterator
@@ -35,25 +41,30 @@ class ArrayStore:
     def save(
         path_or_file,
         arr,
-        error_bound: float,
+        bound=None,
         *,
-        mode: str = "abs",
+        mode: str | None = None,
         chunk_shape: tuple[int, ...] | None = None,
         chunk_bytes: int = DEFAULT_STORE_CHUNK_BYTES,
         block_size: int = plan_mod.DEFAULT_BLOCK_SIZE,
         backend: str = "numpy",
         workers: int = 1,
         attrs: dict | None = None,
+        error_bound: float | None = None,
     ) -> dict:
         """Write ``arr`` as a chunk-grid store stream; returns the index dict.
 
-        The error bound is resolved ONCE over the full array (so
-        ``mode='rel'`` means the same thing it does monolithically), then
+        ``bound`` is a :class:`repro.api.Bound` or a bare float (meaning
+        ``Bound.abs``); it is resolved ONCE over the full array (so
+        ``Bound.rel`` means the same thing it does monolithically), then
         every chunk is compressed independently at that absolute bound --
         each chunk payload is bit-identical to ``SZxCodec.compress`` of that
         chunk.  ``workers > 1`` compresses chunk bodies on a thread pool;
-        the bytes on disk are identical for every worker count.
+        the bytes on disk are identical for every worker count.  The legacy
+        ``(error_bound, mode=)`` kwargs still work (``DeprecationWarning``).
         """
+        b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                              owner="ArrayStore.save")
         arr = np.asarray(arr)
         if arr.ndim == 0:
             raise ValueError("0-d arrays are not storable; reshape to (1,)")
@@ -64,21 +75,11 @@ class ArrayStore:
             arr.shape, chunk_shape, itemsize=spec.itemsize,
             target_bytes=chunk_bytes,
         )
-        e = plan_mod.resolve_error_bound(arr, error_bound, mode, spec)
-        codec = SZxCodec(block_size=block_size, backend=backend, workers=workers)
-
-        def payload(cid: int) -> bytes:
-            coord = grid.chunk_coord(cid)
-            box = tuple(slice(lo, hi) for lo, hi in grid.chunk_box(coord))
-            chunk = np.ascontiguousarray(arr[box]).reshape(-1)
-            return codec.compress(chunk, e)
-
-        cids = range(grid.nchunks)
-        if workers > 1 and grid.nchunks > 1:
-            payloads: Iterator[bytes] = _imap_ordered(payload, cids, workers)
-        else:
-            payloads = map(payload, cids)
-
+        e = plan_mod.resolve_error_bound(arr, b, spec=spec)
+        payloads = _chunk_payloads(
+            arr, grid, e, block_size=block_size, backend=backend,
+            workers=workers,
+        )
         f, own = _as_file(path_or_file, "wb")
         try:
             written = 0
@@ -101,16 +102,128 @@ class ArrayStore:
         return idx
 
     @staticmethod
+    def save_sharded(
+        manifest_path,
+        arr,
+        bound=None,
+        *,
+        nshards: int = 2,
+        mode: str | None = None,
+        chunk_shape: tuple[int, ...] | None = None,
+        chunk_bytes: int = DEFAULT_STORE_CHUNK_BYTES,
+        block_size: int = plan_mod.DEFAULT_BLOCK_SIZE,
+        backend: str = "numpy",
+        workers: int = 1,
+        attrs: dict | None = None,
+        error_bound: float | None = None,
+    ) -> dict:
+        """Write ``arr`` as ``nshards`` shard files plus a JSON manifest at
+        ``manifest_path``; returns the manifest dict.
+
+        Chunk ids partition into contiguous balanced ranges, one per shard;
+        every chunk frame carries its GLOBAL sequence number and is
+        byte-identical to the frame :meth:`save` would write, so a sharded
+        store serves exactly the same bytes per chunk as its single-file
+        equivalent.  Shard files land next to the manifest as
+        ``<stem>.shard-NNN.szs`` and each closes with its own
+        ``szx-store-shard`` footer (self-describing even without the
+        manifest).
+        """
+        b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
+                              owner="ArrayStore.save_sharded")
+        arr = np.asarray(arr)
+        if arr.ndim == 0:
+            raise ValueError("0-d arrays are not storable; reshape to (1,)")
+        if arr.size == 0:
+            raise ValueError("empty arrays are not storable")
+        spec = plan_mod.spec_for(arr.dtype)
+        grid = ChunkGrid.for_shape(
+            arr.shape, chunk_shape, itemsize=spec.itemsize,
+            target_bytes=chunk_bytes,
+        )
+        e = plan_mod.resolve_error_bound(arr, b, spec=spec)
+        if not 1 <= nshards <= grid.nchunks:
+            raise ValueError(
+                f"nshards {nshards} out of range [1, {grid.nchunks}] "
+                f"(one shard needs at least one chunk)"
+            )
+        payloads = _chunk_payloads(
+            arr, grid, e, block_size=block_size, backend=backend,
+            workers=workers,
+        )
+        manifest_path = os.fspath(manifest_path)
+        stem = manifest_path[:-5] if manifest_path.endswith(".json") \
+            else manifest_path
+        base = os.path.dirname(manifest_path)
+        bounds = [i * grid.nchunks // nshards for i in range(nshards + 1)]
+        shards: list[dict] = []
+        it = iter(payloads)
+        for si, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+            shard_path = f"{stem}.shard-{si:03d}.szs"
+            frames: list[list[int]] = []
+            with open(shard_path, "wb") as f:
+                written = 0
+                for cid in range(lo, hi):
+                    # global seq; LAST closes each shard's frame sequence
+                    frame = container.build_frame(
+                        next(it), cid, last=cid == hi - 1
+                    )
+                    frames.append([
+                        written, len(frame),
+                        grid.chunk_elements(grid.chunk_coord(cid)),
+                    ])
+                    f.write(frame)
+                    written += len(frame)
+                f.write(container.build_index_footer(
+                    format_mod.build_shard_index(
+                        grid, spec.code, block_size, e, (lo, hi), frames, attrs
+                    )
+                ))
+            shards.append({
+                "file": os.path.relpath(shard_path, base) if base
+                else os.path.basename(shard_path),
+                "chunks": [lo, hi],
+                "frames": frames,
+            })
+        man = format_mod.build_store_manifest(
+            grid, spec.code, block_size, e, shards, attrs
+        )
+        with open(manifest_path, "w") as f:
+            json.dump(man, f)
+        return man
+
+    @staticmethod
     def open(
-        path_or_file, *, backend: str = "numpy", device: bool = False
+        path_or_file, *, backend: str = "numpy", device: bool = False,
+        cache=None, cache_ns: str | None = None,
     ) -> "CompressedArray":
         """Open a store stream lazily: reads ONLY the index footer.
 
-        ``device=True`` opts ROI reads into the device-resident range decode
-        (one ``jax.device_put`` of prefix+mid bytes per touched chunk, fused
-        on-device unpack+compose -- see ``codec.device.decode_range``);
-        requires a device backend ('jax'/'kernel').
+        A ``*.json`` path (or a parsed manifest dict) opens a SHARDED store:
+        the manifest alone carries every frame byte range, so no shard file
+        is read until a chunk is actually decoded.  ``device=True`` opts ROI
+        reads into the device-resident range decode (one ``jax.device_put``
+        of prefix+mid bytes per touched chunk, fused on-device
+        unpack+compose -- see ``codec.device.decode_range``); requires a
+        device backend ('jax'/'kernel').  ``cache`` (a mapping-like object
+        with ``get(key)``/``put(key, value, nbytes)``, e.g.
+        ``repro.serve.service.cache.LRUBytesCache``) memoizes decoded chunk
+        ranges under namespace ``cache_ns``.
         """
+        if isinstance(path_or_file, dict):
+            return ArrayStore._open_manifest(
+                path_or_file, base=".", backend=backend, device=device,
+                cache=cache, cache_ns=cache_ns or "<manifest>",
+            )
+        if isinstance(path_or_file, (str, os.PathLike)) \
+                and os.fspath(path_or_file).endswith(".json"):
+            path = os.fspath(path_or_file)
+            with open(path) as f:
+                man = json.load(f)
+            return ArrayStore._open_manifest(
+                man, base=os.path.dirname(path) or ".", backend=backend,
+                device=device, cache=cache, cache_ns=cache_ns or path,
+            )
         f, own = _as_file(path_or_file, "rb")
         try:
             idx = container.read_index_footer(f)
@@ -126,10 +239,51 @@ class ArrayStore:
             )
         try:
             return CompressedArray(
-                f, idx, backend=backend, own_file=own, device=device
+                f, idx, backend=backend, own_file=own, device=device,
+                cache=cache,
+                cache_ns=cache_ns if cache_ns is not None
+                else str(path_or_file),
             )
         except Exception:
             if own:
+                f.close()
+            raise
+
+    @staticmethod
+    def _open_manifest(man: dict, *, base: str, backend: str, device: bool,
+                       cache, cache_ns: str) -> "CompressedArray":
+        grid, spec, block_size, e, shards = \
+            format_mod.validate_store_manifest(man)
+        files: list = []
+        frame_src: list[int] = []
+        frames: list[list[int]] = []
+        try:
+            for si, sh in enumerate(shards):
+                loc = sh["file"]
+                if "://" in str(loc):
+                    raise ValueError(
+                        f"shard {si} lives at {loc!r}: remote shards are "
+                        "served by the store service (which proxies or "
+                        "redirects); ArrayStore.open needs local files"
+                    )
+                files.append(open(os.path.join(base, str(loc)), "rb"))
+                frames.extend(sh["frames"])
+                frame_src.extend([si] * len(sh["frames"]))
+        except Exception:
+            for f in files:
+                f.close()
+            raise
+        idx = format_mod.build_store_index(
+            grid, spec.code, block_size, e, frames, man.get("attrs")
+        )
+        try:
+            return CompressedArray(
+                files[0], idx, backend=backend, own_file=True, device=device,
+                shard_files=files, frame_src=frame_src,
+                cache=cache, cache_ns=cache_ns,
+            )
+        except Exception:
+            for f in files:
                 f.close()
             raise
 
@@ -138,6 +292,24 @@ def _as_file(path_or_file, fallback_mode):
     if isinstance(path_or_file, (str, os.PathLike)):
         return open(path_or_file, fallback_mode), True
     return path_or_file, False
+
+
+def _chunk_payloads(arr, grid: ChunkGrid, e: float, *, block_size: int,
+                    backend: str, workers: int) -> Iterator[bytes]:
+    """Compressed payload per chunk id, in id order (shared by save and
+    save_sharded, so both write bit-identical per-chunk payloads)."""
+    codec = SZxCodec(block_size=block_size, backend=backend, workers=workers)
+
+    def payload(cid: int) -> bytes:
+        coord = grid.chunk_coord(cid)
+        box = tuple(slice(lo, hi) for lo, hi in grid.chunk_box(coord))
+        chunk = np.ascontiguousarray(arr[box]).reshape(-1)
+        return codec.compress(chunk, e)
+
+    cids = range(grid.nchunks)
+    if workers > 1 and grid.nchunks > 1:
+        return _imap_ordered(payload, cids, workers)
+    return map(payload, cids)
 
 
 class CompressedArray:
@@ -153,7 +325,10 @@ class CompressedArray:
     """
 
     def __init__(self, fileobj, idx: dict, *, backend: str = "numpy",
-                 own_file: bool = False, device: bool = False):
+                 own_file: bool = False, device: bool = False,
+                 shard_files: list | None = None,
+                 frame_src: list[int] | None = None,
+                 cache=None, cache_ns: str = ""):
         grid, spec, block_size, e = format_mod.validate_store_index(idx)
         if device:
             from repro.kernels import ops
@@ -164,6 +339,8 @@ class CompressedArray:
                     f"got {backend!r}"
                 )
         self._f = fileobj
+        self._files = list(shard_files) if shard_files is not None else [fileobj]
+        self._frame_src = frame_src    # None -> every frame lives in _files[0]
         self._grid = grid
         self._spec = spec
         self._block_size = block_size
@@ -173,7 +350,15 @@ class CompressedArray:
         self._own = own_file
         self._device = device
         self._closed = False
+        self._cache = cache
+        self._cache_ns = cache_ns
         self.attrs = dict(idx.get("attrs") or {})
+
+    def _src(self, cid: int):
+        """File object holding chunk ``cid``'s frame (sharded stores map
+        chunk ranges to shard files; frame offsets are file-local)."""
+        return self._files[self._frame_src[cid]] if self._frame_src \
+            else self._files[0]
 
     # ------------------------------------------------------------- metadata
     @property
@@ -224,7 +409,8 @@ class CompressedArray:
         if not self._closed:
             self._closed = True
             if self._own:
-                self._f.close()
+                for f in self._files:
+                    f.close()
 
     def __enter__(self) -> "CompressedArray":
         return self
@@ -268,9 +454,24 @@ class CompressedArray:
         values with the final block's padding clipped.  With ``device=True``
         the prefix+mid bytes go through the device-resident range decode
         (the host section parse stays, but only for disk-offset planning).
+        An attached ``cache`` memoizes the decoded range (read-only arrays,
+        keyed by namespace + chunk + block range).
         """
+        if self._cache is not None:
+            key = (self._cache_ns, cid, lo_b, hi_b)
+            hit = self._cache.get(key)
+            if hit is not None:
+                return hit
+            seg = np.asarray(self._decode_chunk_range_uncached(cid, lo_b, hi_b))
+            seg.setflags(write=False)       # cached values are shared
+            self._cache.put(key, seg, seg.nbytes)
+            return seg
+        return self._decode_chunk_range_uncached(cid, lo_b, hi_b)
+
+    def _decode_chunk_range_uncached(self, cid: int, lo_b: int,
+                                     hi_b: int) -> np.ndarray:
         off, length, elements = (int(v) for v in self._frames[cid])
-        f = self._f
+        f = self._src(cid)
         _flags, plen, sheader = container.read_frame_stream_header_at(f, off, cid)
         if container.FRAME_HEADER.size + plen != length:
             raise ValueError("corrupt store index (frame length mismatch)")
@@ -319,9 +520,15 @@ class CompressedArray:
         + e) per non-constant block; exact when every block is constant).
         """
         self._check_open()
+        locs = None
+        if self._frame_src is not None:
+            locs = [
+                (self._src(seq), seq, int(fr[0]), int(fr[1]), int(fr[2]))
+                for seq, fr in enumerate(self._frames)
+            ]
         return query_mod.scan_frames(
             self._f, self._frames, backend=self._backend,
-            header_only=header_only,
+            header_only=header_only, locs=locs,
         )
 
     def mean(self) -> float:

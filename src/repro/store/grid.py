@@ -20,6 +20,31 @@ from typing import Iterator
 DEFAULT_CHUNK_TARGET_BYTES = 2 << 20
 
 
+def parse_roi(text: str | None):
+    """'0:16,:,3' -> an N-d index tuple (step-1 slices and ints only).
+
+    The ONE textual ROI parser, shared by the CLI and the HTTP service
+    (promoted out of ``store.__main__`` so library code never imports a
+    CLI module).
+    """
+    if text is None or text.strip() in ("", "..."):
+        return Ellipsis
+    out = []
+    for part in text.split(","):
+        part = part.strip()
+        if part == "...":
+            out.append(Ellipsis)
+        elif ":" in part:
+            fields = part.split(":")
+            if len(fields) > 3:
+                raise ValueError(f"bad ROI slice {part!r}")
+            vals = [int(v) if v else None for v in fields]
+            out.append(slice(*vals))
+        else:
+            out.append(int(part))
+    return tuple(out)
+
+
 def default_chunk_shape(
     shape: tuple[int, ...], itemsize: int,
     target_bytes: int = DEFAULT_CHUNK_TARGET_BYTES,

@@ -124,13 +124,19 @@ def _valid_counts(n: int, nb: int, bs: int) -> np.ndarray:
 
 
 def scan_frames(f, frames, *, backend: str = "numpy",
-                header_only: bool = False) -> QueryStats:
+                header_only: bool = False, locs=None) -> QueryStats:
     """Aggregate stats over an indexed frame sequence (store or chunked
     stream): ``frames`` is the footer's ``[offset, length, elements]`` list.
-    See the module docstring for the two tiers."""
+    ``locs`` overrides the frame locations for multi-file (sharded) stores:
+    an iterable of ``(fileobj, seq, offset, length, elements)``.  See the
+    module docstring for the two tiers."""
+    if locs is None:
+        locs = (
+            (f, seq, int(fr[0]), int(fr[1]), int(fr[2]))
+            for seq, fr in enumerate(frames)
+        )
     acc = _Acc()
-    for seq, fr in enumerate(frames):
-        off, length, elements = int(fr[0]), int(fr[1]), int(fr[2])
+    for f, seq, off, length, elements in locs:
         spec, bs, n, e, const, mu, reqlen_nc, plen = _frame_meta(f, off, length, seq)
         if n != elements:
             raise ValueError(

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.core.codec.plan import Bound
 from repro.core.codec.tree import TreeCodec
 
 
@@ -30,7 +31,7 @@ def _tree(seed=0):
 
 
 def test_crash_mid_save_keeps_previous_step_restorable(tmp_path, monkeypatch):
-    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-4)
+    m = CheckpointManager(str(tmp_path), compress=True, bound=Bound.rel(1e-4))
     t0 = _tree(0)
     m.save(0, t0)
     assert m.all_steps() == [0]
@@ -84,7 +85,7 @@ def test_gc_deletes_only_committed_steps(tmp_path):
 
 
 def test_integer_leaves_roundtrip_raw_bit_exact(tmp_path):
-    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-2)
+    m = CheckpointManager(str(tmp_path), compress=True, bound=Bound.rel(1e-2))
     t = _tree(7)
     m.save(0, t)
     with open(tmp_path / "step_000000000" / "MANIFEST.json") as f:
@@ -100,7 +101,7 @@ def test_integer_leaves_roundtrip_raw_bit_exact(tmp_path):
 
 
 def test_manifest_v2_single_stream_and_partial_restore(tmp_path):
-    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-4)
+    m = CheckpointManager(str(tmp_path), compress=True, bound=Bound.rel(1e-4))
     t = _tree(11)
     m.save(0, t)
     d = tmp_path / "step_000000000"
@@ -131,7 +132,7 @@ def test_v1_checkpoint_layout_still_restores(tmp_path):
         arr = np.asarray(arr)
         fn = f"{i:05d}.bin"
         if name == "w":
-            data = codec.compress(arr, 1e-4, mode="rel")
+            data = codec.compress(arr, Bound.rel(1e-4))
             leaf_codec = "szx"
         else:
             data = arr.tobytes()
@@ -146,7 +147,7 @@ def test_v1_checkpoint_layout_still_restores(tmp_path):
         json.dumps({"step": 5, "time": 0.0, "leaves": leaves})
     )
     (d / "_COMMITTED").write_text("ok")
-    m = CheckpointManager(str(tmp_path), compress=True, error_bound=1e-4)
+    m = CheckpointManager(str(tmp_path), compress=True, bound=Bound.rel(1e-4))
     restored, step = m.restore(t)
     assert step == 5
     assert int(restored["step"]) == 5
@@ -176,7 +177,7 @@ def test_restore_leaf_slice_reads_only_intersecting_frames(tmp_path):
     """Store-backed sliced restore: leading-axis rows of a leaf come back
     bound-respecting, and only the frames covering those rows are read."""
     m = CheckpointManager(
-        str(tmp_path), keep=1, compress=True, error_bound=1e-5, mode="rel",
+        str(tmp_path), keep=1, compress=True, bound=Bound.rel(1e-5),
         chunk_bytes=1 << 18,           # force several frames per big leaf
     )
     rng = np.random.default_rng(7)

@@ -58,7 +58,7 @@ def _golden_cases():
         np.sin(t) * np.exp(-t / 20), 1e-3, backend="numpy"
     )
     yield "walk_bs64_rel1e-3", szx.compress(
-        walk, 1e-3, mode="rel", block_size=64, backend="numpy"
+        walk, plan.Bound.rel(1e-3), block_size=64, backend="numpy"
     )
     yield "const_bs128", szx.compress(np.full(1000, 7.5, np.float32), 1e-3, backend="numpy")
     yield "spiky_bs32_abs1e-5", szx.compress(spiky, 1e-5, block_size=32, backend="numpy")
@@ -103,9 +103,9 @@ def test_chunked_roundtrip_and_per_chunk_bit_exactness():
 def test_chunked_rel_mode_matches_monolithic_resolution():
     """'rel' resolves the bound over the FULL array, not per chunk."""
     x = _walk(300_000, seed=2, scale=1.0)
-    frames = list(CODEC.compress_chunked(x, 1e-3, mode="rel", chunk_bytes=1 << 19))
+    frames = list(CODEC.compress_chunked(x, plan.Bound.rel(1e-3), chunk_bytes=1 << 19))
     hdr_e = [container.HEADER.unpack_from(p, 0)[5] for p in container.iter_frames(frames)]
-    e_mono = container.HEADER.unpack_from(CODEC.compress(x, 1e-3, mode="rel"), 0)[5]
+    e_mono = container.HEADER.unpack_from(CODEC.compress(x, plan.Bound.rel(1e-3)), 0)[5]
     assert all(e == e_mono for e in hdr_e)
     y = CODEC.decompress_chunked(frames)
     assert np.abs(x - y).max() <= e_mono
@@ -447,7 +447,7 @@ def test_checkpoint_chunked_large_leaf(tmp_path):
     from repro.checkpoint import CheckpointManager
 
     m = CheckpointManager(
-        str(tmp_path), keep=1, compress=True, error_bound=1e-5, mode="rel",
+        str(tmp_path), keep=1, compress=True, bound=plan.Bound.rel(1e-5),
         chunk_bytes=1 << 18,       # force the chunked path at test sizes
     )
     tree = {

@@ -153,8 +153,8 @@ def test_checkpoint_workers_bytes_identical(tmp_path):
     outs = {}
     for workers in (1, 3):
         m = CheckpointManager(
-            str(tmp_path / f"w{workers}"), compress=True, error_bound=1e-4,
-            mode="rel", chunk_bytes=1 << 17, workers=workers,
+            str(tmp_path / f"w{workers}"), compress=True,
+            bound=plan.Bound.rel(1e-4), chunk_bytes=1 << 17, workers=workers,
         )
         m.save(0, tree)
         stream = tmp_path / f"w{workers}" / "step_000000000" / "tree.szt"

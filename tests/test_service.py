@@ -1,0 +1,411 @@
+"""Service-tier and repro.api tests.
+
+Covers the production store service (decoded-chunk LRU cache under
+concurrent readers, ETag/If-None-Match/304, Range/206/416 over compressed
+bytes, sharded-vs-single-file byte identity, /info revalidation, quotas)
+and the unified ``Bound`` error-bound surface (new API warning-free,
+legacy kwargs warn AND stay golden-byte identical).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import io
+import json
+import os
+import threading
+import urllib.error
+import urllib.request
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import ArrayStore, Bound, SZxCodec, TreeCodec, compress
+from repro.core.codec import container
+from repro.serve.service.app import HttpServer, _parse_range
+from repro.serve.service.cache import LRUBytesCache
+from repro.serve.store_service import make_server, make_service
+
+
+# --------------------------------------------------------------------- helpers
+def _data(shape=(40, 64), seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class _Client:
+    """Tiny urllib client returning (status, headers, body) for any status."""
+
+    class _NoRedirect(urllib.request.HTTPRedirectHandler):
+        def redirect_request(self, *a, **kw):
+            return None
+
+    def __init__(self, server):
+        host, port = server.server_address
+        self.base = f"http://{host}:{port}"
+        self.opener = urllib.request.build_opener(self._NoRedirect)
+
+    def get(self, path, headers=None, method="GET"):
+        req = urllib.request.Request(self.base + path, headers=headers or {},
+                                     method=method)
+        try:
+            with self.opener.open(req, timeout=30) as r:
+                return r.status, dict(r.headers), r.read()
+        except urllib.error.HTTPError as err:
+            return err.code, dict(err.headers), err.read()
+
+
+@pytest.fixture
+def served(tmp_path):
+    """A running server over one single-file store; yields (client, paths)."""
+    x = _data()
+    szs = tmp_path / "a.szs"
+    ArrayStore.save(str(szs), x, Bound.abs(1e-3), chunk_shape=(8, 64))
+    srv = make_server(str(szs), port=0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    try:
+        yield _Client(srv), {"szs": str(szs), "x": x, "service": srv.service,
+                             "tmp": tmp_path}
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# ------------------------------------------------------------- cache + threads
+def test_concurrent_readers_byte_identical_and_cached(served):
+    """N threads x mixed ROIs: every response byte-identical to a direct
+    ArrayStore read, and the shared decoded-chunk cache registers hits."""
+    client, ctx = served
+    rois = ["0:8,0:64", "4:20,8:40", "5:13,0:32", "32:40,0:16", ":,:"]
+    with ArrayStore.open(ctx["szs"]) as ca:
+        from repro.store.grid import parse_roi
+        direct = {roi: ca[parse_roi(roi)].tobytes() for roi in rois}
+
+    def fetch(i):
+        roi = rois[i % len(rois)]
+        status, _h, body = client.get(f"/v1/stores/default/read?roi={roi}")
+        assert status == 200
+        return roi, body
+
+    with concurrent.futures.ThreadPoolExecutor(max_workers=8) as pool:
+        for roi, body in pool.map(fetch, range(40)):
+            assert body == direct[roi]
+
+    stats = ctx["service"].cache.stats()
+    assert stats["hits"] > 0, stats
+    assert stats["misses"] > 0
+
+
+def test_tiny_cache_budget_evicts_but_stays_correct(tmp_path):
+    """A cache budget far below the working set must thrash (evictions > 0)
+    without ever corrupting a response."""
+    x = _data()
+    szs = tmp_path / "a.szs"
+    ArrayStore.save(str(szs), x, Bound.abs(1e-3), chunk_shape=(8, 64))
+    srv = make_server(str(szs), port=0, cache_bytes=2048)  # < one chunk
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    client = _Client(srv)
+    try:
+        with ArrayStore.open(str(szs)) as ca:
+            want = ca[(slice(0, 40), slice(0, 64))].tobytes()
+        for _ in range(6):
+            status, _h, body = client.get("/v1/stores/default/read?roi=:,:")
+            assert status == 200 and body == want
+        stats = srv.service.cache.stats()
+        assert stats["bytes"] <= 2048
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_lru_cache_unit():
+    c = LRUBytesCache(max_bytes=100)
+    c.put("a", b"x", 60)
+    c.put("b", b"y", 60)             # evicts a
+    assert c.get("a") is None and c.get("b") == b"y"
+    assert c.evictions == 1
+    c.put("huge", b"z", 1000)        # over budget: rejected, no thrash
+    assert len(c) == 1 and c.get("b") == b"y"
+    s = c.stats()
+    assert s["hits"] == 2 and s["misses"] == 1
+
+
+# ------------------------------------------------------------------ ETag/Range
+def test_etag_if_none_match_304(served):
+    client, _ctx = served
+    s1, h1, b1 = client.get("/v1/stores/default/info")
+    assert s1 == 200
+    etag = h1["ETag"]
+    assert etag.startswith('"') and etag.endswith('"')
+    # stable across requests and routes
+    s2, h2, _ = client.get("/v1/stores/default/read?roi=0:8,0:8")
+    assert h2["ETag"] == etag
+    # If-None-Match -> 304, empty body
+    for route in ("/v1/stores/default/info", "/v1/stores/default/read?roi=:,:",
+                  "/v1/stores/default/raw", "/v1/stores/default/chunk/0"):
+        s, h, b = client.get(route, {"If-None-Match": etag})
+        assert (s, b) == (304, b""), route
+        assert h["ETag"] == etag
+    # wildcard and list forms
+    s, _, _ = client.get("/v1/stores/default/info", {"If-None-Match": "*"})
+    assert s == 304
+    s, _, _ = client.get("/v1/stores/default/info",
+                         {"If-None-Match": f'"nope", {etag}'})
+    assert s == 304
+    # mismatching validator -> 200
+    s, _, _ = client.get("/v1/stores/default/info", {"If-None-Match": '"x"'})
+    assert s == 200
+
+
+def test_raw_range_conformance(served):
+    client, _ctx = served
+    s, h, full = client.get("/v1/stores/default/raw")
+    assert s == 200 and h["Accept-Ranges"] == "bytes"
+    size = len(full)
+    s, h, part = client.get("/v1/stores/default/raw",
+                            {"Range": "bytes=10-29"})
+    assert s == 206 and part == full[10:30]
+    assert h["Content-Range"] == f"bytes 10-29/{size}"
+    # open-ended and suffix forms
+    s, _, part = client.get("/v1/stores/default/raw",
+                            {"Range": f"bytes={size - 7}-"})
+    assert s == 206 and part == full[-7:]
+    s, _, part = client.get("/v1/stores/default/raw", {"Range": "bytes=-16"})
+    assert s == 206 and part == full[-16:]
+    # unsatisfiable -> 416 with the total size
+    s, h, _ = client.get("/v1/stores/default/raw",
+                         {"Range": f"bytes={size}-"})
+    assert s == 416 and h["Content-Range"] == f"bytes */{size}"
+    # malformed -> 400
+    s, _, _ = client.get("/v1/stores/default/raw", {"Range": "bytes=5-2,9-"})
+    assert s == 400
+
+
+def test_parse_range_unit():
+    assert _parse_range("bytes=0-9", 100) == (0, 9)
+    assert _parse_range("bytes=90-", 100) == (90, 99)
+    assert _parse_range("bytes=-10", 100) == (90, 99)
+    assert _parse_range("bytes=0-1000", 100) == (0, 99)
+    assert _parse_range("bytes=100-", 100) == (None, None)
+    assert _parse_range("bytes=-0", 100) == (None, None)
+    with pytest.raises(ValueError):
+        _parse_range("lines=0-9", 100)
+    with pytest.raises(ValueError):
+        _parse_range("bytes=1-2,4-5", 100)
+
+
+# ------------------------------------------------------------------- sharding
+def test_sharded_store_serves_same_bytes_as_single_file(tmp_path):
+    """Pinned: a 2-shard store answers every route with the same content as
+    its single-file equivalent (frame payloads identical; only the per-shard
+    LAST flag in the frame header may differ)."""
+    x = _data((40, 64), seed=3)
+    szs = tmp_path / "one.szs"
+    man = tmp_path / "two.json"
+    ArrayStore.save(str(szs), x, Bound.abs(1e-3), chunk_shape=(8, 64))
+    ArrayStore.save_sharded(str(man), x, Bound.abs(1e-3), nshards=2,
+                            chunk_shape=(8, 64))
+    assert sorted(p.name for p in tmp_path.glob("two.shard-*.szs")) == \
+        ["two.shard-000.szs", "two.shard-001.szs"]
+
+    service = make_service(str(szs))
+    service.add_store("sharded", str(man))
+    srv = HttpServer(service, "127.0.0.1", 0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    client = _Client(srv)
+    try:
+        for roi in (":,:", "0:8,0:64", "7:25,3:61", "39:40,63:64"):
+            s1, h1, b1 = client.get(f"/v1/stores/default/read?roi={roi}")
+            s2, h2, b2 = client.get(f"/v1/stores/sharded/read?roi={roi}")
+            assert (s1, s2) == (200, 200)
+            assert b1 == b2, roi
+            assert h1["X-Shape"] == h2["X-Shape"]
+        # compressed-domain stats agree
+        _, _, st1 = client.get("/v1/stores/default/stats")
+        _, _, st2 = client.get("/v1/stores/sharded/stats")
+        assert json.loads(st1) == json.loads(st2)
+        # per-chunk frames: payload bytes identical, LAST flag may differ
+        hs = container.FRAME_HEADER.size
+        with ArrayStore.open(str(szs)) as ca:
+            nchunks = ca.nchunks
+        for cid in range(nchunks):
+            s1, _, c1 = client.get(f"/v1/stores/default/chunk/{cid}")
+            s2, _, c2 = client.get(f"/v1/stores/sharded/chunk/{cid}")
+            assert (s1, s2) == (200, 200) and c1[hs:] == c2[hs:], cid
+        # shard raw endpoints exist and concatenate to all frames
+        _, _, sh0 = client.get("/v1/stores/sharded/raw?shard=0")
+        _, _, sh1 = client.get("/v1/stores/sharded/raw?shard=1")
+        assert len(sh0) > 0 and len(sh1) > 0
+        s, _, _ = client.get("/v1/stores/sharded/raw?shard=9")
+        assert s == 400
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_sharded_open_direct_matches_array(tmp_path):
+    """ArrayStore.open on a manifest reconstructs the array exactly like the
+    single-file store does."""
+    x = _data((17, 33), seed=5)
+    man = tmp_path / "m.json"
+    ArrayStore.save_sharded(str(man), x, Bound.abs(1e-3), nshards=3,
+                            chunk_shape=(4, 33))
+    szs = tmp_path / "one.szs"
+    ArrayStore.save(str(szs), x, Bound.abs(1e-3), chunk_shape=(4, 33))
+    with ArrayStore.open(str(man)) as sharded, ArrayStore.open(str(szs)) as one:
+        np.testing.assert_array_equal(sharded[:, :], one[:, :])
+        assert sharded.stats().to_dict() == one.stats().to_dict()
+
+
+def test_remote_shard_chunk_redirects(tmp_path):
+    """Chunks owned by a remote (URL) shard answer 307 with the frame's byte
+    range in headers; local shards still serve bytes."""
+    x = _data((40, 64), seed=7)
+    man_path = tmp_path / "m.json"
+    ArrayStore.save_sharded(str(man_path), x, Bound.abs(1e-3), nshards=2,
+                            chunk_shape=(8, 64))
+    man = json.loads(man_path.read_text())
+    man["shards"][1]["file"] = "https://shards.example/two.shard-001.szs"
+    man_path.write_text(json.dumps(man))
+
+    service = make_service()
+    service.add_store("s", str(man_path))
+    service.default_store = "s"
+    srv = HttpServer(service, "127.0.0.1", 0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    client = _Client(srv)
+    try:
+        s, _, _ = client.get("/v1/stores/s/chunk/0")
+        assert s == 200
+        lo = man["shards"][1]["chunks"][0]
+        off, length, _elems = man["shards"][1]["frames"][0]
+        s, h, _ = client.get(f"/v1/stores/s/chunk/{lo}")
+        assert s == 307
+        assert h["Location"] == "https://shards.example/two.shard-001.szs"
+        assert (int(h["X-Chunk-Offset"]), int(h["X-Chunk-Length"])) == \
+            (off, length)
+        # raw for the remote shard also redirects
+        s, h, _ = client.get("/v1/stores/s/raw?shard=1")
+        assert s == 307 and "Location" in h
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# ------------------------------------------------------- revalidation + quotas
+def test_info_served_from_current_file_and_410_when_gone(served):
+    client, ctx = served
+    s, h, b = client.get("/v1/stores/default/info")
+    etag = h["ETag"]
+    assert json.loads(b)["shape"] == [40, 64]
+    # replace the file: metadata and ETag change on the next request
+    x2 = _data((16, 64), seed=9)
+    tmp = ctx["szs"] + ".tmp"
+    ArrayStore.save(tmp, x2, Bound.abs(1e-3), chunk_shape=(8, 64))
+    os.replace(tmp, ctx["szs"])
+    s, h, b = client.get("/v1/stores/default/info")
+    assert s == 200 and json.loads(b)["shape"] == [16, 64]
+    assert h["ETag"] != etag
+    # reads serve the NEW bytes
+    s, _, body = client.get("/v1/stores/default/read?roi=:,:")
+    with ArrayStore.open(ctx["szs"]) as ca:
+        assert body == ca[:, :].tobytes()
+    # vanished file -> 410 JSON envelope (both API generations)
+    os.remove(ctx["szs"])
+    s, _, b = client.get("/v1/stores/default/info")
+    assert s == 410 and json.loads(b)["error"]["code"] == 410
+    s, _, _ = client.get("/info")
+    assert s == 410
+
+
+def test_tenant_quota_429(served):
+    client, ctx = served
+    ctx["service"].registry.set_quota("t1", max_requests=3)
+    for _ in range(3):
+        s, _, _ = client.get("/v1/", {"X-Tenant": "t1"})
+        assert s == 200
+    s, _, b = client.get("/v1/", {"X-Tenant": "t1"})
+    assert s == 429 and json.loads(b)["error"]["code"] == 429
+    # other tenants unaffected
+    s, _, _ = client.get("/v1/", {"X-Tenant": "t2"})
+    assert s == 200
+    # byte quotas meter response bytes
+    ctx["service"].registry.set_quota("t3", max_bytes=64)
+    client.get("/v1/stores/default/read?roi=:,:", {"X-Tenant": "t3"})
+    s, _, _ = client.get("/v1/", {"X-Tenant": "t3"})
+    assert s == 429
+
+
+def test_metrics_and_errors(served):
+    client, _ctx = served
+    client.get("/v1/stores/default/read?roi=0:2,0:2")
+    s, _, b = client.get("/v1/metrics")
+    m = json.loads(b)
+    assert m["requests"] >= 1 and "cache" in m
+    assert "/v1/stores/default/read" in m["by_route"]
+    lat = m["latency"]["/v1/stores/default/read"]
+    assert lat["count"] >= 1 and lat["p99_ms"] >= lat["p50_ms"] >= 0.0
+    # error envelopes
+    s, _, b = client.get("/v1/stores/nope/info")
+    assert s == 404 and json.loads(b)["error"]["code"] == 404
+    s, _, b = client.get("/v1/stores/default/read?roi=bogus")
+    assert s == 400 and "error" in json.loads(b)
+    s, _, b = client.get("/nope")
+    assert s == 404 and json.loads(b) == {"error": "unknown path /nope"}
+    s, _, b = client.get("/v1/", method="PUT")
+    assert s == 405
+
+
+def test_head_requests(served):
+    client, _ctx = served
+    s, h, b = client.get("/info", method="HEAD")
+    assert s == 200 and b == b"" and int(h["Content-Length"]) > 0
+
+
+# --------------------------------------------------------------- Bound surface
+def test_bound_constructors_and_parse():
+    assert Bound.abs(1e-3) == Bound(1e-3, "abs")
+    assert Bound.rel(1e-4) == Bound(1e-4, "rel")
+    assert Bound.parse("1e-3") == Bound.abs(1e-3)
+    assert Bound.parse("abs:1e-3") == Bound.abs(1e-3)
+    assert Bound.parse("rel:1e-4") == Bound.rel(1e-4)
+    assert str(Bound.rel(1e-4)) == "rel:0.0001"
+    with pytest.raises(ValueError):
+        Bound(0.0, "abs")
+    with pytest.raises(ValueError):
+        Bound(1e-3, "relative")
+    with pytest.raises(ValueError):
+        Bound.parse("pct:1")
+
+
+def test_new_api_is_warning_free_and_legacy_warns_identically(tmp_path):
+    """Every consumer accepts Bound with zero DeprecationWarnings; the old
+    (error_bound, mode=) kwargs warn AND produce byte-identical output."""
+    x = _data((100,), seed=11).astype(np.float32)
+    codec = SZxCodec(block_size=64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        new = codec.compress(x, Bound.abs(1e-3))
+        new_mod = compress(x, Bound.abs(1e-3), block_size=64)
+        tc = TreeCodec(codec=codec, bound=Bound.rel(1e-4), chunk_bytes=1 << 20)
+        buf_new = io.BytesIO()
+        tc.compress_tree({"w": x}, buf_new)
+        szs_new = tmp_path / "new.szs"
+        ArrayStore.save(str(szs_new), x.reshape(10, 10), Bound.abs(1e-3))
+    with pytest.warns(DeprecationWarning):
+        old = codec.compress(x, error_bound=1e-3)
+    assert old == new == new_mod
+    with pytest.warns(DeprecationWarning):
+        tc_old = TreeCodec(codec=codec, error_bound=1e-4, mode="rel",
+                           chunk_bytes=1 << 20)
+    buf_old = io.BytesIO()
+    tc_old.compress_tree({"w": x}, buf_old)
+    assert buf_old.getvalue() == buf_new.getvalue()
+    with pytest.warns(DeprecationWarning):
+        szs_old = tmp_path / "old.szs"
+        ArrayStore.save(str(szs_old), x.reshape(10, 10), 1e-3, mode="abs")
+    assert szs_old.read_bytes() == szs_new.read_bytes()

@@ -129,7 +129,7 @@ def test_block_range_for_box_is_tight_for_slabs():
 
 def test_roundtrip_and_roi_reads_match_numpy():
     x = _walk(64 * 48 * 32, seed=1).reshape(64, 48, 32)
-    buf, idx = _store(x, 1e-3, mode="rel", chunk_shape=(16, 48, 32))
+    buf, idx = _store(x, plan.Bound.rel(1e-3), chunk_shape=(16, 48, 32))
     e = idx["e"]
     with ArrayStore.open(buf) as ca:
         assert ca.shape == x.shape and ca.dtype == x.dtype and ca.ndim == 3
@@ -227,7 +227,7 @@ def test_acceptance_roi_read_is_byte_proportional():
     x = x.reshape(256, 256, 256)
     assert x.nbytes >= 64 << 20
     buf = io.BytesIO()
-    idx = ArrayStore.save(buf, x, 1e-3, mode="rel", workers=2)
+    idx = ArrayStore.save(buf, x, plan.Bound.rel(1e-3), workers=2)
     end = buf.seek(0, 2)
     frames = idx["frames"]
 
@@ -385,7 +385,7 @@ def test_query_header_only_never_reads_plane_bytes():
     bytes -- pinned by byte coverage; the exact tier on an all-constant
     stream reads no mid bytes either (there are none to read)."""
     x = _walk(100_000, seed=11).reshape(100, 1000)
-    buf, idx = _store(x, 1e-3, mode="rel", chunk_shape=(25, 1000))
+    buf, idx = _store(x, plan.Bound.rel(1e-3), chunk_shape=(25, 1000))
     raw = buf.getvalue()
 
     # per-frame allowed metadata range: frame header + stream header +
@@ -508,7 +508,7 @@ def test_store_http_service(tmp_path):
 
     x = _walk(1 << 14, seed=14).reshape(128, 128)
     szs = tmp_path / "b.szs"
-    idx = ArrayStore.save(str(szs), x, 1e-3, mode="rel")
+    idx = ArrayStore.save(str(szs), x, plan.Bound.rel(1e-3))
     srv = make_server(str(szs), port=0)
     thread = threading.Thread(target=srv.serve_forever, daemon=True)
     thread.start()

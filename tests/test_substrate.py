@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.core.codec.plan import Bound
 from repro.data import CompressedInMemoryCache, DataConfig, SyntheticLM
 from repro.optim import AdamW, warmup_cosine
 from repro.train.trainer import Trainer, TrainerConfig
@@ -47,7 +48,7 @@ def test_checkpoint_keep_k_and_latest(tmp_path):
 
 
 def test_checkpoint_szx_compression_bounded(tmp_path):
-    m = CheckpointManager(str(tmp_path), keep=1, compress=True, error_bound=1e-4)
+    m = CheckpointManager(str(tmp_path), keep=1, compress=True, bound=Bound.rel(1e-4))
     rng = np.random.default_rng(0)
     s = {"w": jnp.asarray(np.cumsum(rng.standard_normal((1 << 14,)), 0).astype(np.float32))}
     m.save(5, s)
@@ -165,7 +166,7 @@ def test_pipeline_deterministic_and_sharded():
 
 
 def test_compressed_inmemory_cache_bound():
-    cache = CompressedInMemoryCache(error_bound=1e-3)
+    cache = CompressedInMemoryCache(Bound.abs(1e-3))
     rng = np.random.default_rng(1)
     x = np.cumsum(rng.standard_normal((256, 128)), axis=1).astype(np.float32)
     cache.put("shard0", x)

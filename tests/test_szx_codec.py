@@ -33,6 +33,7 @@ needs_hypothesis = pytest.mark.skipif(
 )
 
 from repro.core import metrics, szx
+from repro.core.codec.plan import Bound
 
 
 def _roundtrip(x, e, **kw):
@@ -83,7 +84,7 @@ def test_relative_bound_mode(seed, rel):
     rng = np.random.default_rng(seed)
     x = (np.cumsum(rng.standard_normal(3000)) * rng.uniform(0.1, 100)).astype(np.float32)
     e = rel * float(x.max() - x.min())
-    buf, y = _roundtrip(x, rel, mode="rel")
+    buf, y = _roundtrip(x, Bound.rel(rel))
     assert np.abs(x - y).max() <= e * (1 + 1e-6)
 
 
@@ -125,7 +126,7 @@ def test_smooth_data_compresses_well():
     """Paper Table III: smooth fields reach CR >= 4 at REL=1e-2."""
     t = np.linspace(0, 4 * np.pi, 1 << 18).astype(np.float32)
     x = np.sin(t) * np.exp(-t / 20)
-    buf, stats = szx.compress_with_stats(x, 1e-2, mode="rel")
+    buf, stats = szx.compress_with_stats(x, Bound.rel(1e-2))
     assert stats.ratio > 4.0
     y = szx.decompress(buf)
     assert metrics.psnr(x, y) > 40.0
@@ -151,7 +152,7 @@ def test_psnr_tracks_bound():
     x = np.cumsum(rng.standard_normal(1 << 16)).astype(np.float32)
     p = []
     for rel in (1e-2, 1e-3, 1e-4):
-        y = szx.decompress(szx.compress(x, rel, mode="rel"))
+        y = szx.decompress(szx.compress(x, Bound.rel(rel)))
         p.append(metrics.psnr(x, y))
     assert p[0] < p[1] < p[2]          # tighter bound -> higher PSNR
     assert p[0] > 30                   # paper: visually fine at REL 1e-2

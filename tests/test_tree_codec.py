@@ -21,7 +21,7 @@ except ImportError:  # pragma: no cover - ml_dtypes ships with jax
     BF16 = None
 
 CODEC = SZxCodec(backend="numpy")
-TC = TreeCodec(codec=CODEC, error_bound=1e-4, mode="rel", chunk_bytes=1 << 18)
+TC = TreeCodec(codec=CODEC, bound=plan.Bound.rel(1e-4), chunk_bytes=1 << 18)
 
 
 def _walk(n, seed=0, dtype=np.float32, scale=0.01):
@@ -203,8 +203,8 @@ def test_chunked_rel_bound_is_global_even_with_disparate_chunk_ranges():
     lo = _walk(100_000, seed=10, scale=1e-5)          # tiny range
     hi = 1e4 + _walk(100_000, seed=11, scale=10.0)    # huge range, offset
     x = np.concatenate([lo, hi]).astype(np.float32)
-    e_mono = container.HEADER.unpack_from(CODEC.compress(x, 1e-3, mode="rel"), 0)[5]
-    frames = list(CODEC.compress_chunked(x, 1e-3, mode="rel", chunk_bytes=1 << 18))
+    e_mono = container.HEADER.unpack_from(CODEC.compress(x, plan.Bound.rel(1e-3)), 0)[5]
+    frames = list(CODEC.compress_chunked(x, plan.Bound.rel(1e-3), chunk_bytes=1 << 18))
     per = plan.chunk_elements(CODEC.block_size, 1 << 18, 4)
     assert len(frames) > 2
     for i, payload in enumerate(container.iter_frames(frames)):
@@ -228,7 +228,7 @@ def test_tree_codec_rel_bound_is_per_leaf_monolithic():
     by_name = {m["name"]: m for m in manifest["leaves"]}
     for name, arr in tree.items():
         e_mono = container.HEADER.unpack_from(
-            CODEC.compress(arr, 1e-4, mode="rel"), 0
+            CODEC.compress(arr, plan.Bound.rel(1e-4)), 0
         )[5]
         lo_f, hi_f = by_name[name]["frames"]
         assert hi_f - lo_f > 1, "leaf must span multiple frames for this test"
@@ -253,7 +253,7 @@ def test_sharded_encode_restores_identically():
     mesh = jax.sharding.Mesh(
         np.array(jax.devices()).reshape(-1, 1), ("data", "model")
     )
-    tc = TreeCodec(codec=SZxCodec(backend="jax"), error_bound=1e-4, mode="rel")
+    tc = TreeCodec(codec=SZxCodec(backend="jax"), bound=plan.Bound.rel(1e-4))
     bio = io.BytesIO()
     man = tc.compress_tree_sharded(tree, bio, mesh, axis="data")
     bio.seek(0)

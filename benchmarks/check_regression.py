@@ -10,6 +10,10 @@ the baseline:
   * the compression ratio drifted more than ``--max-cr-drift`` (default 1%)
     in either direction.
 
+The ``ingest_windowed`` row additionally carries absolute acceptance gates:
+bytes_read_ratio must stay < 0.2, and on hosts with >=2 cpus the pipelined
+loader must be >=1.5x the serial one (samples/sec).
+
 CR depends on the synthetic input length, so the two files must have been
 produced at the same ``n``; a mismatch is an error (regenerate the baseline
 with the same ``SZX_BENCH_N``).
@@ -86,6 +90,43 @@ def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float
             errors.append(
                 f"{kind}.cr: {f_cr:.4f} drifted more than "
                 f"{max_cr_drift:.0%} from the baseline {b_cr:.4f}"
+            )
+    errors.extend(_check_ingest(new.get("ingest_windowed")))
+    return errors
+
+
+def _check_ingest(row: dict | None) -> list[str]:
+    """Absolute acceptance gates for the streaming-ingest row.
+
+    bytes_read_ratio < 0.2 always (a windowed epoch touching <=10% of the
+    store must not read a fifth of the file); pipeline_speedup >= 1.5 only
+    when the host can actually overlap (>=2 cpus and >=2 ingest workers) --
+    single-core runners can't show the win, so the gate is skipped there.
+    """
+    if not isinstance(row, dict):
+        return []
+    errors: list[str] = []
+    ratio = row.get("bytes_read_ratio")
+    if ratio is None:
+        errors.append("ingest_windowed.bytes_read_ratio: missing from fresh results")
+    elif float(ratio) >= 0.2:
+        errors.append(
+            f"ingest_windowed.bytes_read_ratio: {float(ratio):.4f} is not "
+            "< 0.2 (windowed epoch reads must scale with the windows, "
+            "not the store)"
+        )
+    cpus = int(row.get("cpus", 1))
+    workers = int(row.get("ingest_workers", 1))
+    if cpus >= 2 and workers >= 2:
+        speedup = row.get("pipeline_speedup")
+        if speedup is None:
+            errors.append(
+                "ingest_windowed.pipeline_speedup: missing from fresh results"
+            )
+        elif float(speedup) < 1.5:
+            errors.append(
+                f"ingest_windowed.pipeline_speedup: {float(speedup):.2f}x is "
+                f"below the 1.5x floor (workers={workers}, cpus={cpus})"
             )
     return errors
 

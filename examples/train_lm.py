@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.api import Bound
 from repro.checkpoint import CheckpointManager
-from repro.data import DataConfig, SyntheticLM
+from repro.data import DataConfig, SteppedBatches, StoreLM, SyntheticLM
 from repro.models import transformer as T
 from repro.optim import AdamW, warmup_cosine
 from repro.train.trainer import Trainer, TrainerConfig
@@ -30,6 +30,11 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--data-store", default=None,
+                    help="train from a compressed ArrayStore corpus "
+                         "(path / manifest / service URL) instead of the "
+                         "synthetic stream")
+    ap.add_argument("--data-workers", type=int, default=2)
     args = ap.parse_args()
 
     base = configs.get("llama3.2-1b")
@@ -59,9 +64,17 @@ def main():
         p, o, m = opt.update(grads, state["opt"], state["params"])
         return {"params": p, "opt": o}, {"loss": loss, **m}
 
-    ds = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    if args.data_store:
+        ds = StoreLM(
+            args.data_store, DataConfig(cfg.vocab_size, args.seq, args.batch),
+            workers=args.data_workers,
+        )
+        src = SteppedBatches(lambda s: ds.batches(start_step=s))
+    else:
+        ds = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+        src = ds.batch_at
     batch_fn = lambda step: {  # noqa: E731
-        k: jnp.asarray(v) for k, v in ds.batch_at(step).items()
+        k: jnp.asarray(v) for k, v in src(step).items()
     }
 
     ckpt = CheckpointManager(args.ckpt, keep=2, compress=True, bound=Bound.rel(1e-6))

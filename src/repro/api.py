@@ -12,6 +12,10 @@ re-exported at the top level: ``import repro; repro.SZxCodec``):
   PlanesCodec  -- fixed-shape in-graph codec (gradient / KV-cache planes)
   ArrayStore   -- block-addressable compressed N-d array store (lazy ROI
                   reads, compressed-domain queries, sharded manifests)
+  StoreLoader  -- streaming training ingest: pipelined shuffled-ROI-window
+                  batches over an ArrayStore (file, manifest, or service
+                  URL), bytes read ∝ batch
+  RemoteStore  -- stdlib HTTP client for the store service (remote ROI reads)
   CheckpointManager -- fault-tolerant checkpoints over TreeCodec streams
   compress / decompress / compress_with_stats -- one-shot functional API
 
@@ -47,6 +51,18 @@ def __getattr__(name):
         from repro.checkpoint.manager import CheckpointManager
 
         return CheckpointManager
+    if name == "StoreLoader":
+        from repro.data.store_loader import StoreLoader
+
+        return StoreLoader
+    if name == "StoreLM":
+        from repro.data.store_loader import StoreLM
+
+        return StoreLM
+    if name == "RemoteStore":
+        from repro.serve.client import RemoteStore
+
+        return RemoteStore
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
 
 
@@ -58,6 +74,9 @@ __all__ = [
     "ArrayStore",
     "CompressedArray",
     "CheckpointManager",
+    "StoreLoader",
+    "StoreLM",
+    "RemoteStore",
     "CompressionStats",
     "compress",
     "compress_with_stats",

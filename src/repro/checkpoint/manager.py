@@ -341,6 +341,143 @@ class CheckpointManager:
             return self._codec.decompress(data).reshape(meta["shape"]).astype(dtype)
         return np.frombuffer(data, dtype=dtype).reshape(meta["shape"])
 
+    # ------------------------------------------------- checkpoint <-> store
+    # The convergence half-steps: a training corpus written through the
+    # manager is an ordinary ArrayStore (window-queryable by the ingest
+    # loader, restorable in full), and an SZx-compressed checkpoint leaf is
+    # openable AS a store view without rewriting a byte -- the leaf's chunk
+    # frames inside tree.szt already are store chunk frames.
+
+    def store_path(self, name: str) -> str:
+        if not name or any(c in name for c in "/\\") or name.startswith("."):
+            raise ValueError(f"bad store name {name!r}")
+        return os.path.join(self.root, "stores", f"{name}.szs")
+
+    def save_store(self, name: str, arr, *, bound=None,
+                   chunk_shape: tuple[int, ...] | None = None,
+                   chunk_bytes: int | None = None,
+                   attrs: Optional[dict] = None) -> str:
+        """Write ``arr`` as an ArrayStore under ``<root>/stores/<name>.szs``
+        (tmp + rename, so a crashed writer never corrupts a published
+        corpus); returns the path.  Defaults to the manager's bound and the
+        store's ingest-friendly ~2 MB chunks (NOT the manager's coarse
+        checkpoint chunking)."""
+        from repro.store import ArrayStore
+        from repro.store.grid import DEFAULT_CHUNK_TARGET_BYTES
+
+        path = self.store_path(name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        host = np.asarray(jax.device_get(arr))
+        tmp = path + ".tmp"
+        try:
+            ArrayStore.save(
+                tmp, host, self.bound if bound is None else bound,
+                chunk_shape=chunk_shape,
+                chunk_bytes=chunk_bytes or DEFAULT_CHUNK_TARGET_BYTES,
+                workers=self._codec.workers,
+                attrs=attrs,
+            )
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise
+        return path
+
+    def open_store(self, name: str, **open_kw):
+        """Lazy :class:`repro.store.array.CompressedArray` over a saved
+        corpus (pass ``backend=``/``device=``/``cache=`` through)."""
+        from repro.store import ArrayStore
+
+        return ArrayStore.open(self.store_path(name), **open_kw)
+
+    def restore_store(self, name: str) -> np.ndarray:
+        with self.open_store(name) as ca:
+            return ca[...]
+
+    def stores(self) -> list[str]:
+        d = os.path.join(self.root, "stores")
+        if not os.path.isdir(d):
+            return []
+        return sorted(fn[:-4] for fn in os.listdir(d) if fn.endswith(".szs"))
+
+    def leaf_store(self, name: str, step: Optional[int] = None, *,
+                   backend: str = "numpy"):
+        """Open ONE SZx-compressed checkpoint leaf as a lazy store view.
+
+        Synthesizes a 1-d block-grid index over the leaf's chunk frames in
+        ``tree.szt`` (same container, same per-chunk SZx streams as an
+        ArrayStore file, just with GLOBAL frame sequence numbers -- hence
+        ``seq_base``), so the leaf is ROI/window-queryable through
+        ``CompressedArray`` and ``StoreLoader`` with bytes read ∝ ROI.
+        The view is 1-d over the leaf's C-order flattening; its ``attrs``
+        carry the logical ``leaf_shape``.
+        """
+        from repro.core.codec import container as _c
+        from repro.core.codec import plan as _plan
+        from repro.store import format as _format
+        from repro.store.array import CompressedArray
+        from repro.store.grid import ChunkGrid
+
+        d, manifest = self._step_dir(step)
+        if manifest.get("manifest_version", 1) < 2:
+            raise ValueError(
+                "leaf_store needs a v2 (tree-stream) checkpoint"
+            )
+        by_name = {m["name"]: m for m in manifest["leaves"]}
+        if name not in by_name:
+            raise KeyError(
+                f"leaf {name} not in checkpoint step {manifest['step']}"
+            )
+        meta = by_name[name]
+        if meta["codec"] != "szx":
+            raise ValueError(
+                f"leaf {name} is stored {meta['codec']!r}; only "
+                "szx-compressed leaves are store-viewable (raw-pack leaves "
+                "restore via restore_leaves)"
+            )
+        shape = tuple(int(s) for s in meta["shape"]) or (1,)
+        n = int(np.prod(shape, dtype=np.int64))
+        lo_f, hi_f = (int(v) for v in meta["frames"])
+        frames_all = manifest["frames"]
+        spec = _plan.spec_for(np_dtype_for(meta["dtype"]))
+        f = open(os.path.join(d, manifest["file"]), "rb")
+        try:
+            off0 = int(frames_all[lo_f][0])
+            _flags, _plen, sheader = _c.read_frame_stream_header_at(
+                f, off0, lo_f
+            )
+            _m, _v, _dt, bs, n0, e, _nb, _nnc, _nmid = _c.HEADER.unpack_from(
+                sheader, 0
+            )
+            # tree chunking is uniform except the tail, so the first frame's
+            # element count IS the chunk size of a 1-d grid over the leaf
+            per = n if hi_f - lo_f == 1 else int(n0)
+            grid = ChunkGrid((n,), (min(per, n),))
+            if grid.nchunks != hi_f - lo_f:
+                raise ValueError(
+                    f"leaf {name}: {hi_f - lo_f} frames do not form a "
+                    f"uniform chunk grid ({per} elements/frame over {n})"
+                )
+            frames = []
+            for i in range(lo_f, hi_f):
+                off, length = (int(v) for v in frames_all[i][:2])
+                frames.append([
+                    off, length,
+                    grid.chunk_elements(grid.chunk_coord(i - lo_f)),
+                ])
+            idx = _format.build_store_index(
+                grid, spec.code, int(bs), float(e), frames,
+                {"leaf": name, "leaf_shape": list(shape),
+                 "step": manifest["step"]},
+            )
+            return CompressedArray(
+                f, idx, backend=backend, own_file=True, seq_base=lo_f,
+            )
+        except BaseException:
+            f.close()
+            raise
+
     def stats(self, step: Optional[int] = None) -> dict:
         _, manifest = self._step_dir(step)
         raw = sum(m["raw_bytes"] for m in manifest["leaves"])

@@ -1,3 +1,12 @@
 """Data substrate: synthetic pipelines + SZx-compressed in-memory cache +
-synthetic scientific fields for the compressor benchmarks."""
+store-backed streaming ingest + synthetic scientific fields for the
+compressor benchmarks."""
 from repro.data.pipeline import CompressedInMemoryCache, DataConfig, Prefetcher, SyntheticLM  # noqa: F401
+from repro.data.store_loader import (  # noqa: F401
+    PipelinedBatches,
+    SteppedBatches,
+    StoreLM,
+    StoreLoader,
+    WindowSampler,
+    window_for_values,
+)

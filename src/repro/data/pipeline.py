@@ -12,6 +12,7 @@ step, rank)), so restoring a checkpoint at step N resumes the exact stream.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -80,18 +81,29 @@ class CompressedInMemoryCache:
 
     put() compresses; get() decompresses on demand.  ``bound`` is a
     :class:`repro.api.Bound` or a bare float (``Bound.abs``); the default is
-    absolute and strict, so consumers can rely on |x - x'| <= e."""
+    absolute and strict, so consumers can rely on |x - x'| <= e.
 
-    def __init__(self, bound=None, *, error_bound=None, mode=None):
+    Thread-safe: a single lock covers the entry map and the byte counters,
+    so loader worker pools can share one cache.  ``max_bytes`` caps the
+    COMPRESSED footprint with LRU eviction (both ``put`` and ``get`` touch
+    recency); ``None`` means unbounded (the historical behavior)."""
+
+    def __init__(self, bound=None, *, error_bound=None, mode=None,
+                 max_bytes: int | None = None):
         from repro.core.codec import plan as _plan
 
         if bound is None and error_bound is None and mode is None:
             bound = _plan.Bound.abs(1e-4)
         self.bound = _plan.as_bound(bound, mode, error_bound=error_bound,
                                     owner="CompressedInMemoryCache")
-        self._store: dict = {}
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError(f"max_bytes must be positive, got {max_bytes}")
+        self.max_bytes = max_bytes
+        self._lock = threading.Lock()
+        self._store: collections.OrderedDict = collections.OrderedDict()
         self._raw_bytes = 0
         self._stored_bytes = 0
+        self._evictions = 0
 
     @property
     def error_bound(self) -> float:
@@ -103,45 +115,120 @@ class CompressedInMemoryCache:
 
     def put(self, key, arr: np.ndarray) -> None:
         arr = np.asarray(arr, np.float32)
-        buf = szx.compress(arr, self.bound)
-        self._store[key] = (buf, arr.shape)
-        self._raw_bytes += arr.nbytes
-        self._stored_bytes += len(buf)
+        buf = szx.compress(arr, self.bound)     # compress outside the lock
+        with self._lock:
+            old = self._store.pop(key, None)
+            if old is not None:
+                self._raw_bytes -= old[2]
+                self._stored_bytes -= len(old[0])
+            self._store[key] = (buf, arr.shape, arr.nbytes)
+            self._raw_bytes += arr.nbytes
+            self._stored_bytes += len(buf)
+            if self.max_bytes is not None:
+                while self._stored_bytes > self.max_bytes and len(self._store) > 1:
+                    _, (ebuf, _eshape, eraw) = self._store.popitem(last=False)
+                    self._raw_bytes -= eraw
+                    self._stored_bytes -= len(ebuf)
+                    self._evictions += 1
 
     def get(self, key) -> np.ndarray:
-        buf, shape = self._store[key]
+        with self._lock:
+            buf, shape, _raw = self._store[key]
+            self._store.move_to_end(key)
         return szx.decompress(buf).reshape(shape)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._store
 
     @property
     def compression_ratio(self) -> float:
-        return self._raw_bytes / max(self._stored_bytes, 1)
+        with self._lock:
+            return self._raw_bytes / max(self._stored_bytes, 1)
+
+    @property
+    def stored_bytes(self) -> int:
+        with self._lock:
+            return self._stored_bytes
+
+    @property
+    def evictions(self) -> int:
+        with self._lock:
+            return self._evictions
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
 
 class Prefetcher:
-    """Background-thread prefetch of a batch iterator (host-side overlap)."""
+    """Background-thread prefetch of a batch iterator (host-side overlap).
+
+    A worker exception does NOT die silently in the daemon thread: it is
+    queued and re-raised from ``__next__`` on the consumer, after which the
+    iterator is exhausted.  ``close()`` (or ``with Prefetcher(...)``) stops
+    the worker, drains the queue, and joins the thread -- the contract the
+    store loader's worker pool shares (exceptions surface on ``__next__``,
+    shutdown is explicit and non-blocking-safe)."""
+
+    _ITEM, _DONE, _ERROR = 0, 1, 2
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._it = it
-        self._done = object()
+        self._stop = threading.Event()
+        self._finished = False
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def _run(self):
         try:
             for item in self._it:
-                self._q.put(item)
-        finally:
-            self._q.put(self._done)
+                if not self._enqueue((self._ITEM, item)):
+                    return
+        except BaseException as exc:    # noqa: BLE001 -- relayed to consumer
+            self._enqueue((self._ERROR, exc))
+        else:
+            self._enqueue((self._DONE, None))
+
+    def _enqueue(self, msg) -> bool:
+        """Bounded put that gives up once close() is requested (a plain
+        blocking put would deadlock shutdown against a full queue)."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(msg, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        item = self._q.get()
-        if item is self._done:
+        if self._finished:
             raise StopIteration
-        return item
+        kind, val = self._q.get()
+        if kind == self._ITEM:
+            return val
+        self._finished = True
+        if kind == self._ERROR:
+            raise val
+        raise StopIteration
+
+    def close(self) -> None:
+        """Stop the worker and reclaim the thread; idempotent."""
+        self._stop.set()
+        self._finished = True
+        while self._thread.is_alive():
+            try:                        # drain so a blocked put can exit
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(0.05)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

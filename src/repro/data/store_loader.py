@@ -1,0 +1,574 @@
+"""Streaming training ingest from compressed array stores.
+
+The paper's headline use-cases keep data compressed and materialize values
+only at the moment of use; this module makes the TRAINING INGEST path do the
+same.  A :class:`StoreLoader` samples shuffled N-d ROI windows from an
+:class:`repro.store.ArrayStore` (local file, shard manifest, or a running
+store-service URL) and yields device-ready host batches, reading and
+decoding ONLY the SZx block ranges the batch touches -- bytes read scale
+with the batch, never the corpus.
+
+Determinism contract (shared with ``SyntheticLM``): the window plan is a
+pure function of ``(seed, step, rank)``, so restoring a checkpoint at step N
+and calling ``batches(start_step=N)`` replays the exact window stream, per
+rank, byte-identically.
+
+Hot path: per batch the planner COALESCES windows landing in the same chunk
+into one merged block-range task (a chunk is fetched and decoded once per
+batch, not once per window), a worker pool runs the two-phase partial reads
+and range decodes concurrently with bounded batch lookahead, and batches are
+assembled into a small ring of preallocated reuse buffers.  Worker
+exceptions propagate to the consumer on ``__next__`` and ``close()``
+reclaims the pool -- the same contract as ``data.pipeline.Prefetcher``.
+
+``StoreLM`` adapts a loader into the LM batch interface (quantized window
+values as token streams) so ``launch/train.py --data-store`` can train
+straight from a compressed corpus; see ``docs/INGEST.md``.
+"""
+from __future__ import annotations
+
+import math
+import os
+import threading
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig
+from repro.store import grid as grid_mod
+
+
+# ------------------------------------------------------------------ sampling
+class WindowSampler:
+    """Deterministic, restart-reproducible, rank-sharded window plan.
+
+    ``origins_at(step)`` returns the ``(batch, ndim)`` window origins for
+    one step, seeded by ``SeedSequence([seed, step, rank])`` -- a pure
+    function of its inputs, independent of iteration history, so any rank
+    can seek to any step.  ``global_batch`` splits evenly across ranks
+    (each rank draws its own ``batch = global_batch // num_ranks`` windows
+    from a rank-disjoint stream, mirroring ``SyntheticLM``).
+    """
+
+    def __init__(self, shape, window_shape, global_batch: int, *,
+                 seed: int = 0, rank: int = 0, num_ranks: int = 1):
+        self.shape = tuple(int(d) for d in shape)
+        self.window_shape = tuple(int(w) for w in window_shape)
+        if len(self.window_shape) != len(self.shape):
+            raise ValueError(
+                f"window shape {self.window_shape} rank does not match "
+                f"array shape {self.shape}"
+            )
+        for w, d in zip(self.window_shape, self.shape):
+            if not 1 <= w <= d:
+                raise ValueError(
+                    f"window dim {w} out of range [1, {d}] for shape "
+                    f"{self.shape}"
+                )
+        if num_ranks < 1 or not 0 <= rank < num_ranks:
+            raise ValueError(f"rank {rank} out of range [0, {num_ranks})")
+        if global_batch < 1 or global_batch % num_ranks:
+            raise ValueError(
+                f"global batch {global_batch} does not split over "
+                f"{num_ranks} ranks"
+            )
+        self.seed = int(seed)
+        self.rank = int(rank)
+        self.num_ranks = int(num_ranks)
+        self.batch = global_batch // num_ranks
+
+    def origins_at(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, int(step), self.rank])
+        )
+        cols = [
+            rng.integers(0, d - w + 1, size=self.batch, dtype=np.int64)
+            for d, w in zip(self.shape, self.window_shape)
+        ]
+        return np.stack(cols, axis=1)
+
+
+def window_for_values(shape, nvalues: int) -> tuple[int, ...]:
+    """Smallest trailing-dims-whole window holding >= ``nvalues`` values.
+
+    Mirrors ``grid.default_chunk_shape``: windows that keep trailing dims
+    whole map to leading-axis slabs of each chunk, where the block range
+    covering the window is tight -- decoded bytes ~ window bytes.
+    """
+    shape = tuple(int(d) for d in shape)
+    rem = max(int(nvalues), 1)
+    out: list[int] = []
+    for dim in reversed(shape):
+        take = min(dim, rem)
+        out.append(take)
+        rem = -(-rem // dim) if take == dim else 1
+    return tuple(reversed(out))
+
+
+# ------------------------------------------------------------------ planning
+def plan_batch(grid, block_size: int, origins: np.ndarray, window_shape):
+    """Coalesced read plan for one batch of windows.
+
+    Returns ``(tasks, placements)``: ``tasks`` maps each touched chunk id to
+    the MERGED SZx block range ``[lo_b, hi_b)`` covering every window piece
+    that lands in it (one fetch + one range decode per chunk per batch);
+    ``placements`` are ``(window_index, chunk_id, local_ranges, out_ranges)``
+    records describing how decoded segments scatter into the batch array.
+    """
+    tasks: dict[int, tuple[int, int]] = {}
+    placements: list[tuple] = []
+    window_shape = tuple(window_shape)
+    dims_cache: dict[int, tuple[int, ...]] = {}
+    for wi, origin in enumerate(origins):
+        roi = grid_mod.ROI(
+            tuple((int(o), int(o) + w) for o, w in zip(origin, window_shape)),
+            (False,) * len(window_shape),
+        )
+        for cid, local, outr in grid_mod.intersecting_chunks(grid, roi):
+            cdims = dims_cache.get(cid)
+            if cdims is None:
+                cdims = dims_cache[cid] = grid.chunk_dims(grid.chunk_coord(cid))
+            lo_b, hi_b = grid_mod.block_range_for_box(local, cdims, block_size)
+            cur = tasks.get(cid)
+            tasks[cid] = (lo_b, hi_b) if cur is None else (
+                min(cur[0], lo_b), max(cur[1], hi_b)
+            )
+            placements.append((wi, cid, local, outr))
+    return tasks, placements
+
+
+def _assemble(out: np.ndarray, placements, segs, grid, block_size: int):
+    """Scatter decoded chunk segments into the batch array.
+
+    ``segs`` maps chunk id -> ``(flat_values, lo_b)`` where ``flat_values``
+    covers the chunk's blocks ``[lo_b, hi_b)`` in C order (exactly what
+    ``CompressedArray._decode_chunk_range`` returns).
+    """
+    dims_cache: dict[int, tuple[int, ...]] = {}
+    for wi, cid, local, outr in placements:
+        seg, lo_b = segs[cid]
+        cdims = dims_cache.get(cid)
+        if cdims is None:
+            cdims = dims_cache[cid] = grid.chunk_dims(grid.chunk_coord(cid))
+        out_sl = (wi,) + tuple(slice(lo, hi) for lo, hi in outr)
+        if all(hi - lo == d for (lo, hi), d in zip(local, cdims)):
+            out[out_sl] = np.asarray(seg).reshape(cdims)
+        else:
+            idx = np.ravel_multi_index(
+                np.ix_(*[np.arange(lo, hi) for lo, hi in local]), cdims
+            ) - lo_b * block_size
+            out[out_sl] = np.asarray(seg)[idx]
+
+
+# ------------------------------------------------------------------- sources
+class StoreSource:
+    """Thread-safe chunk-range reader over a local ``ArrayStore``.
+
+    ``CompressedArray`` instances are NOT thread-safe (one shared seek
+    cursor), so path/manifest targets get one lazily opened handle PER
+    WORKER THREAD (footer parsed once per thread, then reused for every
+    batch); an already-open ``CompressedArray`` is shared behind a lock
+    instead (reads serialize -- handy for spy-file tests and tiny stores).
+    An attached ``cache`` memoizes decoded chunk ranges across all handles.
+    """
+
+    granularity = "chunk"
+
+    def __init__(self, target, *, backend: str = "numpy",
+                 device: bool = False, cache=None, cache_ns: str | None = None):
+        from repro.store.array import CompressedArray
+
+        self._lock = threading.Lock()
+        self._handles: list = []
+        self._tl = threading.local()
+        self._closed = False
+        if isinstance(target, CompressedArray):
+            self._shared = target
+            self._open_kw = None
+            head = target
+        else:
+            self._shared = None
+            self._target = target if isinstance(target, dict) \
+                else os.fspath(target)
+            self._open_kw = dict(backend=backend, device=device, cache=cache,
+                                 cache_ns=cache_ns)
+            head = self._handle()
+        self.grid = head._grid
+        self.block_size = head._block_size
+        self.shape = head.shape
+        self.dtype = head.dtype
+        self.error_bound = head.error_bound
+        self.stored_bytes = head.stored_bytes
+
+    def _handle(self):
+        ca = getattr(self._tl, "ca", None)
+        if ca is None:
+            from repro.store import ArrayStore
+
+            ca = ArrayStore.open(self._target, **self._open_kw)
+            self._tl.ca = ca
+            with self._lock:
+                self._handles.append(ca)
+        return ca
+
+    def read_range(self, cid: int, lo_b: int, hi_b: int) -> np.ndarray:
+        """Flat decoded values of blocks ``[lo_b, hi_b)`` of chunk ``cid``."""
+        if self._shared is not None:
+            with self._lock:
+                return self._shared._decode_chunk_range(cid, lo_b, hi_b)
+        return self._handle()._decode_chunk_range(cid, lo_b, hi_b)
+
+    def close(self) -> None:
+        with self._lock:
+            handles, self._handles = self._handles, []
+            self._closed = True
+        for ca in handles:
+            ca.close()
+
+
+class HttpStoreSource:
+    """Window reader over a running store service (``docs/SERVICE.md``).
+
+    Reads are window-granular (``/read?roi=``): coalescing and the decoded
+    chunk cache live SERVER-side, so the wire carries exactly the decoded
+    window bytes and repeated-chunk decode cost is amortized by the
+    service's LRU.  One client serves all worker threads (each request is
+    an independent connection).
+    """
+
+    granularity = "window"
+
+    def __init__(self, url: str, *, timeout: float = 60.0):
+        from repro.serve.client import RemoteStore
+
+        self.remote = RemoteStore(url, timeout=timeout)
+        self.shape = self.remote.shape
+        self.dtype = self.remote.dtype
+
+    def read_window(self, origin, window_shape) -> np.ndarray:
+        roi = ",".join(
+            f"{int(o)}:{int(o) + int(w)}"
+            for o, w in zip(origin, window_shape)
+        )
+        headers, body = self.remote.read_bytes(roi)
+        return np.frombuffer(body, self.dtype).reshape(tuple(window_shape))
+
+    def close(self) -> None:
+        pass
+
+
+def make_source(store, *, backend: str = "numpy", device: bool = False,
+                cache=None, timeout: float = 60.0):
+    """Normalize a loader target into a source: an existing source passes
+    through, ``http(s)://`` URLs become :class:`HttpStoreSource`, everything
+    else (path, shard-manifest path, manifest dict, open ``CompressedArray``)
+    becomes a :class:`StoreSource`."""
+    if hasattr(store, "granularity"):
+        return store
+    if isinstance(store, str) and store.startswith(("http://", "https://")):
+        return HttpStoreSource(store, timeout=timeout)
+    return StoreSource(store, backend=backend, device=device, cache=cache)
+
+
+# -------------------------------------------------------------------- loader
+class StoreLoader:
+    """Streaming window-batch loader over a compressed array store.
+
+    ``batch_at(step)`` is the serial reference: the exact ``(batch,
+    *window_shape)`` array the pipelined iterator yields for that step.
+    ``batches(start_step)`` returns the pipelined iterator (worker pool +
+    bounded lookahead); both read only the coalesced block ranges the
+    batch's windows touch.
+
+    Yielded batches live in a ring of ``reuse_slots`` preallocated buffers:
+    a batch is valid until ``reuse_slots`` further batches have been drawn
+    (pass ``copy=True`` to own every batch).  ``workers=0`` keeps planning
+    + decode on the consumer thread.
+    """
+
+    def __init__(self, store, window_shape, batch_size: int, *,
+                 seed: int = 0, rank: int = 0, num_ranks: int = 1,
+                 workers: int = 2, lookahead: int = 2,
+                 backend: str = "numpy", device: bool = False, cache=None,
+                 copy: bool = False, reuse_slots: int = 3):
+        self.source = make_source(store, backend=backend, device=device,
+                                  cache=cache)
+        self._owns_source = self.source is not store
+        self.window_shape = tuple(int(w) for w in window_shape)
+        self.sampler = WindowSampler(
+            self.source.shape, self.window_shape, batch_size,
+            seed=seed, rank=rank, num_ranks=num_ranks,
+        )
+        self.workers = max(int(workers), 0)
+        self.lookahead = max(int(lookahead), 1)
+        self.copy = bool(copy)
+        self.reuse_slots = max(int(reuse_slots), 2)
+
+    # ------------------------------------------------------------- metadata
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        return (self.sampler.batch,) + self.window_shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.source.dtype
+
+    @property
+    def window_bytes(self) -> int:
+        return math.prod(self.window_shape) * self.dtype.itemsize
+
+    # ---------------------------------------------------------- serial path
+    def batch_at(self, step: int, *, out: np.ndarray | None = None
+                 ) -> np.ndarray:
+        if out is None:
+            out = np.empty(self.batch_shape, self.dtype)
+        origins = self.sampler.origins_at(step)
+        if self.source.granularity == "window":
+            for wi, org in enumerate(origins):
+                out[wi] = self.source.read_window(org, self.window_shape)
+            return out
+        tasks, placements = plan_batch(
+            self.source.grid, self.source.block_size, origins,
+            self.window_shape,
+        )
+        segs = {
+            cid: (self.source.read_range(cid, lo_b, hi_b), lo_b)
+            for cid, (lo_b, hi_b) in tasks.items()
+        }
+        _assemble(out, placements, segs, self.source.grid,
+                  self.source.block_size)
+        return out
+
+    # ------------------------------------------------------- pipelined path
+    def batches(self, start_step: int = 0, steps: int | None = None
+                ) -> "PipelinedBatches":
+        return PipelinedBatches(self, start_step, steps)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        if self._owns_source:
+            self.source.close()
+
+    def __enter__(self) -> "StoreLoader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class PipelinedBatches:
+    """Ordered pipelined batch iterator (the loader's hot path).
+
+    Chunk tasks for up to ``lookahead + 1`` upcoming batches are in flight
+    on the pool at once; batches yield strictly in step order.  Consumer
+    contract matches ``Prefetcher``: a worker exception re-raises from
+    ``__next__`` (after which the iterator is closed), ``close()`` cancels
+    pending work and reclaims the pool, and the iterator is a context
+    manager.
+    """
+
+    def __init__(self, loader: StoreLoader, start_step: int,
+                 steps: int | None):
+        self._ld = loader
+        self._next_step = int(start_step)
+        self._end = None if steps is None else int(start_step) + int(steps)
+        self._pending: deque = deque()
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(loader.workers, 1),
+            thread_name_prefix="store-loader",
+        )
+        self._slots = None if loader.copy else [
+            np.empty(loader.batch_shape, loader.dtype)
+            for _ in range(loader.reuse_slots)
+        ]
+        self._closed = False
+
+    def _submit_one(self) -> bool:
+        step = self._next_step
+        if self._end is not None and step >= self._end:
+            return False
+        ld = self._ld
+        origins = ld.sampler.origins_at(step)
+        if ld.source.granularity == "window":
+            futs = [
+                self._pool.submit(ld.source.read_window, org, ld.window_shape)
+                for org in origins
+            ]
+            self._pending.append((step, futs, None))
+        else:
+            tasks, placements = plan_batch(
+                ld.source.grid, ld.source.block_size, origins,
+                ld.window_shape,
+            )
+            futs = {
+                cid: self._pool.submit(ld.source.read_range, cid, lo_b, hi_b)
+                for cid, (lo_b, hi_b) in tasks.items()
+            }
+            self._pending.append((step, futs, (tasks, placements)))
+        self._next_step = step + 1
+        return True
+
+    def __iter__(self) -> "PipelinedBatches":
+        return self
+
+    def __next__(self) -> np.ndarray:
+        if self._closed:
+            raise StopIteration
+        while len(self._pending) <= self._ld.lookahead and self._submit_one():
+            pass
+        if not self._pending:
+            self.close()
+            raise StopIteration
+        step, futs, plan = self._pending.popleft()
+        out = np.empty(self._ld.batch_shape, self._ld.dtype) \
+            if self._slots is None \
+            else self._slots[step % len(self._slots)]
+        try:
+            if plan is None:
+                for wi, fut in enumerate(futs):
+                    out[wi] = fut.result()
+            else:
+                tasks, placements = plan
+                segs = {
+                    cid: (fut.result(), tasks[cid][0])
+                    for cid, fut in futs.items()
+                }
+                _assemble(out, placements, segs, self._ld.source.grid,
+                          self._ld.source.block_size)
+        except BaseException:
+            self.close()
+            raise
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for entry in self._pending:
+            futs = entry[1]
+            for fut in (futs.values() if isinstance(futs, dict) else futs):
+                fut.cancel()
+        self._pending.clear()
+        self._pool.shutdown(wait=True, cancel_futures=True)
+
+    def __enter__(self) -> "PipelinedBatches":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------- LM adapter
+class StoreLM:
+    """LM batch source over a compressed store: the ``--data-store`` path.
+
+    Each sampled window's first ``seq_len + 1`` values (C order) are
+    min/max-normalized per window and quantized into token ids
+    ``[1, vocab - 2]`` (0 and ``vocab - 1`` stay reserved); ``labels`` is
+    the one-step shift.  ``batch_at(step, rank, num_ranks)`` mirrors
+    ``SyntheticLM`` exactly -- the stream is a pure function of the store
+    contents and ``(cfg.seed, step, rank)``, so Trainer's
+    restart-from-checkpoint replay holds.
+    """
+
+    def __init__(self, store, cfg: DataConfig, *, window_shape=None,
+                 workers: int = 2, lookahead: int = 2,
+                 backend: str = "numpy", device: bool = False, cache=None):
+        if cfg.vocab_size < 4:
+            raise ValueError("StoreLM needs vocab_size >= 4")
+        self.cfg = cfg
+        self.source = make_source(store, backend=backend, device=device,
+                                  cache=cache)
+        self._needs = cfg.seq_len + 1
+        self.window_shape = tuple(int(w) for w in window_shape) \
+            if window_shape is not None \
+            else window_for_values(self.source.shape, self._needs)
+        if math.prod(self.window_shape) < self._needs:
+            raise ValueError(
+                f"window {self.window_shape} holds "
+                f"{math.prod(self.window_shape)} values; seq_len "
+                f"{cfg.seq_len} needs {self._needs}"
+            )
+        self._workers = workers
+        self._lookahead = lookahead
+        self._loaders: dict[tuple[int, int], StoreLoader] = {}
+
+    def _loader(self, rank: int, num_ranks: int) -> StoreLoader:
+        key = (rank, num_ranks)
+        ld = self._loaders.get(key)
+        if ld is None:
+            ld = self._loaders[key] = StoreLoader(
+                self.source, self.window_shape, self.cfg.global_batch,
+                seed=self.cfg.seed, rank=rank, num_ranks=num_ranks,
+                workers=self._workers, lookahead=self._lookahead,
+            )
+        return ld
+
+    def _to_batch(self, wins: np.ndarray) -> dict:
+        vocab = self.cfg.vocab_size
+        b = wins.shape[0]
+        v = np.asarray(wins, np.float64).reshape(b, -1)[:, : self._needs]
+        lo = v.min(axis=1, keepdims=True)
+        hi = v.max(axis=1, keepdims=True)
+        span = np.where(hi > lo, hi - lo, 1.0)
+        q = np.floor((v - lo) / span * (vocab - 3)).astype(np.int32) + 1
+        q = np.clip(q, 1, vocab - 2)
+        return {"tokens": np.ascontiguousarray(q[:, :-1]),
+                "labels": np.ascontiguousarray(q[:, 1:])}
+
+    def batch_at(self, step: int, rank: int = 0, num_ranks: int = 1) -> dict:
+        return self._to_batch(self._loader(rank, num_ranks).batch_at(step))
+
+    def batches(self, rank: int = 0, num_ranks: int = 1, start_step: int = 0):
+        it = self._loader(rank, num_ranks).batches(start_step=start_step)
+        try:
+            for wins in it:
+                yield self._to_batch(wins)
+        finally:
+            it.close()
+
+    def close(self) -> None:
+        self.source.close()
+
+
+class SteppedBatches:
+    """``batch_fn(step)`` adapter over a pipelined batch stream.
+
+    The Trainer calls ``batch_fn`` with monotonically increasing steps --
+    except after restart-from-checkpoint, where it jumps backward.  The
+    adapter keeps one pipelined iterator alive for the common sequential
+    case and transparently re-opens it at the requested step whenever the
+    sequence breaks, so fault-tolerant replay stays exact while steady
+    state stays pipelined.
+
+    ``open_at`` is any ``start_step -> iterator`` factory (e.g.
+    ``lambda s: store_lm.batches(start_step=s)``).
+    """
+
+    def __init__(self, open_at):
+        self._open_at = open_at
+        self._it = None
+        self._expect: int | None = None
+
+    def __call__(self, step: int):
+        if self._it is None or step != self._expect:
+            self.close()
+            self._it = self._open_at(step)
+        batch = next(self._it)
+        self._expect = step + 1
+        return batch
+
+    def close(self) -> None:
+        it, self._it = self._it, None
+        self._expect = None
+        if it is not None:
+            close = getattr(it, "close", None)
+            if close is not None:
+                close()
+
+    def __enter__(self) -> "SteppedBatches":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
-from repro.data import DataConfig, SyntheticLM
+from repro.data import DataConfig, SteppedBatches, StoreLM, SyntheticLM
 from repro.launch import mesh as mesh_lib
 from repro.optim import AdamW, warmup_cosine
 from repro.train import step as step_mod
@@ -32,6 +32,13 @@ def main():
     ap.add_argument("--grad-compress", type=int, default=0)
     ap.add_argument("--ckpt", default="/tmp/repro_launch_ckpt")
     ap.add_argument("--ckpt-compress", action="store_true")
+    ap.add_argument("--data-store", default=None,
+                    help="train from a compressed ArrayStore corpus (store "
+                         "path, shard-manifest .json, or service URL) "
+                         "instead of the synthetic stream; tokens are "
+                         "quantized ROI windows (see docs/INGEST.md)")
+    ap.add_argument("--data-workers", type=int, default=2,
+                    help="ingest worker threads for --data-store")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -49,13 +56,23 @@ def main():
         donate_argnums=(0,),
     )
 
-    ds = SyntheticLM(DataConfig(
-        cfg.vocab_size, args.seq, args.batch,
-        frames=cfg.encoder_len, frame_dim=cfg.d_model if cfg.encoder_decoder else 0,
-        prefix_embeds=cfg.prefix_embeds,
-        prefix_dim=cfg.d_model if cfg.prefix_embeds else 0,
-    ))
-    batch_fn = lambda s: {k: jnp.asarray(v) for k, v in ds.batch_at(s).items()}  # noqa: E731
+    if args.data_store:
+        # compressed-corpus ingest: pipelined ROI-window loader, same
+        # (seed, step, rank) replay contract as the synthetic stream
+        ds = StoreLM(
+            args.data_store, DataConfig(cfg.vocab_size, args.seq, args.batch),
+            workers=args.data_workers,
+        )
+        src = SteppedBatches(lambda s: ds.batches(start_step=s))
+    else:
+        ds = SyntheticLM(DataConfig(
+            cfg.vocab_size, args.seq, args.batch,
+            frames=cfg.encoder_len, frame_dim=cfg.d_model if cfg.encoder_decoder else 0,
+            prefix_embeds=cfg.prefix_embeds,
+            prefix_dim=cfg.d_model if cfg.prefix_embeds else 0,
+        ))
+        src = ds.batch_at
+    batch_fn = lambda s: {k: jnp.asarray(v) for k, v in src(s).items()}  # noqa: E731
 
     ckpt = CheckpointManager(args.ckpt, keep=2, compress=args.ckpt_compress)
     tr = Trainer(TrainerConfig(total_steps=args.steps, checkpoint_every=25),

@@ -1,0 +1,124 @@
+"""Stdlib HTTP client for the store service: numpy-style remote ROI reads.
+
+``RemoteStore`` speaks the service's wire API (``docs/SERVICE.md``) with
+nothing but ``urllib``: ``/info`` for geometry, ``/read?roi=`` for decoded
+windows (dtype/shape recovered from the ``X-Dtype``/``X-Shape`` response
+headers), ``/stats`` for compressed-domain queries.  Point it at either
+
+  * a service root (``http://host:port``) -- uses the legacy default-store
+    endpoints, or
+  * a store base (``http://host:port/v1/stores/<name>``) -- uses the
+    multi-store v1 endpoints.
+
+Every request is an independent ``urlopen``, so one client is safe to share
+across loader worker threads; the server's decoded-chunk LRU keeps repeated
+windows cheap.  This is the transport behind
+``repro.data.store_loader``'s URL sources.
+"""
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.parse
+import urllib.request
+
+import numpy as np
+
+from repro.core.codec.tree import np_dtype_for
+
+
+def roi_text(key) -> str:
+    """A ``__getitem__`` key (ints / step-1 slices / Ellipsis) -> the
+    service's textual ROI (the inverse of ``store.grid.parse_roi``)."""
+    if key is Ellipsis or key is None:
+        return ""
+    if not isinstance(key, tuple):
+        key = (key,)
+    parts = []
+    for k in key:
+        if k is Ellipsis:
+            parts.append("...")
+        elif isinstance(k, slice):
+            if k.step not in (None, 1):
+                raise ValueError(
+                    f"remote ROI reads support step-1 slices only, got {k}"
+                )
+            lo = "" if k.start is None else int(k.start)
+            hi = "" if k.stop is None else int(k.stop)
+            parts.append(f"{lo}:{hi}")
+        elif hasattr(k, "__index__"):
+            parts.append(str(k.__index__()))
+        else:
+            raise TypeError(
+                f"remote ROI reads support ints, step-1 slices, and "
+                f"Ellipsis; got {type(k).__name__}"
+            )
+    return ",".join(parts)
+
+
+class RemoteStore:
+    """Lazy remote view of one served store: ``remote[roi]`` -> ndarray."""
+
+    def __init__(self, url: str, *, timeout: float = 60.0):
+        self._base = url.rstrip("/")
+        self._timeout = float(timeout)
+        self._info: dict | None = None
+
+    def _get(self, path: str) -> tuple[dict, bytes]:
+        req = urllib.request.Request(self._base + path)
+        try:
+            with urllib.request.urlopen(req, timeout=self._timeout) as r:
+                return dict(r.headers), r.read()
+        except urllib.error.HTTPError as err:
+            detail = err.read().decode("utf-8", errors="replace")[:500]
+            raise ValueError(
+                f"store service returned {err.code} for "
+                f"{self._base + path}: {detail}"
+            ) from None
+
+    # ------------------------------------------------------------- metadata
+    def info(self, *, refresh: bool = False) -> dict:
+        if self._info is None or refresh:
+            _, body = self._get("/info")
+            self._info = json.loads(body)
+        return self._info
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(int(d) for d in self.info()["shape"])
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np_dtype_for(self.info()["dtype"])
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def __repr__(self) -> str:
+        return f"RemoteStore({self._base!r})"
+
+    # ------------------------------------------------------------ ROI reads
+    def read_bytes(self, roi: str) -> tuple[dict, bytes]:
+        """Raw decoded bytes of a textual ROI, plus the response headers."""
+        path = "/read"
+        if roi:
+            path += "?roi=" + urllib.parse.quote(roi)
+        return self._get(path)
+
+    def read(self, key=Ellipsis) -> np.ndarray:
+        headers, body = self.read_bytes(roi_text(key))
+        dtype = np_dtype_for(headers.get("X-Dtype", self.info()["dtype"]))
+        shape_text = headers.get("X-Shape", "")
+        shape = tuple(int(s) for s in shape_text.split(",")) if shape_text \
+            else ()
+        return np.frombuffer(body, dtype).reshape(shape)
+
+    def __getitem__(self, key) -> np.ndarray:
+        return self.read(key)
+
+    # ------------------------------------------------- compressed-domain stats
+    def stats(self, *, header_only: bool = False) -> dict:
+        path = "/stats" + ("?header_only=1" if header_only else "")
+        _, body = self._get(path)
+        return json.loads(body)

@@ -328,7 +328,7 @@ class CompressedArray:
                  own_file: bool = False, device: bool = False,
                  shard_files: list | None = None,
                  frame_src: list[int] | None = None,
-                 cache=None, cache_ns: str = ""):
+                 cache=None, cache_ns: str = "", seq_base: int = 0):
         grid, spec, block_size, e = format_mod.validate_store_index(idx)
         if device:
             from repro.kernels import ops
@@ -352,6 +352,12 @@ class CompressedArray:
         self._closed = False
         self._cache = cache
         self._cache_ns = cache_ns
+        # frame seq numbers are validated as seq_base + chunk_id: a view
+        # synthesized over a SLICE of a larger container's frame sequence
+        # (e.g. CheckpointManager.leaf_store over one leaf's chunk frames
+        # inside tree.szt, which carry global seqs) sets seq_base to the
+        # first frame's global sequence number
+        self._seq_base = int(seq_base)
         self.attrs = dict(idx.get("attrs") or {})
 
     def _src(self, cid: int):
@@ -472,7 +478,9 @@ class CompressedArray:
                                      hi_b: int) -> np.ndarray:
         off, length, elements = (int(v) for v in self._frames[cid])
         f = self._src(cid)
-        _flags, plen, sheader = container.read_frame_stream_header_at(f, off, cid)
+        _flags, plen, sheader = container.read_frame_stream_header_at(
+            f, off, cid + self._seq_base
+        )
         if container.FRAME_HEADER.size + plen != length:
             raise ValueError("corrupt store index (frame length mismatch)")
         prefix_len = container.stream_prefix_length(sheader)
@@ -521,9 +529,10 @@ class CompressedArray:
         """
         self._check_open()
         locs = None
-        if self._frame_src is not None:
+        if self._frame_src is not None or self._seq_base:
             locs = [
-                (self._src(seq), seq, int(fr[0]), int(fr[1]), int(fr[2]))
+                (self._src(seq), seq + self._seq_base,
+                 int(fr[0]), int(fr[1]), int(fr[2]))
                 for seq, fr in enumerate(self._frames)
             ]
         return query_mod.scan_frames(

@@ -14,6 +14,13 @@ The ``ingest_windowed`` row additionally carries absolute acceptance gates:
 bytes_read_ratio must stay < 0.2, and on hosts with >=2 cpus the pipelined
 loader must be >=1.5x the serial one (samples/sec).
 
+The ``second_stage_frontier`` summary (stage-off vs each lossless second
+stage at a pinned abs bound) is gated absolutely, not against the baseline:
+at least one stage must deliver >=1.5x CR over stage-off while keeping
+both comp and decomp throughput at >=70% of stage-off (the "<30% cost"
+frontier claim), and per-frame negotiation means no stage may ever LOSE
+ratio (cr_gain >= 0.999 for every row).
+
 CR depends on the synthetic input length, so the two files must have been
 produced at the same ``n``; a mismatch is an error (regenerate the baseline
 with the same ``SZX_BENCH_N``).
@@ -35,6 +42,9 @@ import sys
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_codec.json")
 THROUGHPUT_KEYS = ("comp_mbs", "decomp_mbs")
+# summary sections holding per-kind sub-dicts: excluded from the generic
+# per-kind throughput/CR comparison, gated by their own absolute checks
+SUMMARY_KEYS = frozenset({"second_stage_frontier"})
 
 
 def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float) -> list[str]:
@@ -51,12 +61,14 @@ def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float
             f"input size mismatch: baseline n={base.get('n')}, fresh "
             f"n={new.get('n')} (regenerate the baseline at this SZX_BENCH_N)"
         ]
-    kinds = [k for k, v in base.items() if isinstance(v, dict)]
+    kinds = [k for k, v in base.items()
+             if isinstance(v, dict) and k not in SUMMARY_KEYS]
     if not kinds:
         return ["baseline chunked_dump_load section has no benchmark kinds"]
     # a fresh row with no committed counterpart means the baseline predates
     # the benchmark: a silent pass here would let the new row drift unchecked
-    for kind in (k for k, v in new.items() if isinstance(v, dict)):
+    for kind in (k for k, v in new.items()
+                 if isinstance(v, dict) and k not in SUMMARY_KEYS):
         if kind not in base:
             errors.append(
                 f"baseline missing row {kind} -- regenerate "
@@ -92,6 +104,13 @@ def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float
                 f"{max_cr_drift:.0%} from the baseline {b_cr:.4f}"
             )
     errors.extend(_check_ingest(new.get("ingest_windowed")))
+    errors.extend(_check_second_stage(new.get("second_stage_frontier")))
+    if ("second_stage_frontier" in new
+            and "second_stage_frontier" not in base):
+        errors.append(
+            "baseline missing second_stage_frontier -- regenerate the "
+            "baseline so the frontier rows are pinned too"
+        )
     return errors
 
 
@@ -128,6 +147,52 @@ def _check_ingest(row: dict | None) -> list[str]:
                 f"ingest_windowed.pipeline_speedup: {float(speedup):.2f}x is "
                 f"below the 1.5x floor (workers={workers}, cpus={cpus})"
             )
+    return errors
+
+
+def _check_second_stage(frontier: dict | None) -> list[str]:
+    """Absolute acceptance gates for the second-stage speed/ratio frontier.
+
+    The frontier claim is a point, not a trend, so the gates are absolute:
+    some stage must buy >=1.5x CR at >=0.70x of stage-off throughput both
+    ways, and per-frame negotiation means no stage may shrink the ratio.
+    """
+    if not isinstance(frontier, dict):
+        return ["fresh results have no second_stage_frontier section"]
+    if "stage-off" not in frontier:
+        return ["second_stage_frontier: missing the stage-off reference row"]
+    errors: list[str] = []
+    frontier_hit = False
+    for kind, row in frontier.items():
+        if kind == "stage-off":
+            continue
+        try:
+            gain = float(row["cr_gain"])
+            comp = float(row["comp_rel"])
+            decomp = float(row["decomp_rel"])
+        except (KeyError, TypeError, ValueError):
+            errors.append(
+                f"second_stage_frontier.{kind}: cr_gain/comp_rel/decomp_rel "
+                "missing or non-numeric"
+            )
+            continue
+        if gain < 0.999:
+            errors.append(
+                f"second_stage_frontier.{kind}: cr_gain {gain:.3f} < 1 -- "
+                "per-frame negotiation must never lose ratio"
+            )
+        if gain >= 1.5 and comp >= 0.70 and decomp >= 0.70:
+            frontier_hit = True
+    if not errors and not frontier_hit:
+        rows = "; ".join(
+            f"{k}: gain={v.get('cr_gain', 0):.2f}x comp={v.get('comp_rel', 0):.2f} "
+            f"decomp={v.get('decomp_rel', 0):.2f}"
+            for k, v in frontier.items() if k != "stage-off"
+        )
+        errors.append(
+            "second_stage_frontier: no stage reaches >=1.5x CR at >=0.70x "
+            f"stage-off throughput ({rows})"
+        )
     return errors
 
 

@@ -1,0 +1,78 @@
+"""Render the second-stage speed/ratio frontier plot for the README.
+
+Reads the ``second_stage_frontier`` section of a BENCH JSON (the committed
+``BENCH_codec.json`` by default) and writes a two-panel scatter --
+compression ratio vs compress / decompress throughput, one point per stage
+-- to ``docs/frontier.png``.
+
+    PYTHONPATH=src python -m benchmarks.plot_frontier \
+        [--bench BENCH_codec.json] [--out docs/frontier.png]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LABELS = {
+    "stage-off": "stage off",
+    "stage-rle": "bitshuffle-rle",
+    "stage-deflate": "deflate",
+    "stage-zstd": "bitshuffle-zstd",
+}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default=os.path.join(REPO_ROOT, "BENCH_codec.json"))
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "docs", "frontier.png"))
+    args = ap.parse_args(argv)
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    frontier = bench["chunked_dump_load"].get("second_stage_frontier")
+    if not frontier:
+        raise SystemExit(f"{args.bench} has no second_stage_frontier section "
+                         "(regenerate with `python -m benchmarks.run "
+                         "chunked_dump_load`)")
+
+    fig, axes = plt.subplots(1, 2, figsize=(9, 3.6), sharey=True)
+    for ax, key, title in (
+        (axes[0], "comp_mbs", "compress"),
+        (axes[1], "decomp_mbs", "decompress"),
+    ):
+        for kind, row in frontier.items():
+            marker = "o" if kind == "stage-off" else "D"
+            ax.scatter(row[key], row["cr"], s=70, marker=marker, zorder=3,
+                       label=_LABELS.get(kind, kind))
+            ax.annotate(
+                f"  {_LABELS.get(kind, kind)}\n  CR {row['cr']:.2f}",
+                (row[key], row["cr"]), fontsize=8, va="center",
+            )
+        ax.set_xlabel(f"{title} MB/s")
+        ax.set_xlim(left=0)
+        ax.grid(alpha=0.3)
+    axes[0].set_ylabel("compression ratio")
+    off = frontier.get("stage-off", {})
+    fig.suptitle(
+        "Second-stage speed/ratio frontier "
+        f"(n={bench['chunked_dump_load'].get('n')}, pinned abs bound; "
+        f"stage-off CR {off.get('cr', 0):.2f})",
+        fontsize=10,
+    )
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    fig.savefig(args.out, dpi=110)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

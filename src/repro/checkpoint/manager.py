@@ -67,6 +67,7 @@ class CheckpointManager:
         chunk_bytes: int = 64 << 20,
         workers: int = 1,
         backend: str = "numpy",
+        stage: str | int | None = None,
     ):
         self.root = root
         self.keep = keep
@@ -84,7 +85,7 @@ class CheckpointManager:
         # leaves are device_get'd to host before they reach the codec, so the
         # numpy host mirror is the default; pass backend='auto' to route the
         # frame bodies through the device-resident encode instead
-        self._codec = SZxCodec(workers=workers, backend=backend)
+        self._codec = SZxCodec(workers=workers, backend=backend, stage=stage)
         # compress=False stores EVERY leaf raw: min_compress_elems above any
         # real leaf size routes all of them into the shared pack frame
         self._tree_codec = TreeCodec(
@@ -376,6 +377,7 @@ class CheckpointManager:
                 chunk_bytes=chunk_bytes or DEFAULT_CHUNK_TARGET_BYTES,
                 workers=self._codec.workers,
                 attrs=attrs,
+                stage=self._codec.stage,
             )
             os.replace(tmp, path)
         except BaseException:

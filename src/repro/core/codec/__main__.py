@@ -48,7 +48,8 @@ def _cmd_compress(args) -> int:
     data = np.fromfile(args.input, dtype=dtype)
     bound = resolve_cli_bound(args)
     codec = SZxCodec(
-        block_size=args.block_size, backend=args.backend, workers=args.workers
+        block_size=args.block_size, backend=args.backend, workers=args.workers,
+        stage=args.stage,
     )
     with open(args.output, "wb") as f:
         written = codec.dump_chunked(
@@ -152,6 +153,8 @@ def _cmd_info(args) -> int:
         if idx and idx.get("kind") == "szx-store":
             info["shape"] = idx["shape"]
             info["chunk_shape"] = idx["chunk_shape"]
+        if idx and idx.get("stage"):
+            info["stage"] = idx["stage"]
         print(json.dumps(info, indent=1))
         return 0
     bound = f"{e:g}" if e is not None else "n/a"
@@ -189,6 +192,10 @@ def main(argv: list[str] | None = None) -> int:
     c.add_argument("--backend", default="auto")
     c.add_argument("--no-index", action="store_true",
                    help="omit the container-v3 index footer")
+    c.add_argument("--stage", default=None,
+                   choices=("bitshuffle-rle", "bitshuffle-zstd", "deflate"),
+                   help="negotiated lossless second stage over the mid-byte "
+                        "section (per-frame; skipped when it would not shrink)")
     c.set_defaults(fn=_cmd_compress)
 
     d = sub.add_parser("decompress", help="SZx stream -> raw binary")

@@ -16,7 +16,8 @@ specified in docs/FORMAT.md:
 Chunked streams are sequences of frames, each framing one independent v2
 stream:
 
-  frame header '<4sBBIQ': magic 'SZXF' | version u8 | flags u8 (bit0 = last)
+  frame header '<4sBBIQ': magic 'SZXF' | version u8 | flags u8 (bit0 = last,
+               bit1 = raw, bits 2-4 = second-stage code, see stage.py)
                | seq u32 | payload_len u64
 """
 from __future__ import annotations
@@ -41,6 +42,16 @@ FRAME_VERSION = 1
 FRAME_HEADER = struct.Struct("<4sBBIQ")
 FLAG_LAST = 0x01
 FLAG_RAW = 0x02        # payload is raw bytes, not a v2 SZx stream (v3 packs)
+# bits 2-4: negotiated lossless second-stage code over the mid-byte section
+# (0 = none; see repro.core.codec.stage).  Readers that meet a non-zero code
+# they cannot destage MUST fail loudly, never hand out garbage bytes.
+FLAG_STAGE_SHIFT = 2
+FLAG_STAGE_MASK = 0x7 << FLAG_STAGE_SHIFT
+
+
+def stage_of_flags(flags: int) -> int:
+    """Second-stage code recorded in a frame's flag bits (0 = stage-off)."""
+    return (flags & FLAG_STAGE_MASK) >> FLAG_STAGE_SHIFT
 
 # container v3: a frame sequence MAY be followed by a seekable index footer
 # (JSON index payload + fixed trailer at the very end of the stream), which
@@ -236,7 +247,13 @@ def parse_stream_sections(prefix, *, backend: str = "auto") -> StreamSections:
     L = np.zeros((nb, bs), np.int32)
     L[nc] = L_nc.reshape(nnc, bs)
 
-    block_counts = np.maximum(nbytes[:, None] - L, 0).sum(axis=1, dtype=np.int64)
+    # sum_v max(nbytes - L_v, 0) == bs*nbytes - sum_v min(L_v, nbytes);
+    # computed on the non-const rows only (L is all-zero elsewhere)
+    block_counts = nbytes.astype(np.int64) * bs
+    if nnc:
+        block_counts[nc] -= np.minimum(
+            L_nc.reshape(nnc, bs), nbytes[nc, None]
+        ).sum(axis=1, dtype=np.int64)
     ends = np.cumsum(block_counts)
     total = int(ends[-1]) if nb else 0
     if total != nmid:
@@ -341,11 +358,49 @@ def parse_stream(buf: bytes, *, backend: str = "auto") -> tuple[Plan, BlockEncod
 # self-delimiting frames (chunked streaming)
 # ---------------------------------------------------------------------------
 
-def build_frame(payload: bytes, seq: int, last: bool, *, raw: bool = False) -> bytes:
+def build_frame(payload: bytes, seq: int, last: bool, *, raw: bool = False,
+                stage=None) -> bytes:
     """Wrap one payload (v2 stream, or raw bytes with ``raw=True``) as a
-    self-delimiting frame."""
+    self-delimiting frame.
+
+    ``stage`` (a ``repro.core.codec.stage`` name or code) requests the
+    negotiated lossless second stage over the payload's mid-byte section:
+    the frame is staged only when that actually shrinks it (and never for
+    ``raw`` payloads), so a frame with stage bits set is always smaller than
+    its stage-off form and ``stage=...`` can never lose.  Stage-off frames
+    are byte-identical to frames built before the stage existed.
+    """
     flags = (FLAG_LAST if last else 0) | (FLAG_RAW if raw else 0)
+    if stage is not None and not raw:
+        from repro.core.codec import stage as stage_mod
+
+        code = stage_mod.resolve(stage)
+        if code:
+            staged = stage_mod.stage_payload(payload, code)
+            if staged is not None:
+                payload = staged
+                flags |= code << FLAG_STAGE_SHIFT
     return FRAME_HEADER.pack(FRAME_MAGIC, FRAME_VERSION, flags, seq, len(payload)) + payload
+
+
+def destage_frame_payload(payload: bytes, flags: int) -> tuple[bytes, int]:
+    """Undo a frame's second stage: ``(raw v2 payload, flags sans stage bits)``.
+
+    Stage-off frames pass through untouched.  Frames whose stage this reader
+    cannot run (unknown code, missing optional dependency) raise the
+    fail-loudly ``stream requires second stage ...`` ValueError; raw frames
+    with stage bits set are rejected as corrupt (writers never emit them).
+    """
+    code = stage_of_flags(flags)
+    if not code:
+        return payload, flags
+    if flags & FLAG_RAW:
+        raise ValueError(
+            "corrupt SZx frame (raw frame carries second-stage flag bits)"
+        )
+    from repro.core.codec import stage as stage_mod
+
+    return stage_mod.destage_payload(payload, code), flags & ~FLAG_STAGE_MASK
 
 
 # ---------------------------------------------------------------------------
@@ -439,7 +494,7 @@ def read_frame_at(f, offset: int, length: int, seq: int) -> tuple[bytes, int]:
         raise ValueError(f"SZx index/frame seq mismatch (frame {fseq}, index {seq})")
     if len(frame) != FRAME_HEADER.size + plen:
         raise ValueError("truncated SZx frame (payload length mismatch)")
-    return frame[FRAME_HEADER.size:], flags
+    return destage_frame_payload(frame[FRAME_HEADER.size:], flags)
 
 
 def read_frame_stream_header_at(f, offset: int, seq: int) -> tuple[int, int, bytes]:
@@ -536,7 +591,7 @@ def _parse_one_frame(frame: bytes, seq_expected: int) -> tuple[bytes, int]:
         raise ValueError(f"SZx frame out of order (seq {seq}, expected {seq_expected})")
     if len(frame) != FRAME_HEADER.size + plen:
         raise ValueError("truncated SZx frame (payload length mismatch)")
-    return frame[FRAME_HEADER.size:], flags
+    return destage_frame_payload(frame[FRAME_HEADER.size:], flags)
 
 
 def _iter_frames_file(f) -> Iterator[tuple[bytes, int]]:
@@ -562,7 +617,7 @@ def _iter_frames_file(f) -> Iterator[tuple[bytes, int]]:
             raise ValueError(
                 f"SZx frame out of order (seq {seq}, expected {seq_expected})"
             )
-        yield _read_exact(f, plen), flags
+        yield destage_frame_payload(_read_exact(f, plen), flags)
         seq_expected += 1
         if flags & FLAG_LAST:
             # v3 streams carry an index footer after the LAST frame.  A

@@ -1,0 +1,474 @@
+"""Negotiated lossless second stage over the mid-byte section (container v3).
+
+SZx trades ratio for speed: after the error-bounded quantization the mid-byte
+stream still carries 10-40% redundancy (FZ-GPU / cuSZ recover it with
+bitshuffle + sparsification / Huffman).  This module implements that ratio
+tier as a *per-frame negotiated* stage recorded in the frame-flag stage bits
+(``container.FLAG_STAGE_MASK``): only the mid-byte section is transformed --
+the header, const bitmap, mu, reqlen and L sections stay raw so the
+header-only query tier and ROI block arithmetic keep working on untouched
+bytes.
+
+Layout of a staged frame payload::
+
+    [v2 metadata prefix]                      -- byte-identical to stage-off
+    [stage table '<HI': seg_blocks | nseg]
+    [u32 * nseg: byte length of each segment record]
+    [record 0] ... [record nseg-1]            -- mode u8 (0 raw | 1 staged)
+                                                 + segment body
+
+Segments are fixed block ranges (``seg_blocks`` blocks), so ROI readers map a
+block range to a segment range, read ONLY those records (offsets from the
+cumulative length table) and destage them -- bytes read stay proportional to
+the ROI (:func:`read_mid_range`).  Negotiation is two-level: a segment whose
+staged body is not smaller stays raw (mode 0), and a frame whose staged
+payload is not smaller than the raw payload stays stage-off entirely
+(:func:`stage_payload` returns ``None``), so a stage can never lose.
+
+Stage codecs:
+
+  1 ``bitshuffle-rle``   byteplane-major shuffle (within a segment, the k-th
+                         stored byte planes are grouped together; the
+                         permutation is derived from the raw metadata prefix,
+                         so it costs no side data) -> bit transpose (the
+                         Pallas kernel in ``repro.kernels.bitshuffle``) ->
+                         (value, run) byte-pair RLE.  Wins when shift pad
+                         bits / rarely-set top magnitude bits dominate.
+  2 ``bitshuffle-zstd``  same bit-transposed planes through ``zstandard``
+                         (optional dependency; readers without it fail
+                         loudly, writers refuse).
+  3 ``deflate``          segment bytes in their natural (block, value,
+                         byteplane) order through stdlib DEFLATE -- always
+                         available, the best ratio/speed point on the bench
+                         corpus (see benchmarks ``second_stage_frontier``).
+                         Natural order is deliberate: the byteplane shuffle
+                         buys deflate only ~4% more CR but costs more time
+                         than deflate itself, which would blow the <30%
+                         throughput budget of the frontier claim.
+
+Readers that meet a stage code they do not know (or whose dependency is
+missing) raise ``ValueError: stream requires second stage ...`` -- never a
+CRC/garbage error.  Stage-off streams are byte-identical to pre-stage
+container v3 (golden-pinned).
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+
+import numpy as np
+
+from repro.core.codec import container
+from repro.kernels.bitshuffle import tile_bytes
+
+NONE = 0
+BITSHUFFLE_RLE = 1
+BITSHUFFLE_ZSTD = 2
+DEFLATE = 3
+
+_NAMES = {
+    NONE: "none",
+    BITSHUFFLE_RLE: "bitshuffle-rle",
+    BITSHUFFLE_ZSTD: "bitshuffle-zstd",
+    DEFLATE: "deflate",
+}
+_CODES = {v: k for k, v in _NAMES.items()}
+
+DEFAULT_SEG_BLOCKS = 256       # blocks per ROI-addressable shuffle segment
+DEFLATE_LEVEL = 2
+ZSTD_LEVEL = 3
+_TABLE = struct.Struct("<HI")  # seg_blocks u16 | nseg u32
+
+
+def _zstd():
+    """The zstandard module, or None (absent, or disabled for CI matrix runs
+    via ``SZX_STAGE_DISABLE_ZSTD=1``)."""
+    if os.environ.get("SZX_STAGE_DISABLE_ZSTD"):
+        return None
+    try:
+        import zstandard
+    except ImportError:
+        return None
+    return zstandard
+
+
+def name_of(code: int) -> str:
+    return _NAMES.get(code, f"#{code}")
+
+
+def resolve(stage) -> int:
+    """Normalize a user-facing stage spec (None/name/code) to a stage code.
+
+    Raises on unknown names/codes and on known stages whose dependency is
+    missing -- a writer must not emit frames it could not read back.
+    """
+    if stage is None or stage == NONE or stage == "none":
+        return NONE
+    if isinstance(stage, str):
+        if stage not in _CODES:
+            raise ValueError(
+                f"unknown second stage {stage!r}; expected one of "
+                f"{sorted(_CODES)}"
+            )
+        code = _CODES[stage]
+    elif isinstance(stage, int) and not isinstance(stage, bool):
+        if stage not in _NAMES:
+            raise ValueError(
+                f"unknown second stage code {stage}; expected one of "
+                f"{sorted(_NAMES)}"
+            )
+        code = stage
+    else:
+        raise TypeError(f"stage must be a name, code, or None; got {stage!r}")
+    if code == BITSHUFFLE_ZSTD and _zstd() is None:
+        raise ValueError(
+            "second stage 'bitshuffle-zstd' needs the zstandard package "
+            "(not installed); use stage='deflate' or 'bitshuffle-rle'"
+        )
+    return code
+
+
+def require_readable(code: int) -> None:
+    """Fail loudly when this reader cannot destage ``code``."""
+    if code == NONE:
+        return
+    if code not in _NAMES:
+        raise ValueError(
+            f"stream requires second stage #{code}, which this reader does "
+            "not implement (newer writer?)"
+        )
+    if code == BITSHUFFLE_ZSTD and _zstd() is None:
+        raise ValueError(
+            "stream requires second stage 'bitshuffle-zstd' but the "
+            "zstandard package is not installed"
+        )
+
+
+# ---------------------------------------------------------------------------
+# byteplane-major shuffle permutation
+# ---------------------------------------------------------------------------
+
+def _plane_perm(sec, lo_b: int, hi_b: int) -> np.ndarray | None:
+    """Permutation grouping blocks [lo_b, hi_b)'s mid bytes by byteplane.
+
+    ``mid_planar = mid[perm]``.  The j-th stored byte of a value with lead
+    count L sits in plane ``L + j``; grouping planes together puts the
+    low-entropy leading planes (sign + rarely-set top magnitude bits) and the
+    Solution-C shift pad bits next to each other, which is what the stage
+    codecs feed on.  Derived entirely from the raw metadata prefix --
+    identical on the stage and destage sides, no side data.
+    """
+    L = sec.L[lo_b:hi_b]
+    nbytes = sec.nbytes[lo_b:hi_b]
+    counts = np.maximum(nbytes[:, None].astype(np.int64) - L, 0).reshape(-1)
+    tot = int(counts.sum())
+    if tot == 0:
+        return None
+    starts = np.cumsum(counts) - counts
+    Lf = L.reshape(-1)
+    perm = np.empty(tot, np.int64)
+    pos = 0
+    # value v stores planes [L, nbytes) at mid positions starts[v] + (k - L):
+    # one O(nvalues) pass per plane (positions ascend with v, so the order
+    # matches a stable counting sort over the per-byte plane labels)
+    for k in range(int(sec.plan.dtype.itemsize)):
+        m = (Lf <= k) & (counts > k - Lf)
+        idx = starts[m] + (k - Lf[m])
+        perm[pos : pos + idx.size] = idx
+        pos += idx.size
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# inner codecs
+# ---------------------------------------------------------------------------
+
+def _rle_encode(b: np.ndarray) -> bytes:
+    """(value, run-length) byte pairs; runs longer than 255 split."""
+    if b.size == 0:
+        return b""
+    change = np.flatnonzero(b[1:] != b[:-1])
+    starts = np.concatenate(([0], change + 1))
+    lens = np.diff(np.concatenate((starts, [b.size])))
+    vals = b[starts]
+    rep = (lens + 254) // 255
+    vals = np.repeat(vals, rep)
+    out_lens = np.full(vals.size, 255, np.uint8)
+    out_lens[np.cumsum(rep) - 1] = (lens - (rep - 1) * 255).astype(np.uint8)
+    out = np.empty(vals.size * 2, np.uint8)
+    out[0::2] = vals
+    out[1::2] = out_lens
+    return out.tobytes()
+
+
+def _rle_decode(body: bytes, expect: int) -> np.ndarray:
+    pairs = np.frombuffer(body, np.uint8)
+    if pairs.size % 2:
+        raise ValueError("corrupt second-stage payload (odd RLE pair bytes)")
+    vals = pairs[0::2]
+    lens = pairs[1::2].astype(np.int64)
+    if vals.size and int(lens.min(initial=1)) == 0:
+        raise ValueError("corrupt second-stage payload (zero-length RLE run)")
+    out = np.repeat(vals, lens)
+    if out.size != expect:
+        raise ValueError(
+            f"corrupt second-stage payload (RLE expands to {out.size} bytes, "
+            f"segment holds {expect})"
+        )
+    return out
+
+
+def _to_tiles(pm: np.ndarray, T: int) -> np.ndarray:
+    pad = (-pm.size) % T
+    if pad:
+        pm = np.concatenate([pm, np.zeros(pad, np.uint8)])
+    return pm.reshape(-1, T)
+
+
+def _seg_encode(code: int, seg: np.ndarray, perm, spec, backend: str) -> bytes:
+    pm = seg[perm] if perm is not None else seg
+    if code == DEFLATE:
+        return zlib.compress(pm.tobytes(), DEFLATE_LEVEL)
+    from repro.kernels import ops
+
+    T = tile_bytes(spec)
+    sh = np.asarray(
+        ops.bitshuffle(_to_tiles(pm, T), spec=spec, backend=backend)
+    ).reshape(-1)
+    if code == BITSHUFFLE_RLE:
+        return _rle_encode(sh)
+    if code == BITSHUFFLE_ZSTD:
+        return _zstd().ZstdCompressor(level=ZSTD_LEVEL).compress(sh.tobytes())
+    raise ValueError(f"unknown second stage code {code}")
+
+
+def _seg_decode(code: int, body: bytes, raw_len: int, perm, spec,
+                backend: str) -> np.ndarray:
+    if code == DEFLATE:
+        try:
+            pm_b = zlib.decompress(body)
+        except zlib.error as err:
+            raise ValueError(
+                f"corrupt second-stage payload (deflate: {err})"
+            ) from err
+        if len(pm_b) != raw_len:
+            raise ValueError(
+                f"corrupt second-stage payload (deflate yields {len(pm_b)} "
+                f"bytes, segment holds {raw_len})"
+            )
+        pm = np.frombuffer(pm_b, np.uint8)
+    else:
+        from repro.kernels import ops
+
+        T = tile_bytes(spec)
+        padded = -(-raw_len // T) * T
+        if code == BITSHUFFLE_RLE:
+            sh = _rle_decode(body, padded)
+        elif code == BITSHUFFLE_ZSTD:
+            try:
+                sh_b = _zstd().ZstdDecompressor().decompress(
+                    body, max_output_size=padded
+                )
+            except Exception as err:
+                raise ValueError(
+                    f"corrupt second-stage payload (zstd: {err})"
+                ) from err
+            if len(sh_b) != padded:
+                raise ValueError(
+                    f"corrupt second-stage payload (zstd yields {len(sh_b)} "
+                    f"bytes, segment holds {padded})"
+                )
+            sh = np.frombuffer(sh_b, np.uint8)
+        else:
+            raise ValueError(f"unknown second stage code {code}")
+        pm = np.asarray(
+            ops.bitshuffle(
+                sh.reshape(-1, T), spec=spec, inverse=True, backend=backend
+            )
+        ).reshape(-1)[:raw_len]
+    if perm is None:
+        return np.asarray(pm)
+    out = np.empty(raw_len, np.uint8)
+    out[perm] = pm
+    return out
+
+
+# ---------------------------------------------------------------------------
+# frame payload stage / destage
+# ---------------------------------------------------------------------------
+
+def _seg_ranges(nb: int, seg_blocks: int):
+    for lo in range(0, nb, seg_blocks):
+        yield lo, min(lo + seg_blocks, nb)
+
+
+def _perm_for(code: int, sec, lo_b: int, hi_b: int) -> np.ndarray | None:
+    # DEFLATE runs on the natural mid order: the shuffle costs more time
+    # than deflate itself for ~4% extra CR (see the module docstring)
+    if code == DEFLATE:
+        return None
+    return _plane_perm(sec, lo_b, hi_b)
+
+
+def stage_payload(payload, code: int, *, seg_blocks: int = DEFAULT_SEG_BLOCKS,
+                  backend: str = "numpy") -> bytes | None:
+    """Apply stage ``code`` to one v2 payload; None when it would not shrink.
+
+    The metadata prefix is copied verbatim; the mid section becomes the stage
+    table + per-segment records.  ``None`` (negotiation declined: empty mid,
+    or staged >= raw) means the caller must write the frame stage-off.
+    """
+    if code == NONE:
+        return None
+    if not 0 < seg_blocks <= 0xFFFF:
+        raise ValueError(f"seg_blocks {seg_blocks} out of range [1, 65535]")
+    buf = bytes(payload) if not isinstance(payload, (bytes, bytearray)) else payload
+    prefix_len = container.stream_prefix_length(buf)
+    sec = container.parse_stream_sections(buf[:prefix_len], backend="numpy")
+    nb = sec.plan.nblocks
+    if sec.nmid == 0 or nb == 0:
+        return None
+    mid = np.frombuffer(buf, np.uint8, sec.nmid, prefix_len)
+    spec = sec.plan.dtype
+    records = []
+    for lo, hi in _seg_ranges(nb, seg_blocks):
+        mlo, mhi = sec.mid_range(lo, hi)
+        seg = mid[mlo:mhi]
+        body = _seg_encode(code, seg, _perm_for(code, sec, lo, hi), spec, backend)
+        if len(body) < seg.size:
+            records.append(b"\x01" + body)
+        else:
+            records.append(b"\x00" + seg.tobytes())
+    nseg = len(records)
+    table = _TABLE.pack(seg_blocks, nseg) + np.asarray(
+        [len(r) for r in records], dtype="<u4"
+    ).tobytes()
+    staged_len = prefix_len + len(table) + sum(len(r) for r in records)
+    if staged_len >= len(buf):
+        return None
+    return b"".join([buf[:prefix_len], table, *records])
+
+
+def _parse_table(buf, prefix_len: int, nb: int, seg_blocks_hint=None):
+    """(seg_blocks, record_lengths, records_offset) of a staged payload."""
+    if len(buf) < prefix_len + _TABLE.size:
+        raise ValueError("corrupt second-stage payload (truncated stage table)")
+    seg_blocks, nseg = _TABLE.unpack_from(buf, prefix_len)
+    if seg_blocks == 0:
+        raise ValueError("corrupt second-stage payload (seg_blocks == 0)")
+    if nseg != -(-nb // seg_blocks):
+        raise ValueError(
+            f"corrupt second-stage payload (stage table has {nseg} segments, "
+            f"{nb} blocks at {seg_blocks}/segment need {-(-nb // seg_blocks)})"
+        )
+    off = prefix_len + _TABLE.size
+    if len(buf) < off + 4 * nseg:
+        raise ValueError("corrupt second-stage payload (truncated stage table)")
+    lens = np.frombuffer(buf, "<u4", nseg, off).astype(np.int64)
+    return seg_blocks, lens, off + 4 * nseg
+
+
+def destage_payload(payload, code: int, *, backend: str = "numpy") -> bytes:
+    """Invert :func:`stage_payload`: staged payload -> raw v2 stream bytes."""
+    require_readable(code)
+    buf = bytes(payload) if not isinstance(payload, (bytes, bytearray)) else payload
+    prefix_len = container.stream_prefix_length(buf)
+    sec = container.parse_stream_sections(buf[:prefix_len], backend="numpy")
+    nb = sec.plan.nblocks
+    seg_blocks, lens, off = _parse_table(buf, prefix_len, nb)
+    if off + int(lens.sum()) != len(buf):
+        raise ValueError(
+            "corrupt second-stage payload (segment records do not span the "
+            "frame payload)"
+        )
+    spec = sec.plan.dtype
+    out = bytearray(prefix_len + sec.nmid)
+    out[:prefix_len] = buf[:prefix_len]
+    for (lo, hi), ln in zip(_seg_ranges(nb, seg_blocks), lens):
+        record = buf[off : off + int(ln)]
+        off += int(ln)
+        mlo, mhi = sec.mid_range(lo, hi)
+        out[prefix_len + mlo : prefix_len + mhi] = _destage_record(
+            record, code, mhi - mlo, sec, lo, hi, spec, backend
+        )
+    return bytes(out)
+
+
+def _destage_record(record: bytes, code: int, raw_len: int, sec, lo: int,
+                    hi: int, spec, backend: str) -> bytes:
+    if len(record) < 1:
+        raise ValueError("corrupt second-stage payload (empty segment record)")
+    mode = record[0]
+    body = record[1:]
+    if mode == 0:
+        if len(body) != raw_len:
+            raise ValueError(
+                f"corrupt second-stage payload (raw segment has {len(body)} "
+                f"bytes, expected {raw_len})"
+            )
+        return body
+    if mode != 1:
+        raise ValueError(
+            f"corrupt second-stage payload (unknown segment mode {mode})"
+        )
+    return _seg_decode(
+        code, body, raw_len, _perm_for(code, sec, lo, hi), spec, backend
+    ).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# ROI partial reads over staged frames
+# ---------------------------------------------------------------------------
+
+def read_mid_range(f, table_offset: int, sec, code: int, lo_b: int,
+                   hi_b: int, *, backend: str = "numpy") -> bytes:
+    """Read + destage EXACTLY blocks [lo_b, hi_b)'s mid bytes from a staged
+    frame in an open seekable stream.
+
+    ``table_offset`` is the file offset of the stage table (frame payload
+    start + metadata prefix length); ``sec`` the frame's parsed sections.
+    Reads the stage table plus only the segment records overlapping the block
+    range (one contiguous read), so bytes read scale with the ROI, exactly
+    like the stage-off two-phase read.  Returns ``sec.mid_range(lo_b, hi_b)``
+    bytes.
+    """
+    require_readable(code)
+    nb = sec.plan.nblocks
+    f.seek(table_offset)
+    head = container._read_exact(f, _TABLE.size)
+    seg_blocks, nseg = _TABLE.unpack_from(head, 0)
+    if seg_blocks == 0:
+        raise ValueError("corrupt second-stage payload (seg_blocks == 0)")
+    if nseg != -(-nb // seg_blocks):
+        raise ValueError(
+            f"corrupt second-stage payload (stage table has {nseg} segments, "
+            f"{nb} blocks at {seg_blocks}/segment need {-(-nb // seg_blocks)})"
+        )
+    lens = np.frombuffer(
+        container._read_exact(f, 4 * nseg), "<u4"
+    ).astype(np.int64)
+    if not 0 <= lo_b < hi_b <= nb:
+        raise ValueError(f"block range [{lo_b}, {hi_b}) out of [0, {nb})")
+    s_lo = lo_b // seg_blocks
+    s_hi = -(-hi_b // seg_blocks)
+    rec_base = table_offset + _TABLE.size + 4 * nseg
+    starts = np.concatenate(([0], np.cumsum(lens)))
+    f.seek(rec_base + int(starts[s_lo]))
+    blob = container._read_exact(f, int(starts[s_hi] - starts[s_lo]))
+    spec = sec.plan.dtype
+    parts = []
+    pos = 0
+    for s in range(s_lo, s_hi):
+        ln = int(lens[s])
+        record = blob[pos : pos + ln]
+        pos += ln
+        lo, hi = s * seg_blocks, min((s + 1) * seg_blocks, nb)
+        mlo, mhi = sec.mid_range(lo, hi)
+        parts.append(
+            _destage_record(record, code, mhi - mlo, sec, lo, hi, spec, backend)
+        )
+    seg_mid = b"".join(parts)
+    base = sec.mid_range(s_lo * seg_blocks, min(s_hi * seg_blocks, nb))[0]
+    mlo, mhi = sec.mid_range(lo_b, hi_b)
+    return seg_mid[mlo - base : mhi - base]

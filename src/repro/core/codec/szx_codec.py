@@ -101,6 +101,15 @@ class SZxCodec:
     block_size: int = DEFAULT_BLOCK_SIZE
     backend: str = "auto"          # kernels.ops backend (all dtypes)
     workers: int = 1               # threads for compress_chunked/decompress_chunked
+    stage: str | int | None = None  # negotiated second stage for chunked frames
+                                    # (None | 'bitshuffle-rle' | 'bitshuffle-zstd'
+                                    # | 'deflate'; see repro.core.codec.stage)
+
+    def __post_init__(self):
+        if self.stage is not None:
+            from repro.core.codec import stage as stage_mod
+
+            stage_mod.resolve(self.stage)   # unknown/unavailable -> raises now
 
     # ------------------------------------------------------------- monolithic
     def compress(self, x, bound: Bound | float | None = None, *,
@@ -275,7 +284,7 @@ class SZxCodec:
         for i, (payload, last) in enumerate(
             self.iter_chunk_payloads(x, b, chunk_bytes=chunk_bytes, dtype=dtype)
         ):
-            yield container.build_frame(payload, i, last=last)
+            yield container.build_frame(payload, i, last=last, stage=self.stage)
 
     def decompress_chunked(self, frames, *, n: int | None = None) -> np.ndarray:
         """Decompress a frame sequence -> flat array.

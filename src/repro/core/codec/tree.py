@@ -176,7 +176,8 @@ class TreeCodec:
             final_leaf = li == len(big_leaves) - 1
             for payload, pl_last in _leaf_payloads(arr):
                 frame = container.build_frame(
-                    payload, seq, last=final_leaf and pl_last
+                    payload, seq, last=final_leaf and pl_last,
+                    stage=self.codec.stage,
                 )
                 manifest["frames"].append([written, len(frame)])
                 fileobj.write(frame)

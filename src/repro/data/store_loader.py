@@ -49,10 +49,23 @@ class WindowSampler:
     can seek to any step.  ``global_batch`` splits evenly across ranks
     (each rank draws its own ``batch = global_batch // num_ranks`` windows
     from a rank-disjoint stream, mirroring ``SyntheticLM``).
+
+    ``epochs=N`` switches to multi-epoch WITHOUT-REPLACEMENT sampling: the
+    candidate set is the non-overlapping window tiling of the array
+    (``prod(d_i // w_i)`` windows), each epoch visits every candidate
+    exactly once in a fresh ``SeedSequence([seed, _EPOCH_TAG, epoch])``
+    permutation, and the permutation is consumed in global-draw order
+    (``step * global_batch + rank * batch + i``), so ranks stay disjoint
+    and any rank can still seek to any step without history.  Iteration is
+    bounded: ``origins_at`` raises past :attr:`num_steps` (the last step
+    whose full global batch fits in ``epochs`` passes).
     """
 
+    _EPOCH_TAG = 0x5A17EB   # domain-separates epoch perms from step draws
+
     def __init__(self, shape, window_shape, global_batch: int, *,
-                 seed: int = 0, rank: int = 0, num_ranks: int = 1):
+                 seed: int = 0, rank: int = 0, num_ranks: int = 1,
+                 epochs: int | None = None):
         self.shape = tuple(int(d) for d in shape)
         self.window_shape = tuple(int(w) for w in window_shape)
         if len(self.window_shape) != len(self.shape):
@@ -77,16 +90,69 @@ class WindowSampler:
         self.rank = int(rank)
         self.num_ranks = int(num_ranks)
         self.batch = global_batch // num_ranks
+        if epochs is None:
+            self.epochs = None
+        else:
+            if isinstance(epochs, bool) or int(epochs) < 1:
+                raise ValueError(f"epochs must be a positive int, got {epochs!r}")
+            self.epochs = int(epochs)
+            self._tiles = tuple(
+                d // w for d, w in zip(self.shape, self.window_shape)
+            )
+            self._nwin = int(np.prod(self._tiles, dtype=np.int64))
+            if self._nwin < global_batch:
+                raise ValueError(
+                    f"epochs= mode needs at least one global batch of "
+                    f"candidate windows per epoch ({self._nwin} non-"
+                    f"overlapping windows < global batch {global_batch})"
+                )
+            self._perm_cache: tuple[int | None, np.ndarray | None] = (None, None)
+
+    @property
+    def num_steps(self) -> int:
+        """Steps available under ``epochs=`` (full global batches only)."""
+        if self.epochs is None:
+            raise ValueError("num_steps is only defined with epochs= set")
+        return (self.epochs * self._nwin) // (self.batch * self.num_ranks)
+
+    def _epoch_perm(self, epoch: int) -> np.ndarray:
+        cached_epoch, cached = self._perm_cache
+        if cached_epoch == epoch:
+            return cached
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self._EPOCH_TAG, epoch])
+        )
+        perm = rng.permutation(self._nwin)
+        self._perm_cache = (epoch, perm)
+        return perm
 
     def origins_at(self, step: int) -> np.ndarray:
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, int(step), self.rank])
-        )
-        cols = [
-            rng.integers(0, d - w + 1, size=self.batch, dtype=np.int64)
-            for d, w in zip(self.shape, self.window_shape)
-        ]
-        return np.stack(cols, axis=1)
+        if self.epochs is None:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, int(step), self.rank])
+            )
+            cols = [
+                rng.integers(0, d - w + 1, size=self.batch, dtype=np.int64)
+                for d, w in zip(self.shape, self.window_shape)
+            ]
+            return np.stack(cols, axis=1)
+        step = int(step)
+        gb = self.batch * self.num_ranks
+        g = step * gb + self.rank * self.batch \
+            + np.arange(self.batch, dtype=np.int64)
+        if step < 0 or int(g[-1]) >= self.epochs * self._nwin:
+            raise ValueError(
+                f"step {step} out of range [0, {self.num_steps}) for "
+                f"epochs={self.epochs} over {self._nwin} candidate windows"
+            )
+        epoch = g // self._nwin
+        pos = g % self._nwin
+        flat = np.empty(self.batch, np.int64)
+        for e in np.unique(epoch):       # a batch spans at most 2 epochs
+            m = epoch == e
+            flat[m] = self._epoch_perm(int(e))[pos[m]]
+        coords = np.stack(np.unravel_index(flat, self._tiles), axis=1)
+        return coords * np.asarray(self.window_shape, dtype=np.int64)
 
 
 def window_for_values(shape, nvalues: int) -> tuple[int, ...]:
@@ -289,6 +355,7 @@ class StoreLoader:
 
     def __init__(self, store, window_shape, batch_size: int, *,
                  seed: int = 0, rank: int = 0, num_ranks: int = 1,
+                 epochs: int | None = None,
                  workers: int = 2, lookahead: int = 2,
                  backend: str = "numpy", device: bool = False, cache=None,
                  copy: bool = False, reuse_slots: int = 3):
@@ -298,7 +365,7 @@ class StoreLoader:
         self.window_shape = tuple(int(w) for w in window_shape)
         self.sampler = WindowSampler(
             self.source.shape, self.window_shape, batch_size,
-            seed=seed, rank=rank, num_ranks=num_ranks,
+            seed=seed, rank=rank, num_ranks=num_ranks, epochs=epochs,
         )
         self.workers = max(int(workers), 0)
         self.lookahead = max(int(lookahead), 1)
@@ -373,6 +440,11 @@ class PipelinedBatches:
         self._ld = loader
         self._next_step = int(start_step)
         self._end = None if steps is None else int(start_step) + int(steps)
+        if loader.sampler.epochs is not None:
+            # without-replacement sampling is bounded: stop at the last full
+            # global batch instead of letting origins_at raise mid-iteration
+            bound = loader.sampler.num_steps
+            self._end = bound if self._end is None else min(self._end, bound)
         self._pending: deque = deque()
         self._pool = ThreadPoolExecutor(
             max_workers=max(loader.workers, 1),

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: bitplane shuffle (bit transpose) over byte tiles.
+
+The lossless second stage (``repro.core.codec.stage``) groups a block range's
+mid bytes into byteplane-major order and then bit-transposes fixed-size
+tiles so that bit k of every byte in a tile lands contiguously -- turning the
+per-value "top magnitude bits rarely set / Solution-C shift pad bits always
+zero" structure into long zero runs an RLE can consume (FZ-GPU's
+bitshuffle+sparsification, PAPERS.md).
+
+Geometry: a tile is ``TILE_VALUES * spec.itemsize`` bytes (one Pallas grid
+step handles ``TILE_ROWS`` tiles).  Within a tile the transform is the
+classic bitshuffle involution pair: ``(T, 8)`` little-endian bit matrix ->
+transpose -> repack, so ``bitunshuffle(bitshuffle(x)) == x`` for every tile
+independently -- tiles never mix, which is what keeps the stage addressable
+per ROI block range.  The jnp oracle in ``ref.py`` and the numpy mirror in
+``ops.py`` are bit-identical to this kernel (pinned by tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import specs
+from repro.kernels.specs import DtypeSpec
+
+TILE_VALUES = 1024          # values per tile; tile bytes = TILE_VALUES * itemsize
+TILE_ROWS = 8               # tiles per grid step
+
+
+def tile_bytes(spec: DtypeSpec) -> int:
+    """Bytes per shuffle tile for this dtype geometry (multiple of 8)."""
+    return TILE_VALUES * spec.itemsize
+
+
+def shuffle_body(t, *, inverse: bool):
+    """Trace-time bit transpose of ``(rows, T)`` uint8 tiles (T % 8 == 0).
+
+    Forward: out bit-row k holds bit k of every input byte (little-endian
+    packing, matching ``np.packbits(..., bitorder='little')``).  ``inverse``
+    runs the exact inverse permutation.
+    """
+    rows, T = t.shape
+    k = jnp.arange(8, dtype=jnp.uint8)
+    bits = (t[:, :, None] >> k) & jnp.uint8(1)          # (rows, T, 8)
+    if inverse:
+        # forward wrote (8, T) row-major; read it back as (T, 8)
+        bits = bits.reshape(rows, 8, T // 8, 8)
+        bits = bits.transpose(0, 2, 3, 1).reshape(rows, T, 8)
+    else:
+        bits = bits.transpose(0, 2, 1).reshape(rows, T, 8)
+    weights = (jnp.uint8(1) << k)                        # little-endian pack
+    return (bits * weights).sum(axis=-1, dtype=jnp.int32).astype(jnp.uint8)
+
+
+def _make_kernel(inverse: bool):
+    def _kernel(t_ref, out_ref):
+        out_ref[...] = shuffle_body(t_ref[...], inverse=inverse)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "inverse", "interpret"))
+def bitshuffle(tiles, *, spec: DtypeSpec = specs.F32, inverse: bool = False,
+               interpret: bool | None = None):
+    """Bit-transpose ``(nt, tile_bytes(spec))`` uint8 tiles (Pallas route)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nt, T = tiles.shape
+    if T != tile_bytes(spec):
+        raise ValueError(
+            f"bitshuffle tile width {T} != tile_bytes({spec.name}) = "
+            f"{tile_bytes(spec)}"
+        )
+    if nt == 0:
+        return jnp.zeros((0, T), jnp.uint8)
+    pad = (-nt) % TILE_ROWS
+    if pad:
+        tiles = jnp.pad(tiles, ((0, pad), (0, 0)))
+    ntp = nt + pad
+    out = pl.pallas_call(
+        _make_kernel(inverse),
+        grid=(ntp // TILE_ROWS,),
+        in_specs=[pl.BlockSpec((TILE_ROWS, T), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_ROWS, T), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntp, T), jnp.uint8),
+        interpret=interpret,
+    )(tiles)
+    return out[:nt]

@@ -623,3 +623,50 @@ def planes_decode(mu, sexp, planes, *, backend: str = "auto"):
         jnp.asarray(mu, jnp.float32), jnp.asarray(sexp, jnp.int32),
         jnp.asarray(planes, jnp.uint8),
     )
+
+
+# --------------------------------------------------------------------------
+# bitplane shuffle (second-stage transform)
+# --------------------------------------------------------------------------
+
+def _bitshuffle_np(tiles, inverse):
+    """numpy mirror of ``ref.bitshuffle_ref`` (independent ground truth:
+    built on np.unpackbits/np.packbits instead of the shared jnp body)."""
+    tiles = np.ascontiguousarray(tiles, np.uint8)
+    nt, T = tiles.shape
+    if T % 8:
+        raise ValueError(f"bitshuffle tile width {T} is not a multiple of 8")
+    if nt == 0:
+        return tiles.copy()
+    bits = np.unpackbits(tiles, axis=1, bitorder="little").reshape(nt, T, 8)
+    if inverse:
+        bits = bits.reshape(nt, 8, T // 8, 8).transpose(0, 2, 3, 1)
+    else:
+        bits = bits.transpose(0, 2, 1)
+    return np.packbits(bits.reshape(nt, T * 8), axis=1, bitorder="little")
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def _bitshuffle_jax(tiles, inverse):
+    return ref.bitshuffle_ref(tiles, inverse=inverse)
+
+
+def bitshuffle(tiles, *, spec: DtypeSpec = specs.F32, inverse: bool = False,
+               backend: str = "auto"):
+    """Bit-transpose uint8 tiles of ``bitshuffle.tile_bytes(spec)`` bytes.
+
+    ``tiles``: (nt, tile_bytes) uint8.  Forward groups bit k of every tile
+    byte contiguously; ``inverse=True`` is the exact inverse.  All three
+    backends are bit-identical (the second-stage container bytes must not
+    depend on the backend).
+    """
+    backend = _resolve(backend)
+    if backend == "numpy":
+        return _bitshuffle_np(np.asarray(tiles), inverse)
+    if backend == "kernel" and _kernel_route(spec, "bitshuffle"):
+        from repro.kernels import bitshuffle as k
+
+        return k.bitshuffle(
+            jnp.asarray(tiles, jnp.uint8), spec=spec, inverse=inverse
+        )
+    return _bitshuffle_jax(jnp.asarray(tiles, jnp.uint8), inverse)

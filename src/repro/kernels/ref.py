@@ -376,3 +376,25 @@ def planes_decode_ref(mu, sexp, planes):
     q = jnp.where(uq >= (1 << (nbits - 1)), uq - (1 << nbits), uq).astype(jnp.float32)
     v = q * jnp.exp2(-sexp.astype(jnp.float32))[..., None]
     return v + mu[..., None]
+
+
+# ---------------------------------------------------------------------------
+# bitplane shuffle (second-stage transform; see repro.kernels.bitshuffle)
+# ---------------------------------------------------------------------------
+
+def bitshuffle_ref(tiles, *, inverse: bool = False):
+    """Bit-transpose (nt, T) uint8 tiles, T % 8 == 0 (little-endian packing).
+
+    Ground truth for the Pallas kernel in ``bitshuffle.py``: forward places
+    bit k of every tile byte contiguously (bit-row k); ``inverse`` undoes it.
+    Bit-identical to ``np.unpackbits``/``np.packbits`` with
+    ``bitorder='little'`` (pinned by tests against the numpy mirror).
+    """
+    from repro.kernels.bitshuffle import shuffle_body
+
+    nt, T = tiles.shape
+    if T % 8:
+        raise ValueError(f"bitshuffle tile width {T} is not a multiple of 8")
+    if nt == 0:
+        return jnp.zeros((0, T), jnp.uint8)
+    return shuffle_body(jnp.asarray(tiles, jnp.uint8), inverse=inverse)

@@ -40,6 +40,7 @@ def _cmd_create(args) -> int:
     kw = dict(
         chunk_shape=_shape(args.chunk_shape) if args.chunk_shape else None,
         block_size=args.block_size, backend=args.backend, workers=args.workers,
+        stage=args.stage,
     )
     if args.shards:
         man = ArrayStore.save_sharded(
@@ -77,6 +78,7 @@ def _cmd_info(args) -> int:
             "stored_bytes": ca.stored_bytes,
             "cr": ca.nbytes / max(ca.stored_bytes, 1),
             "attrs": ca.attrs,
+            "stage": ca.stage,
         }
     if args.json:
         print(json.dumps(info, indent=1))
@@ -164,6 +166,10 @@ def main(argv: list[str] | None = None) -> int:
     c.add_argument("--block-size", type=int, default=128)
     c.add_argument("--workers", type=int, default=1)
     c.add_argument("--backend", default="numpy")
+    c.add_argument("--stage", default=None,
+                   choices=("bitshuffle-rle", "bitshuffle-zstd", "deflate"),
+                   help="negotiated lossless second stage over the mid-byte "
+                        "section (per-chunk; skipped when it would not shrink)")
     c.set_defaults(fn=_cmd_create)
 
     i = sub.add_parser("info", help="print store geometry")

@@ -34,6 +34,18 @@ from repro.store.grid import ChunkGrid
 DEFAULT_STORE_CHUNK_BYTES = grid_mod.DEFAULT_CHUNK_TARGET_BYTES
 
 
+def _resolve_stage_name(stage) -> str | None:
+    """Validate a ``stage=`` save option up front; returns the canonical
+    stage name (or None).  Unknown stages and stages whose optional
+    dependency is missing raise BEFORE any bytes are written."""
+    if stage is None:
+        return None
+    from repro.core.codec import stage as stage_mod
+
+    code = stage_mod.resolve(stage)
+    return stage_mod.name_of(code) if code else None
+
+
 class ArrayStore:
     """Namespace front-end: ``ArrayStore.save(...)`` / ``ArrayStore.open(...)``."""
 
@@ -50,6 +62,7 @@ class ArrayStore:
         backend: str = "numpy",
         workers: int = 1,
         attrs: dict | None = None,
+        stage: str | int | None = None,
         error_bound: float | None = None,
     ) -> dict:
         """Write ``arr`` as a chunk-grid store stream; returns the index dict.
@@ -65,6 +78,7 @@ class ArrayStore:
         """
         b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
                               owner="ArrayStore.save")
+        stage_name = _resolve_stage_name(stage)
         arr = np.asarray(arr)
         if arr.ndim == 0:
             raise ValueError("0-d arrays are not storable; reshape to (1,)")
@@ -85,7 +99,9 @@ class ArrayStore:
             written = 0
             frames: list[list[int]] = []
             for cid, pl in enumerate(payloads):
-                frame = container.build_frame(pl, cid, last=cid == grid.nchunks - 1)
+                frame = container.build_frame(
+                    pl, cid, last=cid == grid.nchunks - 1, stage=stage_name,
+                )
                 frames.append([
                     written, len(frame),
                     grid.chunk_elements(grid.chunk_coord(cid)),
@@ -93,7 +109,8 @@ class ArrayStore:
                 f.write(frame)
                 written += len(frame)
             idx = format_mod.build_store_index(
-                grid, spec.code, block_size, e, frames, attrs
+                grid, spec.code, block_size, e, frames, attrs,
+                stage=stage_name,
             )
             f.write(container.build_index_footer(idx))
         finally:
@@ -115,6 +132,7 @@ class ArrayStore:
         backend: str = "numpy",
         workers: int = 1,
         attrs: dict | None = None,
+        stage: str | int | None = None,
         error_bound: float | None = None,
     ) -> dict:
         """Write ``arr`` as ``nshards`` shard files plus a JSON manifest at
@@ -131,6 +149,7 @@ class ArrayStore:
         """
         b = plan_mod.as_bound(bound, mode, error_bound=error_bound,
                               owner="ArrayStore.save_sharded")
+        stage_name = _resolve_stage_name(stage)
         arr = np.asarray(arr)
         if arr.ndim == 0:
             raise ValueError("0-d arrays are not storable; reshape to (1,)")
@@ -166,7 +185,7 @@ class ArrayStore:
                 for cid in range(lo, hi):
                     # global seq; LAST closes each shard's frame sequence
                     frame = container.build_frame(
-                        next(it), cid, last=cid == hi - 1
+                        next(it), cid, last=cid == hi - 1, stage=stage_name,
                     )
                     frames.append([
                         written, len(frame),
@@ -186,7 +205,7 @@ class ArrayStore:
                 "frames": frames,
             })
         man = format_mod.build_store_manifest(
-            grid, spec.code, block_size, e, shards, attrs
+            grid, spec.code, block_size, e, shards, attrs, stage=stage_name,
         )
         with open(manifest_path, "w") as f:
             json.dump(man, f)
@@ -274,7 +293,8 @@ class ArrayStore:
                 f.close()
             raise
         idx = format_mod.build_store_index(
-            grid, spec.code, block_size, e, frames, man.get("attrs")
+            grid, spec.code, block_size, e, frames, man.get("attrs"),
+            stage=man.get("stage"),
         )
         try:
             return CompressedArray(
@@ -359,6 +379,8 @@ class CompressedArray:
         # first frame's global sequence number
         self._seq_base = int(seq_base)
         self.attrs = dict(idx.get("attrs") or {})
+        # advisory writer-side stage name (per-chunk truth is in frame flags)
+        self.stage = idx.get("stage")
 
     def _src(self, cid: int):
         """File object holding chunk ``cid``'s frame (sharded stores map
@@ -499,8 +521,20 @@ class CompressedArray:
         mlo, mhi = sec.mid_range(lo_b, hi_b)
         mid = b""
         if mhi > mlo:
-            f.seek(off + container.FRAME_HEADER.size + prefix_len + mlo)
-            mid = container._read_exact(f, mhi - mlo)
+            stage_code = container.stage_of_flags(_flags)
+            if stage_code:
+                # staged frame: read the stage table + only the segment
+                # records covering [lo_b, hi_b) and destage them -- bytes
+                # read stay proportional to the ROI, like the raw path
+                from repro.core.codec import stage as stage_mod
+
+                mid = stage_mod.read_mid_range(
+                    f, off + container.FRAME_HEADER.size + prefix_len,
+                    sec, stage_code, lo_b, hi_b,
+                )
+            else:
+                f.seek(off + container.FRAME_HEADER.size + prefix_len + mlo)
+                mid = container._read_exact(f, mhi - mlo)
         if self._device:
             from repro.core.codec import device as device_mod
 

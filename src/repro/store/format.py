@@ -42,6 +42,8 @@ def build_store_index(
     e: float,
     frames: list[list[int]],
     attrs: dict | None = None,
+    *,
+    stage: str | None = None,
 ) -> dict:
     if len(frames) != grid.nchunks:
         raise ValueError(
@@ -50,7 +52,7 @@ def build_store_index(
         )
     from repro.core.codec import container
 
-    return {
+    idx = {
         "v": container.INDEX_VERSION,
         "kind": STORE_KIND,
         "store_v": STORE_VERSION,
@@ -62,6 +64,11 @@ def build_store_index(
         "frames": frames,
         "attrs": dict(attrs or {}),
     }
+    # advisory only (the frame flags are the source of truth per chunk);
+    # omitted when stage-off so stage-less footers stay byte-identical
+    if stage is not None:
+        idx["stage"] = stage
+    return idx
 
 
 def validate_store_index(idx: dict) -> tuple[ChunkGrid, object, int, float]:
@@ -129,8 +136,10 @@ def build_store_manifest(
     e: float,
     shards: list[dict],
     attrs: dict | None = None,
+    *,
+    stage: str | None = None,
 ) -> dict:
-    return {
+    man = {
         "kind": MANIFEST_KIND,
         "manifest_v": MANIFEST_VERSION,
         "store_v": STORE_VERSION,
@@ -142,6 +151,9 @@ def build_store_manifest(
         "shards": shards,
         "attrs": dict(attrs or {}),
     }
+    if stage is not None:
+        man["stage"] = stage
+    return man
 
 
 def build_shard_index(

@@ -16,6 +16,15 @@ BASE = {
         "n": 4194304,
         "mono": {"comp_mbs": 100.0, "decomp_mbs": 50.0, "cr": 7.0},
         "chunked": {"comp_mbs": 120.0, "decomp_mbs": 80.0, "cr": 7.0},
+        "second_stage_frontier": {
+            "stage-off": {"comp_mbs": 100.0, "decomp_mbs": 100.0, "cr": 7.0,
+                          "cr_gain": 1.0, "comp_rel": 1.0, "decomp_rel": 1.0},
+            "stage-rle": {"comp_mbs": 55.0, "decomp_mbs": 95.0, "cr": 7.0,
+                          "cr_gain": 1.0, "comp_rel": 0.55, "decomp_rel": 0.95},
+            "stage-deflate": {"comp_mbs": 90.0, "decomp_mbs": 92.0, "cr": 10.7,
+                              "cr_gain": 1.53, "comp_rel": 0.90,
+                              "decomp_rel": 0.92},
+        },
     }
 }
 
@@ -23,6 +32,12 @@ BASE = {
 def _doctor(**kv):
     doc = copy.deepcopy(BASE)
     doc["chunked_dump_load"]["mono"].update(kv)
+    return doc
+
+
+def _doctor_stage(kind, **kv):
+    doc = copy.deepcopy(BASE)
+    doc["chunked_dump_load"]["second_stage_frontier"][kind].update(kv)
     return doc
 
 
@@ -83,6 +98,41 @@ def test_missing_kind_and_section_fail():
     del doc["chunked_dump_load"]["chunked"]
     assert any("chunked: missing" in e for e in _cmp(doc))
     assert _cmp({}) == ["fresh results have no chunked_dump_load section"]
+
+
+def test_frontier_missing_from_fresh_fails():
+    doc = copy.deepcopy(BASE)
+    del doc["chunked_dump_load"]["second_stage_frontier"]
+    assert any("no second_stage_frontier" in e for e in _cmp(doc))
+
+
+def test_frontier_missing_from_baseline_fails():
+    base = copy.deepcopy(BASE)
+    del base["chunked_dump_load"]["second_stage_frontier"]
+    errs = compare(base, copy.deepcopy(BASE), max_drop=0.30, max_cr_drift=0.01)
+    assert any("baseline missing second_stage_frontier" in e for e in errs)
+
+
+def test_frontier_no_stage_on_target_fails():
+    # deflate degraded below the 1.5x CR gain floor: nothing hits the frontier
+    errs = _cmp(_doctor_stage("stage-deflate", cr_gain=1.2))
+    assert len(errs) == 1 and "no stage reaches" in errs[0]
+    # ...or the gain is there but the throughput cost blew the <30% budget
+    errs = _cmp(_doctor_stage("stage-deflate", comp_rel=0.5))
+    assert len(errs) == 1 and "no stage reaches" in errs[0]
+
+
+def test_frontier_stage_losing_ratio_fails():
+    # per-frame negotiation guarantees a stage never loses; cr_gain < 1 in
+    # the bench means negotiation is broken, whatever the frontier says
+    errs = _cmp(_doctor_stage("stage-rle", cr_gain=0.9))
+    assert len(errs) == 1 and "never lose ratio" in errs[0]
+
+
+def test_frontier_missing_stage_off_fails():
+    doc = copy.deepcopy(BASE)
+    del doc["chunked_dump_load"]["second_stage_frontier"]["stage-off"]
+    assert any("stage-off reference" in e for e in _cmp(doc))
 
 
 def test_main_exit_codes(tmp_path):

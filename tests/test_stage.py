@@ -1,0 +1,482 @@
+"""Tests for the negotiated lossless second stage (container v3 stage bits).
+
+Covers the stage payload/destage round-trip matrix (dtypes x backends x
+stages), the golden pin that stage-off frames are byte-identical to the
+pre-stage layout, fail-loudly semantics (unknown stage code, missing
+optional zstd, corrupt second-stage payloads, raw frames with stage bits),
+per-frame negotiation (a stage never loses), staged store ROI reads with a
+seek-spy (header-tier queries and small ROIs never touch mid bytes beyond
+the selected segment records), and the Pallas bitshuffle kernel's
+bit-identity across backends.
+"""
+import io
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core.codec import container, stage
+from repro.core.codec.plan import Bound
+from repro.core.codec.szx_codec import SZxCodec
+from repro.kernels import ops, ref, specs
+from repro.kernels.bitshuffle import tile_bytes
+from repro.store import ArrayStore
+
+try:
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    BF16 = None
+
+HAVE_ZSTD = stage._zstd() is not None
+
+STAGES = ["bitshuffle-rle", "deflate"] + (
+    ["bitshuffle-zstd"] if HAVE_ZSTD else []
+)
+
+
+def _walk(n, seed=0, scale=0.01, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (np.cumsum(rng.standard_normal(n)) * scale).astype(dtype)
+
+
+def _payload(x, **kw):
+    return SZxCodec(backend="numpy", **kw).compress(x, Bound.rel(1e-3))
+
+
+# ---------------------------------------------------------------------------
+# bitshuffle kernel: bit-identity + involution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [specs.F32, specs.F64, specs.F16, specs.BF16])
+def test_bitshuffle_backends_bit_identical(spec):
+    if spec is None:
+        pytest.skip("bfloat16 spec unavailable")
+    rng = np.random.default_rng(3)
+    T = tile_bytes(spec)
+    tiles = rng.integers(0, 256, size=(5, T), dtype=np.uint8)
+    fwd = {
+        b: np.asarray(ops.bitshuffle(tiles, spec=spec, backend=b))
+        for b in ("numpy", "jax", "kernel")
+    }
+    np.testing.assert_array_equal(fwd["numpy"], fwd["jax"])
+    np.testing.assert_array_equal(fwd["numpy"], fwd["kernel"])
+    np.testing.assert_array_equal(
+        fwd["numpy"], np.asarray(ref.bitshuffle_ref(tiles))
+    )
+    for b in ("numpy", "jax", "kernel"):
+        back = np.asarray(
+            ops.bitshuffle(fwd[b], spec=spec, inverse=True, backend=b)
+        )
+        np.testing.assert_array_equal(back, tiles)
+
+
+def test_bitshuffle_groups_bitplanes():
+    # a tile whose bytes all have ONLY bit 5 set must shuffle into exactly
+    # one all-ones bit-row (the transposed plane of bit 5) and zeros elsewhere
+    T = tile_bytes(specs.F32)
+    tiles = np.full((1, T), 1 << 5, np.uint8)
+    out = np.asarray(ops.bitshuffle(tiles, spec=specs.F32, backend="numpy"))
+    rows = out.reshape(8, T // 8)
+    assert (rows[5] == 0xFF).all()
+    mask = np.ones(8, bool)
+    mask[5] = False
+    assert (rows[mask] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# stage/destage round-trip matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "float64", "float16", "bf16"])
+@pytest.mark.parametrize("backend", ["numpy", "jax", "kernel"])
+@pytest.mark.parametrize("name", STAGES)
+def test_stage_roundtrip_matrix(dtype, backend, name):
+    if dtype == "bf16":
+        if BF16 is None:
+            pytest.skip("ml_dtypes not available")
+        x = _walk(20_000, seed=1).astype(BF16)
+    else:
+        x = _walk(20_000, seed=1, dtype=np.dtype(dtype))
+    payload = _payload(x)
+    code = stage.resolve(name)
+    staged = stage.stage_payload(payload, code, backend=backend)
+    if staged is None:      # negotiation declined: nothing to verify but legality
+        return
+    assert len(staged) < len(payload)
+    back = stage.destage_payload(staged, code, backend=backend)
+    assert back == payload
+
+
+def test_stage_roundtrip_tiny_and_empty_mid():
+    # constant array -> zero mid bytes -> negotiation always declines
+    x = np.full(1000, 7.5, np.float32)
+    payload = _payload(x)
+    for name in STAGES:
+        assert stage.stage_payload(payload, stage.resolve(name)) is None
+
+
+def test_stage_never_loses():
+    # incompressible mid bytes: every frame must stay stage-off
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(60_000).astype(np.float32)
+    payload = _payload(x)
+    for name in STAGES:
+        staged = stage.stage_payload(payload, stage.resolve(name))
+        assert staged is None or len(staged) < len(payload)
+    frame = container.build_frame(payload, 0, True, stage="deflate")
+    plain = container.build_frame(payload, 0, True)
+    assert len(frame) <= len(plain)
+
+
+def test_stage_improves_ratio_on_smooth_corpus():
+    x = _walk(300_000, seed=0)
+    codec_off = SZxCodec(backend="numpy")
+    codec_on = SZxCodec(backend="numpy", stage="deflate")
+    off = b"".join(codec_off.compress_chunked(x, Bound.rel(1e-3)))
+    on = b"".join(codec_on.compress_chunked(x, Bound.rel(1e-3)))
+    assert len(on) < len(off)
+    np.testing.assert_array_equal(
+        codec_off.decompress_chunked(on), codec_off.decompress_chunked(off)
+    )
+
+
+# ---------------------------------------------------------------------------
+# golden pin: stage-off bytes unchanged
+# ---------------------------------------------------------------------------
+
+def test_stage_off_frames_byte_identical_to_v3_layout():
+    """A frame built WITHOUT stage= must be exactly the pre-stage layout:
+    frame header struct + raw payload, no table, no flag bits."""
+    x = _walk(10_000, seed=2)
+    payload = _payload(x)
+    frame = container.build_frame(payload, 3, False)
+    want = container.FRAME_HEADER.pack(
+        container.FRAME_MAGIC, container.FRAME_VERSION, 0, 3, len(payload)
+    ) + payload
+    assert frame == want
+    last = container.build_frame(payload, 0, True)
+    assert last[5] == container.FLAG_LAST
+    assert container.stage_of_flags(last[5]) == 0
+
+    # full chunked dump: stage=None codec writes the identical stream
+    buf_a, buf_b = io.BytesIO(), io.BytesIO()
+    SZxCodec(backend="numpy").dump_chunked(x, buf_a, Bound.rel(1e-3))
+    SZxCodec(backend="numpy", stage=None).dump_chunked(x, buf_b, Bound.rel(1e-3))
+    assert buf_a.getvalue() == buf_b.getvalue()
+
+    # stage-off store footer carries no "stage" key (byte-stable footers)
+    sbuf = io.BytesIO()
+    idx = ArrayStore.save(sbuf, x.reshape(100, 100), 1e-3)
+    assert "stage" not in idx
+
+
+# ---------------------------------------------------------------------------
+# fail-loudly: unknown/unavailable stages, corrupt payloads
+# ---------------------------------------------------------------------------
+
+def _staged_frame(payload, name="deflate", last=True):
+    frame = container.build_frame(payload, 0, last, stage=name)
+    assert container.stage_of_flags(frame[5]) == stage.resolve(name)
+    return frame
+
+
+def _with_stage_bits(frame, code):
+    f = bytearray(frame)
+    f[5] = (f[5] & ~container.FLAG_STAGE_MASK) | (code << container.FLAG_STAGE_SHIFT)
+    return bytes(f)
+
+
+def test_unknown_stage_code_fails_loudly():
+    payload = _payload(_walk(5_000))
+    frame = _with_stage_bits(container.build_frame(payload, 0, True), 5)
+    with pytest.raises(ValueError, match="requires second stage"):
+        list(container.iter_frames(iter([frame])))
+    with pytest.raises(ValueError, match="requires second stage"):
+        list(container.iter_frames(io.BytesIO(frame)))
+    with pytest.raises(ValueError, match="requires second stage"):
+        SZxCodec(backend="numpy").load_chunked(io.BytesIO(frame))
+
+
+def test_zstd_stage_without_zstd_fails_loudly(monkeypatch):
+    payload = _payload(_walk(50_000))
+    if HAVE_ZSTD:
+        frame = _staged_frame(payload, "bitshuffle-zstd")
+        if not container.stage_of_flags(frame[5]):
+            pytest.skip("zstd negotiation declined on this corpus")
+    else:
+        # no zstd anywhere: synthesize the flag over a deflate-staged body --
+        # the reader must refuse BEFORE touching the (mismatched) records
+        frame = _staged_frame(payload, "deflate")
+        if not container.stage_of_flags(frame[5]):
+            pytest.skip("negotiation declined on this corpus")
+        frame = _with_stage_bits(frame, stage.BITSHUFFLE_ZSTD)
+    monkeypatch.setenv("SZX_STAGE_DISABLE_ZSTD", "1")
+    with pytest.raises(ValueError, match="zstandard package is not installed"):
+        list(container.iter_frames(io.BytesIO(frame)))
+    # and a WRITER without zstd refuses to construct the codec at all
+    with pytest.raises(ValueError, match="zstandard"):
+        SZxCodec(stage="bitshuffle-zstd")
+
+
+def test_unknown_stage_name_rejected():
+    with pytest.raises(ValueError, match="unknown second stage"):
+        SZxCodec(stage="huffman")
+    with pytest.raises(ValueError, match="unknown second stage"):
+        stage.resolve(7)
+    with pytest.raises(TypeError):
+        stage.resolve(2.5)
+
+
+def test_corrupt_second_stage_payload_rejected():
+    payload = _payload(_walk(80_000, seed=4))
+    frame = _staged_frame(payload)
+    assert container.stage_of_flags(frame[5])
+    hdr = container.FRAME_HEADER.size
+    prefix_len = container.stream_prefix_length(payload)
+
+    # flip a byte inside a compressed record body
+    bad = bytearray(frame)
+    bad[-10] ^= 0xFF
+    with pytest.raises(ValueError, match="corrupt second-stage payload"):
+        list(container.iter_frames(io.BytesIO(bytes(bad))))
+
+    # truncate the stage table
+    seg_blocks, nseg = struct.unpack_from("<HI", frame, hdr + prefix_len)
+    bad = bytearray(frame)
+    struct.pack_into("<HI", bad, hdr + prefix_len, seg_blocks, nseg + 3)
+    with pytest.raises(ValueError, match="corrupt second-stage payload"):
+        list(container.iter_frames(io.BytesIO(bytes(bad))))
+
+    # zero seg_blocks
+    bad = bytearray(frame)
+    struct.pack_into("<HI", bad, hdr + prefix_len, 0, nseg)
+    with pytest.raises(ValueError, match="corrupt second-stage payload"):
+        list(container.iter_frames(io.BytesIO(bytes(bad))))
+
+
+def test_raw_frame_with_stage_bits_rejected():
+    frame = container.build_frame(b"rawbytes", 0, True, raw=True)
+    bad = _with_stage_bits(frame, stage.DEFLATE)
+    with pytest.raises(ValueError, match="raw frame"):
+        list(container.iter_frames(iter([bad])))
+
+
+def test_raw_frames_never_staged():
+    # stage= on a raw payload is ignored (raw packs carry no mid section)
+    frame = container.build_frame(b"rawbytes", 0, True, raw=True, stage="deflate")
+    assert container.stage_of_flags(frame[5]) == 0
+    payload, flags = next(container.iter_frames(iter([frame]), with_flags=True))
+    assert payload == b"rawbytes" and flags & container.FLAG_RAW
+
+
+def test_rle_decode_rejects_bad_pairs():
+    with pytest.raises(ValueError, match="odd RLE pair"):
+        stage._rle_decode(b"\x01\x02\x03", 3)
+    with pytest.raises(ValueError, match="zero-length"):
+        stage._rle_decode(b"\x01\x00", 1)
+    with pytest.raises(ValueError, match="expands to"):
+        stage._rle_decode(b"\x01\x05", 3)
+
+
+# ---------------------------------------------------------------------------
+# chunked + store + checkpoint integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STAGES)
+def test_chunked_staged_roundtrip_and_select(name):
+    x = _walk(500_000, seed=5)
+    codec = SZxCodec(backend="numpy", stage=name, workers=2)
+    buf = io.BytesIO()
+    codec.dump_chunked(x, buf, Bound.rel(1e-3), chunk_bytes=1 << 19)
+    buf.seek(0)
+    got = codec.load_chunked(buf, n=x.size)
+    np.testing.assert_array_equal(got, SZxCodec(backend="numpy").decompress(
+        SZxCodec(backend="numpy").compress(x, Bound.rel(1e-3))
+    ))
+    # random access through the index still works on staged frames
+    buf.seek(0)
+    sel = codec.load_chunked(buf, select=[1, 3])
+    per = 1 << 17
+    np.testing.assert_array_equal(sel[:per], got[per : 2 * per])
+
+
+@pytest.mark.parametrize("name", STAGES)
+def test_store_staged_roi_reads_match(name):
+    x = _walk(1 << 18, seed=6).reshape(512, 512)
+    buf = io.BytesIO()
+    idx = ArrayStore.save(buf, x, 1e-3, stage=name)
+    assert idx.get("stage") == name
+    plain = io.BytesIO()
+    ArrayStore.save(plain, x, 1e-3)
+    ca_s = ArrayStore.open(buf)
+    ca_p = ArrayStore.open(plain)
+    assert ca_s.stage == name and ca_p.stage is None
+    for key in [np.s_[...], np.s_[7], np.s_[100:141, 3:401], np.s_[:, -1]]:
+        np.testing.assert_array_equal(ca_s[key], ca_p[key])
+    # compressed-domain queries identical too
+    assert ca_s.stats().to_dict() == ca_p.stats().to_dict()
+    assert ca_s.stats(header_only=True).to_dict() == \
+        ca_p.stats(header_only=True).to_dict()
+
+
+def test_store_sharded_staged_roundtrip(tmp_path):
+    x = _walk(1 << 16, seed=7).reshape(256, 256)
+    man_path = tmp_path / "arr.json"
+    man = ArrayStore.save_sharded(
+        man_path, x, 1e-3, nshards=2, chunk_shape=(64, 256), stage="deflate"
+    )
+    assert man.get("stage") == "deflate"
+    with ArrayStore.open(str(man_path)) as ca:
+        assert ca.stage == "deflate"
+        plain = io.BytesIO()
+        ArrayStore.save(plain, x, 1e-3)
+        with ArrayStore.open(plain) as cp:
+            np.testing.assert_array_equal(ca[10:30, 40:200], cp[10:30, 40:200])
+
+
+def test_checkpoint_staged_roundtrip(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    tree = {"w": _walk(200_000, seed=8), "b": np.arange(7, dtype=np.int32)}
+    mgr = CheckpointManager(
+        str(tmp_path), compress=True, bound=Bound.rel(1e-4), stage="deflate"
+    )
+    mgr.save(0, tree)
+    mgr_off = CheckpointManager(
+        str(tmp_path / "off"), compress=True, bound=Bound.rel(1e-4)
+    )
+    mgr_off.save(0, tree)
+    got, _ = mgr.restore(tree)
+    want, _ = mgr_off.restore(tree)
+    np.testing.assert_array_equal(got["w"], want["w"])
+    np.testing.assert_array_equal(got["b"], tree["b"])
+
+
+# ---------------------------------------------------------------------------
+# seek-spy: staged stores keep byte reads proportional to the ROI
+# ---------------------------------------------------------------------------
+
+class SpyFile:
+    def __init__(self, raw):
+        self.raw = raw
+        self.reads: list[tuple[int, int]] = []
+
+    def seek(self, *a):
+        return self.raw.seek(*a)
+
+    def tell(self):
+        return self.raw.tell()
+
+    def read(self, n=-1):
+        off = self.raw.tell()
+        data = self.raw.read(n)
+        if data:
+            self.reads.append((off, len(data)))
+        return data
+
+    def bytes_read(self) -> int:
+        return sum(ln for _, ln in self.reads)
+
+
+def _covered(reads, ranges):
+    for off, ln in reads:
+        if not any(lo <= off and off + ln <= hi for lo, hi in ranges):
+            return (off, ln)
+    return None
+
+
+def _staged_store():
+    x = _walk(1 << 20, seed=9).reshape(1024, 1024)
+    buf = io.BytesIO()
+    idx = ArrayStore.save(buf, x, Bound.rel(1e-3), stage="deflate")
+    return x, buf, idx
+
+
+def _frame_regions(buf, idx):
+    """Per chunk: (frame_off, prefix_end, table_end, seg_starts) where
+    seg_starts are absolute file offsets of each segment record."""
+    regions = []
+    raw = buf.getvalue()
+    for off, length, _n in idx["frames"]:
+        hdr = container.FRAME_HEADER.size
+        payload = raw[off + hdr : off + length]
+        flags = raw[off + 5]
+        prefix_len = container.stream_prefix_length(payload)
+        if not container.stage_of_flags(flags):
+            regions.append((off, off + hdr + prefix_len, None, None))
+            continue
+        seg_blocks, nseg = struct.unpack_from("<HI", payload, prefix_len)
+        lens = np.frombuffer(
+            payload, "<u4", nseg, prefix_len + 6
+        ).astype(np.int64)
+        table_end = off + hdr + prefix_len + 6 + 4 * nseg
+        starts = table_end + np.concatenate(([0], np.cumsum(lens)))
+        regions.append((off, off + hdr + prefix_len, table_end, starts))
+    return regions
+
+
+def test_staged_store_header_queries_read_zero_mid_bytes():
+    _x, buf, idx = _staged_store()
+    regions = _frame_regions(buf, idx)
+    assert any(r[2] is not None for r in regions), "no chunk negotiated a stage"
+    end = buf.seek(0, 2)
+    spy = SpyFile(buf)
+    ca = ArrayStore.open(spy)
+    spy.reads.clear()
+    ca.stats(header_only=True)
+    # every read lies inside some frame's metadata prefix: the stage table
+    # and the shuffled segment records are NEVER touched
+    allowed = [(off, pend) for off, pend, _t, _s in regions]
+    assert _covered(spy.reads, allowed) is None
+    assert spy.bytes_read() < 0.40 * end
+
+
+def test_staged_store_roi_reads_only_selected_segments():
+    x, buf, idx = _staged_store()
+    spy = SpyFile(buf)
+    ca = ArrayStore.open(spy)
+    spy.reads.clear()
+    roi = np.s_[100:110, :]            # ~1% of the rows
+    got = ca[roi]
+    np.testing.assert_array_equal(got.shape, x[roi].shape)
+    end = buf.seek(0, 2)
+    assert spy.bytes_read() < 0.30 * end
+
+    # reads inside the record area must cover ONLY the contiguous run of
+    # segments holding the requested block range (plus prefix + table)
+    regions = _frame_regions(buf, idx)
+    touched = {}
+    for off, ln in spy.reads:
+        for ci, (foff, pend, tend, starts) in enumerate(regions):
+            if foff <= off < (regions[ci + 1][0] if ci + 1 < len(regions)
+                              else end):
+                touched.setdefault(ci, []).append((off, ln))
+    roi_chunks = [ci for ci, reads in touched.items()
+                  if any(o >= regions[ci][1] for o, _ in reads)]
+    assert roi_chunks, "ROI decoded no chunk?"
+    for ci in roi_chunks:
+        foff, pend, tend, starts = regions[ci]
+        if tend is None:
+            continue                    # chunk declined the stage: raw path
+        rec_reads = [(o, ln) for o, ln in touched[ci] if o >= tend]
+        if not rec_reads:
+            continue
+        lo = min(o for o, _ in rec_reads)
+        hi = max(o + ln for o, ln in rec_reads)
+        # one contiguous covering run, aligned on record boundaries
+        assert lo in starts and hi in starts
+        span = hi - lo
+        total_records = int(starts[-1] - starts[0])
+        assert span < 0.25 * total_records, (span, total_records)
+
+
+def test_staged_store_full_read_roundtrip():
+    x, buf, _idx = _staged_store()
+    ca = ArrayStore.open(buf)
+    got = ca[...]
+    plain = io.BytesIO()
+    ArrayStore.save(plain, x, Bound.rel(1e-3))
+    with ArrayStore.open(plain) as cp:
+        np.testing.assert_array_equal(got, cp[...])

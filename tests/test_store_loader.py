@@ -370,3 +370,104 @@ def test_checkpoint_leaf_store_window_queryable(tmp_path):
         lv.close()
     with pytest.raises(ValueError):
         ck.leaf_store("step", 0)     # raw-pack leaf is not store-viewable
+
+
+# ---------------------------------------------------- epochs= sampling
+
+def _epoch_origins(shape, wshape, gbatch, num_ranks, epochs, seed=21):
+    """All origins drawn across every rank and step, grouped per epoch."""
+    samplers = [
+        WindowSampler(shape, wshape, gbatch, seed=seed, rank=r,
+                      num_ranks=num_ranks, epochs=epochs)
+        for r in range(num_ranks)
+    ]
+    nsteps = samplers[0].num_steps
+    per_epoch: dict[int, list[tuple]] = {}
+    nwin = samplers[0]._nwin
+    for step in range(nsteps):
+        for r, s in enumerate(samplers):
+            for i, o in enumerate(s.origins_at(step)):
+                g = step * gbatch + r * s.batch + i
+                per_epoch.setdefault(g // nwin, []).append(tuple(o))
+    return samplers[0], per_epoch
+
+
+def test_sampler_epochs_without_replacement():
+    # tiles (4, 4) -> 16 candidate windows; 2 epochs of 4 global steps
+    s, per_epoch = _epoch_origins((40, 64), (10, 16), 4, 2, 2)
+    assert s.num_steps == 8
+    want = {(i * 10, j * 16) for i in range(4) for j in range(4)}
+    for epoch, origins in per_epoch.items():
+        assert len(origins) == 16
+        assert set(origins) == want, f"epoch {epoch} is not a permutation"
+    # the two epochs use different permutations
+    assert per_epoch[0] != per_epoch[1]
+
+
+def test_sampler_epochs_uneven_batch_spans_epochs():
+    # nwin = 9, global batch 3 -> epoch boundary falls mid-run; every
+    # epoch must still be an exact permutation of the 9 tiles
+    s, per_epoch = _epoch_origins((9, 8), (3, 4), 3, 1, 3, seed=5)
+    want = {(i * 3, j * 4) for i in range(3) for j in range(2)}
+    assert s._nwin == 6
+    assert s.num_steps == (3 * 6) // 3
+    for origins in per_epoch.values():
+        assert set(origins) == want and len(origins) == 6
+
+
+def test_sampler_epochs_seek_deterministic():
+    kw = dict(seed=9, rank=1, num_ranks=2, epochs=4)
+    a = WindowSampler((64, 64), (8, 8), 8, **kw)
+    b = WindowSampler((64, 64), (8, 8), 8, **kw)
+    # out-of-order seeks (trainer restart) match in-order replay
+    steps = [17, 0, 5, 17, 3, 0]
+    for st in steps:
+        np.testing.assert_array_equal(a.origins_at(st), b.origins_at(st))
+    # and legacy with-replacement behaviour is untouched by the new kwarg
+    legacy = WindowSampler((64, 64), (8, 8), 8, seed=9, rank=1, num_ranks=2)
+    legacy2 = WindowSampler((64, 64), (8, 8), 8, seed=9, rank=1, num_ranks=2)
+    np.testing.assert_array_equal(legacy.origins_at(3), legacy2.origins_at(3))
+
+
+def test_sampler_epochs_rank_disjoint():
+    rs = [WindowSampler((64, 64), (8, 8), 16, seed=2, rank=r, num_ranks=4,
+                        epochs=1) for r in range(4)]
+    for step in range(rs[0].num_steps):
+        seen: set = set()
+        for s in rs:
+            mine = {tuple(o) for o in s.origins_at(step)}
+            assert not (seen & mine)
+            seen |= mine
+
+
+def test_sampler_epochs_bounds_and_validation():
+    s = WindowSampler((64, 64), (8, 8), 8, seed=0, epochs=2)
+    assert s.num_steps == (2 * 64) // 8
+    s.origins_at(s.num_steps - 1)
+    with pytest.raises(ValueError, match="out of range"):
+        s.origins_at(s.num_steps)
+    with pytest.raises(ValueError, match="out of range"):
+        s.origins_at(-1)
+    with pytest.raises(ValueError, match="positive int"):
+        WindowSampler((64, 64), (8, 8), 8, epochs=0)
+    with pytest.raises(ValueError, match="positive int"):
+        WindowSampler((64, 64), (8, 8), 8, epochs=True)
+    with pytest.raises(ValueError, match="candidate windows"):
+        # 2x2 tiling = 4 windows < global batch 8
+        WindowSampler((64, 64), (32, 32), 8, epochs=1)
+    with pytest.raises(ValueError, match="only defined"):
+        _ = WindowSampler((64, 64), (8, 8), 8).num_steps
+
+
+def test_loader_epochs_stops_at_num_steps():
+    x = _walk(64 * 64, seed=30).reshape(64, 64)
+    buf, _ = _store(x, 1e-3, chunk_shape=(16, 64))
+    with ArrayStore.open(buf) as ca:
+        ld = StoreLoader(ca, (8, 8), 4, seed=3, workers=2, epochs=1)
+        assert ld.sampler.num_steps == 16
+        with ld.batches() as it:
+            got = sum(1 for _ in it)
+        assert got == 16
+        # explicit steps= beyond the epoch budget is clamped, not an error
+        with ld.batches(start_step=14, steps=100) as it:
+            assert sum(1 for _ in it) == 2

@@ -21,6 +21,10 @@ both comp and decomp throughput at >=70% of stage-off (the "<30% cost"
 frontier claim), and per-frame negotiation means no stage may ever LOSE
 ratio (cr_gain >= 0.999 for every row).
 
+The ``telemetry_overhead`` summary is gated absolutely too: enabling
+``SZX_OBS`` must cost <3% on both the chunked compress and decompress
+paths.
+
 CR depends on the synthetic input length, so the two files must have been
 produced at the same ``n``; a mismatch is an error (regenerate the baseline
 with the same ``SZX_BENCH_N``).
@@ -44,7 +48,8 @@ DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_codec.json")
 THROUGHPUT_KEYS = ("comp_mbs", "decomp_mbs")
 # summary sections holding per-kind sub-dicts: excluded from the generic
 # per-kind throughput/CR comparison, gated by their own absolute checks
-SUMMARY_KEYS = frozenset({"second_stage_frontier"})
+SUMMARY_KEYS = frozenset({"second_stage_frontier", "telemetry_overhead"})
+MAX_TELEMETRY_OVERHEAD = 0.03
 
 
 def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float) -> list[str]:
@@ -105,6 +110,7 @@ def compare(baseline: dict, fresh: dict, *, max_drop: float, max_cr_drift: float
             )
     errors.extend(_check_ingest(new.get("ingest_windowed")))
     errors.extend(_check_second_stage(new.get("second_stage_frontier")))
+    errors.extend(_check_telemetry(new.get("telemetry_overhead")))
     if ("second_stage_frontier" in new
             and "second_stage_frontier" not in base):
         errors.append(
@@ -193,6 +199,28 @@ def _check_second_stage(frontier: dict | None) -> list[str]:
             "second_stage_frontier: no stage reaches >=1.5x CR at >=0.70x "
             f"stage-off throughput ({rows})"
         )
+    return errors
+
+
+def _check_telemetry(row: dict | None) -> list[str]:
+    """Absolute gate for the telemetry-overhead row: with SZX_OBS on, the
+    chunked compress AND decompress paths must stay within
+    ``MAX_TELEMETRY_OVERHEAD`` (3%) of the telemetry-off throughput.  The
+    near-zero-cost-when-disabled claim is structural (span() returns a shared
+    null object before any allocation), so only the enabled cost is gated."""
+    if not isinstance(row, dict):
+        return ["fresh results have no telemetry_overhead section"]
+    errors: list[str] = []
+    for key in ("comp_overhead", "decomp_overhead"):
+        v = row.get(key)
+        if v is None:
+            errors.append(f"telemetry_overhead.{key}: missing from fresh results")
+        elif float(v) > MAX_TELEMETRY_OVERHEAD:
+            errors.append(
+                f"telemetry_overhead.{key}: {float(v):.2%} exceeds the "
+                f"{MAX_TELEMETRY_OVERHEAD:.0%} ceiling (SZX_OBS must stay "
+                "near-free on the hot paths)"
+            )
     return errors
 
 

@@ -44,6 +44,7 @@ from typing import Iterable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.codec import SZxCodec, TreeCodec
 from repro.core.codec.plan import Bound, as_bound
 from repro.core.codec.tree import leaf_name, np_dtype_for
@@ -130,7 +131,17 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         with open(os.path.join(tmp, _STREAM), "wb") as f:
-            stream_manifest = self._tree_codec.compress_tree(host_tree, f)
+            # per-leaf encode timing lands as tree.leaf_encode spans
+            with obs.span("checkpoint.save", step=step):
+                stream_manifest = self._tree_codec.compress_tree(host_tree, f)
+        if obs.enabled():
+            obs.counter("checkpoint.saves").inc()
+            obs.counter("checkpoint.saved_raw_bytes").inc(
+                int(stream_manifest["raw_bytes"])
+            )
+            obs.counter("checkpoint.saved_bytes").inc(
+                int(stream_manifest["stored_bytes"])
+            )
         manifest = {
             "manifest_version": MANIFEST_VERSION,
             "step": step,
@@ -197,11 +208,15 @@ class CheckpointManager:
         for name in names:
             if name not in by_name:
                 raise KeyError(f"leaf {name} not in checkpoint step {manifest['step']}")
-        if manifest.get("manifest_version", 1) >= 2:
-            with open(os.path.join(d, manifest["file"]), "rb") as f:
-                arrays = self._tree_codec.decompress_tree(f, select=names)
-        else:
-            arrays = {n: self._restore_leaf_v1(d, by_name[n]) for n in names}
+        # per-leaf decode timing lands as tree.leaf_decode spans
+        with obs.span("checkpoint.restore", step=int(manifest["step"])):
+            if manifest.get("manifest_version", 1) >= 2:
+                with open(os.path.join(d, manifest["file"]), "rb") as f:
+                    arrays = self._tree_codec.decompress_tree(f, select=names)
+            else:
+                arrays = {n: self._restore_leaf_v1(d, by_name[n]) for n in names}
+        if obs.enabled():
+            obs.counter("checkpoint.restores").inc()
         out = []
         for idx, name in enumerate(names):
             arr = arrays[name]

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.codec import container, transform
 from repro.core.codec.plan import Plan
 from repro.kernels.specs import DtypeSpec
@@ -228,6 +229,11 @@ def to_stream(enc: DeviceEncoding) -> bytes:
     body, total, nnc, nmid = jax.device_get(
         (enc["body"], enc["total"], enc["nnc"], enc["nmid"])
     )
+    if obs.enabled():
+        obs.counter("device.get.calls", op="encode_stream").inc()
+        obs.counter("device.get.bytes", op="encode_stream").inc(
+            int(np.asarray(body).nbytes)
+        )
     header = container.HEADER.pack(
         container.MAGIC, container.VERSION, p.dtype.code, p.block_size, p.n,
         p.error_bound, p.nblocks, int(nnc), int(nmid),
@@ -357,6 +363,15 @@ def decode_stream(buf, *, backend: str = "auto", out=None, block_range=None):
             spec=spec, backend=backend, nb=nb, bs=bs, rb=hi - lo, rebase=False,
         )
         vals, meas = jax.device_get((vals, meas))
+    if obs.enabled():
+        obs.counter("device.put.calls", op="decode_stream").inc()
+        obs.counter("device.put.bytes", op="decode_stream").inc(
+            int(dev_body.nbytes)
+        )
+        obs.counter("device.get.calls", op="decode_stream").inc()
+        obs.counter("device.get.bytes", op="decode_stream").inc(
+            int(vals.nbytes) + int(np.asarray(meas).nbytes)
+        )
     _check_measured(meas, nnc, nmid, spec)
     flat = vals.reshape(-1)[: min(hi * bs, n) - lo * bs]
     if out is not None:
@@ -403,5 +418,14 @@ def decode_range(prefix: bytes, mid: bytes, lo: int, hi: int, *,
             spec=spec, backend=backend, nb=nb, bs=bs, rb=hi - lo, rebase=True,
         )
         vals, meas = jax.device_get((vals, meas))
+    if obs.enabled():
+        obs.counter("device.put.calls", op="decode_range").inc()
+        obs.counter("device.put.bytes", op="decode_range").inc(
+            int(dev_body.nbytes)
+        )
+        obs.counter("device.get.calls", op="decode_range").inc()
+        obs.counter("device.get.bytes", op="decode_range").inc(
+            int(vals.nbytes) + int(np.asarray(meas).nbytes)
+        )
     _check_measured(meas, nnc, nmid, spec)
     return vals.reshape(-1)

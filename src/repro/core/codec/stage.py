@@ -59,6 +59,7 @@ import zlib
 
 import numpy as np
 
+from repro import obs
 from repro.core.codec import container
 from repro.kernels.bitshuffle import tile_bytes
 
@@ -321,6 +322,9 @@ def stage_payload(payload, code: int, *, seg_blocks: int = DEFAULT_SEG_BLOCKS,
     """
     if code == NONE:
         return None
+    track = obs.enabled()
+    if track:
+        obs.counter("codec.stage.try", stage=name_of(code)).inc()
     if not 0 < seg_blocks <= 0xFFFF:
         raise ValueError(f"seg_blocks {seg_blocks} out of range [1, 65535]")
     buf = bytes(payload) if not isinstance(payload, (bytes, bytearray)) else payload
@@ -328,25 +332,41 @@ def stage_payload(payload, code: int, *, seg_blocks: int = DEFAULT_SEG_BLOCKS,
     sec = container.parse_stream_sections(buf[:prefix_len], backend="numpy")
     nb = sec.plan.nblocks
     if sec.nmid == 0 or nb == 0:
+        if track:
+            obs.counter("codec.stage.fallback", stage=name_of(code)).inc()
         return None
     mid = np.frombuffer(buf, np.uint8, sec.nmid, prefix_len)
     spec = sec.plan.dtype
     records = []
+    seg_staged = seg_raw = 0
     for lo, hi in _seg_ranges(nb, seg_blocks):
         mlo, mhi = sec.mid_range(lo, hi)
         seg = mid[mlo:mhi]
         body = _seg_encode(code, seg, _perm_for(code, sec, lo, hi), spec, backend)
         if len(body) < seg.size:
             records.append(b"\x01" + body)
+            seg_staged += 1
         else:
             records.append(b"\x00" + seg.tobytes())
+            seg_raw += 1
     nseg = len(records)
     table = _TABLE.pack(seg_blocks, nseg) + np.asarray(
         [len(r) for r in records], dtype="<u4"
     ).tobytes()
     staged_len = prefix_len + len(table) + sum(len(r) for r in records)
     if staged_len >= len(buf):
+        if track:
+            obs.counter("codec.stage.fallback", stage=name_of(code)).inc()
         return None
+    if track:
+        name = name_of(code)
+        obs.counter("codec.stage.win", stage=name).inc()
+        obs.counter("codec.stage.segments_staged", stage=name).inc(seg_staged)
+        obs.counter("codec.stage.segments_raw", stage=name).inc(seg_raw)
+        obs.counter("codec.stage.mid_bytes_in", stage=name).inc(int(sec.nmid))
+        obs.counter("codec.stage.mid_bytes_out", stage=name).inc(
+            staged_len - prefix_len
+        )
     return b"".join([buf[:prefix_len], table, *records])
 
 
@@ -456,6 +476,10 @@ def read_mid_range(f, table_offset: int, sec, code: int, lo_b: int,
     starts = np.concatenate(([0], np.cumsum(lens)))
     f.seek(rec_base + int(starts[s_lo]))
     blob = container._read_exact(f, int(starts[s_hi] - starts[s_lo]))
+    if obs.enabled():
+        obs.counter("codec.stage.roi_bytes_read", stage=name_of(code)).inc(
+            _TABLE.size + 4 * nseg + len(blob)
+        )
     spec = sec.plan.dtype
     parts = []
     pos = 0

@@ -10,6 +10,7 @@ path inherits every error-bound guarantee of the monolithic one.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
@@ -17,6 +18,7 @@ from typing import Callable, Iterable, Iterator
 
 import numpy as np
 
+from repro import obs
 from repro.core.codec import container, plan as plan_mod, transform
 from repro.core.codec.plan import DEFAULT_BLOCK_SIZE, Bound, Plan
 
@@ -37,9 +39,13 @@ def _imap_ordered(fn: Callable, items: Iterable, workers: int) -> Iterator:
         try:
             for item in items:
                 pending.append(pool.submit(fn, item))
+                if obs.enabled():
+                    obs.gauge("codec.pipeline.queue_depth").set(len(pending))
                 if len(pending) >= lookahead:
                     yield pending.popleft().result()
             while pending:
+                if obs.enabled():
+                    obs.gauge("codec.pipeline.queue_depth").set(len(pending))
                 yield pending.popleft().result()
         finally:
             while pending:
@@ -128,7 +134,13 @@ class SZxCodec:
         p, xt = plan_mod.make_plan(
             x, b, block_size=self.block_size, backend=self.backend, dtype=dtype,
         )
-        return self._compress_planned(xt, p)
+        if not obs.enabled():
+            return self._compress_planned(xt, p)
+        t0 = time.perf_counter()
+        with obs.span("codec.compress", n=int(p.n), dtype=p.dtype.name):
+            buf = self._compress_planned(xt, p)
+        obs.stream_stats.record_compress(buf, time.perf_counter() - t0)
+        return buf
 
     def _compress_planned(self, xt: np.ndarray, p: Plan) -> bytes:
         from repro.kernels import ops
@@ -155,6 +167,18 @@ class SZxCodec:
         keeps the host mirror.  With ``out`` (a flat (n,) array in the
         stream's dtype) the result is written in place and ``out`` returned.
         """
+        if not obs.enabled():
+            return self._decompress_impl(buf, out=out)
+        t0 = time.perf_counter()
+        with obs.span("codec.decompress"):
+            res = self._decompress_impl(buf, out=out)
+        obs.stream_stats.record_decompress(
+            res.nbytes, time.perf_counter() - t0
+        )
+        return res
+
+    def _decompress_impl(self, buf: bytes, *,
+                         out: np.ndarray | None = None) -> np.ndarray:
         from repro.kernels import ops
 
         if ops._resolve(self.backend) != "numpy":
@@ -187,6 +211,18 @@ class SZxCodec:
         section-level API (``repro.store``).  Device backends decode the
         range with the same one-put fused program as :meth:`decompress`.
         """
+        if not obs.enabled():
+            return self._decompress_range_impl(buf, lo_block, hi_block)
+        t0 = time.perf_counter()
+        with obs.span("codec.decompress_range", lo=lo_block, hi=hi_block):
+            res = self._decompress_range_impl(buf, lo_block, hi_block)
+        obs.stream_stats.record_decompress(
+            res.nbytes, time.perf_counter() - t0, kind="range"
+        )
+        return res
+
+    def _decompress_range_impl(self, buf: bytes, lo_block: int,
+                               hi_block: int) -> np.ndarray:
         from repro.kernels import ops
 
         if ops._resolve(self.backend) != "numpy":

@@ -26,6 +26,7 @@ from typing import Any, Iterable, Iterator
 
 import numpy as np
 
+from repro import obs
 from repro.core.codec import container, plan as plan_mod
 from repro.core.codec.plan import Bound
 from repro.core.codec.szx_codec import (
@@ -174,16 +175,18 @@ class TreeCodec:
             lo = seq
             stored = 0
             final_leaf = li == len(big_leaves) - 1
-            for payload, pl_last in _leaf_payloads(arr):
-                frame = container.build_frame(
-                    payload, seq, last=final_leaf and pl_last,
-                    stage=self.codec.stage,
-                )
-                manifest["frames"].append([written, len(frame)])
-                fileobj.write(frame)
-                written += len(frame)
-                stored += len(frame)
-                seq += 1
+            with obs.span("tree.leaf_encode", leaf=name,
+                          elements=int(arr.size)):
+                for payload, pl_last in _leaf_payloads(arr):
+                    frame = container.build_frame(
+                        payload, seq, last=final_leaf and pl_last,
+                        stage=self.codec.stage,
+                    )
+                    manifest["frames"].append([written, len(frame)])
+                    fileobj.write(frame)
+                    written += len(frame)
+                    stored += len(frame)
+                    seq += 1
             manifest["leaves"].append(
                 {
                     "name": name,
@@ -276,6 +279,12 @@ class TreeCodec:
         return idx
 
     def _restore_leaf(self, fileobj, idx: dict, meta: dict) -> np.ndarray:
+        if not obs.enabled():
+            return self._restore_leaf_impl(fileobj, idx, meta)
+        with obs.span("tree.leaf_decode", leaf=meta.get("name", "")):
+            return self._restore_leaf_impl(fileobj, idx, meta)
+
+    def _restore_leaf_impl(self, fileobj, idx: dict, meta: dict) -> np.ndarray:
         dtype = np_dtype_for(meta["dtype"])
         shape = tuple(meta["shape"])
         if meta["codec"] == "raw":

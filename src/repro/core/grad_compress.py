@@ -20,10 +20,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.core.codec import PlanesCodec
 
 DEFAULT_BLOCK = 64
+
+
+def _record_wire(op: str, x, enc, members: int = 1) -> None:
+    """Trace-time wire accounting: these collectives run inside jit/shard_map
+    tracing, so this executes ONCE per compiled program -- counters record
+    bytes-per-call of the traced shapes, not per executed step."""
+    if not obs.enabled():
+        return
+    raw = int(x.size) * jnp.dtype(x.dtype).itemsize
+    wire = sum(
+        int(enc[k].size) * jnp.dtype(enc[k].dtype).itemsize
+        for k in ("mu", "sexp", "planes")
+    )
+    obs.counter("collective.calls", op=op).inc()
+    obs.counter("collective.raw_bytes", op=op).inc(raw * members)
+    obs.counter("collective.wire_bytes", op=op).inc(wire * members)
 
 
 def _encode_leaf(g, num_planes, block, backend="jax"):
@@ -60,6 +76,7 @@ def compressed_psum_mean(grads, axis_name: str, *, num_planes: int = 1,
 
     def leaf(g):
         enc = _encode_leaf(g, num_planes, block, backend)
+        _record_wire("psum_mean", g, enc, members=n)
         dec_local = _decode_leaf(enc, g.shape, jnp.float32, block, backend)
         residual = g.astype(jnp.float32) - dec_local
         gathered = jax.lax.all_gather(enc, axis_name)     # leading axis n
@@ -86,6 +103,7 @@ def compressed_ppermute(x, axis_name: str, perm, *, num_planes: int = 1,
     ``wire_bytes_per_value`` bytes/value instead of 4.0.
     """
     enc = _encode_leaf(x, num_planes, block, backend)
+    _record_wire("ppermute", x, enc)
     moved = jax.tree.map(
         lambda a: jax.lax.ppermute(a, axis_name, perm), enc
     )
@@ -111,6 +129,7 @@ def compressed_all_to_all(x, axis_name: str, split_axis: int, concat_axis: int,
         )
     n = compat.axis_size(axis_name)
     enc = _encode_leaf(x, num_planes, block, backend)
+    _record_wire("all_to_all", x, enc)
 
     def move(a, lead):
         return jax.lax.all_to_all(

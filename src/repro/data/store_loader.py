@@ -30,11 +30,13 @@ from __future__ import annotations
 import math
 import os
 import threading
+import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro import obs
 from repro.data.pipeline import DataConfig
 from repro.store import grid as grid_mod
 
@@ -388,6 +390,15 @@ class StoreLoader:
     # ---------------------------------------------------------- serial path
     def batch_at(self, step: int, *, out: np.ndarray | None = None
                  ) -> np.ndarray:
+        if not obs.enabled():
+            return self._batch_at_impl(step, out=out)
+        with obs.span("ingest.batch", step=step):
+            res = self._batch_at_impl(step, out=out)
+        obs.counter("ingest.batches", mode="serial").inc()
+        return res
+
+    def _batch_at_impl(self, step: int, *, out: np.ndarray | None = None
+                       ) -> np.ndarray:
         if out is None:
             out = np.empty(self.batch_shape, self.dtype)
         origins = self.sampler.origins_at(step)
@@ -461,6 +472,8 @@ class PipelinedBatches:
         if self._end is not None and step >= self._end:
             return False
         ld = self._ld
+        track = obs.enabled()
+        t0 = time.perf_counter() if track else 0.0
         origins = ld.sampler.origins_at(step)
         if ld.source.granularity == "window":
             futs = [
@@ -478,6 +491,11 @@ class PipelinedBatches:
                 for cid, (lo_b, hi_b) in tasks.items()
             }
             self._pending.append((step, futs, (tasks, placements)))
+        if track:
+            obs.histogram("ingest.plan_seconds").observe(
+                time.perf_counter() - t0
+            )
+            obs.gauge("ingest.lookahead").set(len(self._pending))
         self._next_step = step + 1
         return True
 
@@ -493,9 +511,13 @@ class PipelinedBatches:
             self.close()
             raise StopIteration
         step, futs, plan = self._pending.popleft()
+        track = obs.enabled()
+        if track:
+            obs.gauge("ingest.lookahead").set(len(self._pending))
         out = np.empty(self._ld.batch_shape, self._ld.dtype) \
             if self._slots is None \
             else self._slots[step % len(self._slots)]
+        t0 = time.perf_counter() if track else 0.0
         try:
             if plan is None:
                 for wi, fut in enumerate(futs):
@@ -511,6 +533,12 @@ class PipelinedBatches:
         except BaseException:
             self.close()
             raise
+        if track:
+            obs.histogram("ingest.wait_seconds").observe(
+                time.perf_counter() - t0
+            )
+            obs.counter("ingest.batches", mode="pipelined").inc()
+            obs.counter("ingest.bytes_out").inc(int(out.nbytes))
         return out
 
     def close(self) -> None:

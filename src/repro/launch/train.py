@@ -8,11 +8,12 @@
         scheduler overlaps the collectives this module emits with compute)
 """
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SteppedBatches, StoreLM, SyntheticLM
 from repro.launch import mesh as mesh_lib
@@ -39,7 +40,22 @@ def main():
                          "quantized ROI windows (see docs/INGEST.md)")
     ap.add_argument("--data-workers", type=int, default=2,
                     help="ingest worker threads for --data-store")
+    ap.add_argument("--profile-dir", default=None,
+                    help="enable telemetry and write <dir>/trace.json "
+                         "(Chrome trace, opens in Perfetto) plus "
+                         "<dir>/metrics.prom; also starts a jax.profiler "
+                         "trace into the same directory when available")
     args = ap.parse_args()
+
+    jax_profiler = False
+    if args.profile_dir:
+        obs.enable()
+        os.makedirs(args.profile_dir, exist_ok=True)
+        try:
+            jax.profiler.start_trace(args.profile_dir)
+            jax_profiler = True
+        except Exception:
+            pass  # profiler backend unavailable (e.g. minimal CPU builds)
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -78,6 +94,18 @@ def main():
     tr = Trainer(TrainerConfig(total_steps=args.steps, checkpoint_every=25),
                  step_fn, batch_fn, ckpt)
     tr.run(state)
+
+    if args.profile_dir:
+        if jax_profiler:
+            try:
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+        obs.write_chrome_trace(os.path.join(args.profile_dir, "trace.json"))
+        with open(os.path.join(args.profile_dir, "metrics.prom"), "w") as f:
+            f.write(obs.prometheus_text())
+        print(f"telemetry written to {args.profile_dir}/trace.json")
+
     print(f"arch={args.arch} loss {tr.history[0]['loss']:.3f} -> "
           f"{tr.history[-1]['loss']:.3f} ({len(tr.history)} steps)")
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 
 
@@ -49,6 +50,24 @@ def pipeline_apply(
     def run(params, xs):
         n_micro = xs.shape[0]
         ticks = n_micro + n_stages - 1
+        if obs.enabled():
+            # trace-time accounting (scan body runs once per trace): bytes a
+            # stage shifts per tick, raw vs on-the-wire when compressed
+            mb = xs[0]
+            raw = int(mb.size) * jnp.dtype(mb.dtype).itemsize
+            wire = raw
+            if compress_activations:
+                from repro.core import grad_compress
+
+                wire = int(
+                    mb.size * grad_compress.wire_bytes_per_value(
+                        num_planes, compress_block
+                    )
+                )
+            obs.counter("pipeline.programs").inc()
+            obs.gauge("pipeline.ticks").set(ticks)
+            obs.gauge("pipeline.tick_raw_bytes").set(raw)
+            obs.gauge("pipeline.tick_wire_bytes").set(wire)
 
         def body(carry, t):
             buf, outs = carry          # buf: (1, mb, ...) current stage input

@@ -46,6 +46,7 @@ import time
 import urllib.parse
 from dataclasses import dataclass, field
 
+from repro import obs
 from repro.serve.service.cache import LRUBytesCache
 from repro.serve.service.metrics import Metrics
 from repro.serve.service.registry import (
@@ -127,8 +128,9 @@ class StoreService:
             if method not in ("GET", "HEAD"):
                 resp = _error(405, f"method {method} not allowed")
             else:
-                self.registry.charge(tenant, requests=1)
-                resp = self._route(url.path, q, headers)
+                with obs.span("serve.request", route=route):
+                    self.registry.charge(tenant, requests=1)
+                    resp = self._route(url.path, q, headers)
                 self.registry.charge(tenant, nbytes=len(resp.body))
         except _HandledError as err:
             resp = err.resp
@@ -152,7 +154,7 @@ class StoreService:
         if path in ("/v1", "/v1/"):
             return self._summary()
         if path == "/v1/metrics":
-            return self._metrics()
+            return self._metrics(headers)
         if path == "/v1/stores":
             return _json_response(200, {"stores": self.registry.names()})
         if path.startswith("/v1/stores/"):
@@ -206,9 +208,27 @@ class StoreService:
             ],
         })
 
-    def _metrics(self) -> Response:
+    def _metrics(self, headers: dict | None = None) -> Response:
+        """JSON snapshot (default, schema unchanged) or -- with
+        ``Accept: text/plain`` -- the shared registry's Prometheus text
+        exposition, which includes codec/store/cache series when telemetry
+        is enabled."""
+        cache_stats = self.cache.stats()
+        if obs.enabled():
+            for k, v in cache_stats.items():
+                if isinstance(v, (int, float)):
+                    obs.gauge("serve.cache", stat=k).set(v)
+        accept = (headers or {}).get("accept", "")
+        if "text/plain" in accept:
+            return Response(
+                200, obs.prometheus_text().encode(), [],
+                "text/plain; version=0.0.4; charset=utf-8",
+            )
         snap = self.metrics.snapshot()
-        snap["cache"] = self.cache.stats()
+        snap["cache"] = cache_stats
+        if obs.enabled():
+            # additive key: shared-registry view (codec/store/ingest series)
+            snap["obs"] = obs.REGISTRY.snapshot()
         return _json_response(200, snap)
 
     @staticmethod

@@ -4,11 +4,19 @@ Lock-guarded in-process counters plus a bounded ring of recent request
 latencies per route class; the ``/v1/metrics`` endpoint serves
 ``snapshot()``.  Percentiles are computed over the ring at snapshot time
 (the ring is small), so the hot path cost is one append under a mutex.
+
+Every observation is also mirrored into the shared :mod:`repro.obs`
+registry (``serve.*`` series) when telemetry is enabled, so the service
+shows up in the same Prometheus exposition / Chrome trace as the codec
+and store layers.  The local snapshot schema is unchanged.
 """
 from __future__ import annotations
 
+import math
 import threading
 from collections import defaultdict, deque
+
+from repro import obs
 
 
 class Metrics:
@@ -41,14 +49,26 @@ class Metrics:
                 t["requests"] += 1
                 t["bytes"] += nbytes
             self._lat[route].append(seconds)
+        if obs.enabled():
+            obs.counter("serve.requests", route=route).inc()
+            obs.counter("serve.responses", status=str(status)).inc()
+            obs.counter("serve.bytes_sent").inc(nbytes)
+            if status >= 400:
+                obs.counter("serve.errors").inc()
+            if tenant is not None:
+                obs.counter("serve.tenant_requests", tenant=tenant).inc()
+            obs.histogram("serve.request_seconds", route=route).observe(seconds)
 
     @staticmethod
     def _pct(samples: list[float], q: float) -> float:
+        """Nearest-rank (ceil) percentile: the smallest sample s such that at
+        least ``q`` of the samples are <= s.  The previous round-half-up rank
+        over-shot on small windows (p50 of [10,20,30,40] gave 30, not 20)."""
         if not samples:
             return 0.0
         samples = sorted(samples)
-        i = min(int(q * (len(samples) - 1) + 0.5), len(samples) - 1)
-        return samples[i]
+        idx = max(math.ceil(q * len(samples)), 1) - 1
+        return samples[min(idx, len(samples) - 1)]
 
     def snapshot(self) -> dict:
         with self._lock:

@@ -13,6 +13,13 @@ exact shapes --
 ETag/If-None-Match, Range over compressed bytes, shard redirects, metrics,
 quotas) is served by the same process; see :mod:`repro.serve.service.app`.
 
+Telemetry: every request -- legacy routes included -- flows through the
+shared :class:`~repro.serve.service.app.StoreService` core, which wraps each
+handler in one ``serve.request`` span and mirrors counters/latency into the
+shared :mod:`repro.obs` registry when ``SZX_OBS=1``; ``GET /v1/metrics``
+with ``Accept: text/plain`` serves the Prometheus exposition (see
+docs/OBSERVABILITY.md).
+
 ``/info`` is now answered from the registry's CURRENT revalidated handle:
 replacing the store file updates the metadata immediately, and a vanished
 file answers 410 instead of the stale startup snapshot (the old behaviour

@@ -26,6 +26,7 @@ from typing import Iterator
 
 import numpy as np
 
+from repro import obs
 from repro.core.codec import container, plan as plan_mod, transform
 from repro.core.codec.szx_codec import SZxCodec, _imap_ordered
 from repro.store import format as format_mod, grid as grid_mod, query as query_mod
@@ -454,9 +455,21 @@ class CompressedArray:
     def __getitem__(self, key) -> np.ndarray:
         self._check_open()
         roi = grid_mod.normalize_roi(key, self.shape)
+        if not obs.enabled():
+            return self._read_roi(roi)
+        with obs.span("store.read"):
+            out = self._read_roi(roi)
+        obs.counter("store.roi.reads").inc()
+        obs.counter("store.roi.bytes_out").inc(int(out.nbytes))
+        return out
+
+    def _read_roi(self, roi) -> np.ndarray:
         out = np.empty(roi.box_shape, self.dtype)
         bs = self._block_size
+        track = obs.enabled()
         for cid, local, outr in grid_mod.intersecting_chunks(self._grid, roi):
+            if track:
+                obs.counter("store.roi.chunks").inc()
             cdims = self._grid.chunk_dims(self._grid.chunk_coord(cid))
             lo_b, hi_b = grid_mod.block_range_for_box(local, cdims, bs)
             seg = self._decode_chunk_range(cid, lo_b, hi_b)
@@ -489,7 +502,11 @@ class CompressedArray:
             key = (self._cache_ns, cid, lo_b, hi_b)
             hit = self._cache.get(key)
             if hit is not None:
+                if obs.enabled():
+                    obs.counter("store.cache.hits").inc()
                 return hit
+            if obs.enabled():
+                obs.counter("store.cache.misses").inc()
             seg = np.asarray(self._decode_chunk_range_uncached(cid, lo_b, hi_b))
             seg.setflags(write=False)       # cached values are shared
             self._cache.put(key, seg, seg.nbytes)
@@ -535,6 +552,15 @@ class CompressedArray:
             else:
                 f.seek(off + container.FRAME_HEADER.size + prefix_len + mlo)
                 mid = container._read_exact(f, mhi - mlo)
+                if obs.enabled():
+                    obs.counter("store.roi.mid_bytes_read").inc(mhi - mlo)
+        if obs.enabled():
+            # staged mid reads are counted (at actual on-disk size) by
+            # stage.read_mid_range as codec.stage.roi_bytes_read
+            obs.counter("store.roi.prefix_bytes_read").inc(
+                container.FRAME_HEADER.size + prefix_len
+            )
+            obs.counter("store.chunk.decodes").inc()
         if self._device:
             from repro.core.codec import device as device_mod
 

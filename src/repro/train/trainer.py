@@ -25,6 +25,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 
 
@@ -80,9 +81,13 @@ class Trainer:
                     self.fault_hook(step)
                 batch = self.batch_fn(step)
                 t0 = time.time()
-                state, metrics = self.step_fn(state, batch)
-                jax.block_until_ready(metrics["loss"])
+                with obs.span("train.step", step=step):
+                    state, metrics = self.step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
                 dt = time.time() - t0
+                if obs.enabled():
+                    obs.counter("train.steps").inc()
+                    obs.histogram("train.step_seconds").observe(dt)
                 self._maybe_flag_straggler(step, dt)
                 self.step_times.append(dt)
                 rec = {

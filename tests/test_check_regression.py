@@ -25,6 +25,12 @@ BASE = {
                               "cr_gain": 1.53, "comp_rel": 0.90,
                               "decomp_rel": 0.92},
         },
+        "telemetry_overhead": {
+            "comp_mbs": 100.0, "decomp_mbs": 50.0,
+            "comp_mbs_obs": 99.0, "decomp_mbs_obs": 49.6,
+            "comp_overhead": 0.010, "decomp_overhead": 0.008,
+            "frames": 16,
+        },
     }
 }
 
@@ -133,6 +139,30 @@ def test_frontier_missing_stage_off_fails():
     doc = copy.deepcopy(BASE)
     del doc["chunked_dump_load"]["second_stage_frontier"]["stage-off"]
     assert any("stage-off reference" in e for e in _cmp(doc))
+
+
+def _doctor_telemetry(**kv):
+    doc = copy.deepcopy(BASE)
+    doc["chunked_dump_load"]["telemetry_overhead"].update(kv)
+    return doc
+
+
+def test_telemetry_overhead_above_ceiling_fails():
+    errs = _cmp(_doctor_telemetry(comp_overhead=0.05))
+    assert len(errs) == 1 and "3%" in errs[0] and "comp_overhead" in errs[0]
+    errs = _cmp(_doctor_telemetry(decomp_overhead=0.031))
+    assert len(errs) == 1 and "decomp_overhead" in errs[0]
+    # negative overhead (obs run measured faster: noise) passes
+    assert _cmp(_doctor_telemetry(comp_overhead=-0.01)) == []
+
+
+def test_telemetry_overhead_missing_fails():
+    doc = copy.deepcopy(BASE)
+    del doc["chunked_dump_load"]["telemetry_overhead"]
+    assert any("no telemetry_overhead" in e for e in _cmp(doc))
+    doc = copy.deepcopy(BASE)
+    del doc["chunked_dump_load"]["telemetry_overhead"]["comp_overhead"]
+    assert any("comp_overhead: missing" in e for e in _cmp(doc))
 
 
 def test_main_exit_codes(tmp_path):
